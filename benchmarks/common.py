@@ -1,0 +1,54 @@
+"""Shared benchmark helpers.
+
+Two measurement modes (this container is CPU-only; TPU is the target):
+  * ``wall_us``    — wall-clock of a jit'd callable (relative comparisons
+    between same-backend jnp implementations are meaningful on CPU);
+  * ``static_mem`` — XLA's compiled temp+output allocation for the op at
+    the *paper's exact sizes* via AOT lowering (no execution, honest even
+    for shapes that would not fit in RAM).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def wall_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    jfn = jax.jit(fn)
+    for _ in range(warmup):
+        jax.block_until_ready(jfn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(jfn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def static_mem_bytes(fn, *arg_shapes) -> dict:
+    """Compile (AOT) and report XLA's allocation sizes for the op."""
+    comp = jax.jit(fn).lower(*arg_shapes).compile()
+    m = comp.memory_analysis()
+    return {
+        "temp": m.temp_size_in_bytes,
+        "output": m.output_size_in_bytes,
+        "argument": m.argument_size_in_bytes,
+        "total_live": m.temp_size_in_bytes + m.output_size_in_bytes,
+    }
+
+
+def problem(n, d, v, dtype=jnp.float32, seed=0, ignore_frac=0.0):
+    from repro.kernels.ref import IGNORE_INDEX
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    E = (jax.random.normal(ks[0], (n, d)) * 0.7).astype(dtype)
+    C = (jax.random.normal(ks[1], (v, d)) * 0.5).astype(dtype)
+    x = jax.random.randint(ks[2], (n,), 0, v)
+    if ignore_frac:
+        x = jnp.where(jax.random.uniform(ks[3], (n,)) < ignore_frac,
+                      IGNORE_INDEX, x)
+    return E, C, x
+
+
+def row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}")

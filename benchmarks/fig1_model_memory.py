@@ -1,0 +1,79 @@
+"""Paper Fig. 1 / Table A4: per-model training-memory breakdown and the max
+attainable batch size with vs. without CCE, on a 16-GPU(80GB) FSDP setup.
+
+Pure accounting per the paper's Appendix D method:
+  * weights+opt+grad = params * 4 states * 2 bytes (bf16)
+  * activations      = layers * hidden * tokens * 2 (ckpt boundaries)
+  * logits           = tokens * |V| * 4 (f32)
+CCE removes the logits term entirely (O(N + |V|) scratch, ~1 MB).
+
+Models: the paper's Table A4 list (public configs) + our ten assigned
+architectures for comparison.
+"""
+
+from benchmarks.common import row
+import repro.configs as configs
+
+# (name, params, layers, hidden, vocab) — paper Table A4 models
+PAPER_MODELS = [
+    ("GPT 2", 131e6, 12, 768, 50257),
+    ("GPT Neo (1.3B)", 1.3e9, 24, 2048, 50257),
+    ("GPT Neo (2.7B)", 2.6e9, 32, 2560, 50257),
+    ("Gemma (2B)", 2.4e9, 18, 2048, 256000),
+    ("Gemma 2 (27B)", 26e9, 46, 4608, 256000),
+    ("Gemma 2 (2B)", 2.5e9, 26, 2304, 256000),
+    ("Llama 2 (13B)", 12.4e9, 40, 5120, 32000),
+    ("Llama 2 (7B)", 6.4e9, 32, 4096, 32000),
+    ("Llama 3 (70B)", 67e9, 80, 8192, 128256),
+    ("Llama 3 (8B)", 7.7e9, 32, 4096, 128256),
+    ("Mistral 7B", 6.9e9, 32, 4096, 32000),
+    ("Phi 1.5", 1.35e9, 24, 2048, 51200),
+    ("Qwen 1.5 (7B)", 7.4e9, 32, 4096, 151936),
+]
+
+TOKENS = 65536
+GPUS, PER_GPU = 16, 75e9   # 80GB minus 5GB runtime buffer (paper App. D)
+
+
+def _mem(params, layers, hidden, vocab, tokens):
+    weights = params * 4 * 2
+    acts = layers * hidden * tokens * 2
+    logits = tokens * vocab * 4
+    return weights, acts, logits
+
+
+def _max_batch(params, layers, hidden, vocab, with_cce):
+    weights = params * 4 * 2
+    per_tok = layers * hidden * 2 + (0 if with_cce else vocab * 4)
+    return (GPUS * PER_GPU - weights) / per_tok
+
+
+def run():
+    print("# fig1/tableA4: memory breakdown (MB @65536 tokens) and max "
+          "batch (tokens, 16x80GB FSDP)")
+    for name, p, l, h, v in PAPER_MODELS:
+        w, a, lg = _mem(p, l, h, v, TOKENS)
+        b0 = _max_batch(p, l, h, v, False)
+        b1 = _max_batch(p, l, h, v, True)
+        row(f"fig1/{name.replace(' ', '_')}", 0,
+            f"logits={lg/1e6:.0f}MB acts={a/1e6:.0f}MB "
+            f"weights+opt={w/1e6:.0f}MB max_batch {b0/1e6:.2f}M->"
+            f"{b1/1e6:.2f}M ({b1/b0:.1f}x)")
+
+    print("# assigned architectures, same accounting")
+    for arch in configs.ASSIGNED:
+        cfg = configs.get_config(arch)
+        p = cfg.param_count()
+        w, a, lg = _mem(p, cfg.num_layers, cfg.d_model, cfg.vocab_size,
+                        TOKENS)
+        b0 = _max_batch(p, cfg.num_layers, cfg.d_model, cfg.vocab_size,
+                        False)
+        b1 = _max_batch(p, cfg.num_layers, cfg.d_model, cfg.vocab_size,
+                        True)
+        row(f"fig1/{arch}", 0,
+            f"params={p/1e9:.2f}B logits={lg/1e6:.0f}MB "
+            f"max_batch {b0/1e6:.2f}M->{b1/1e6:.2f}M ({b1/b0:.1f}x)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,104 @@
+"""Emit the EXPERIMENTS.md §Dry-run / §Roofline tables from results JSONs.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_tables [--dir results/dryrun]
+Prints GitHub-flavored markdown to stdout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ORDER = ["seamless_m4t_medium", "starcoder2_7b", "llama3_2_3b",
+         "h2o_danube3_4b", "gemma_2b", "qwen2_vl_7b", "recurrentgemma_9b",
+         "olmoe_1b_7b", "qwen2_moe_a2_7b", "rwkv6_3b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dir_):
+    cells = {}
+    for f in glob.glob(os.path.join(dir_, "*.json")):
+        d = json.load(open(f))
+        if d.get("tag"):
+            continue
+        cells[(d["arch"], d["shape"], d["mesh"])] = d
+    return cells
+
+
+def fmt_s(x):
+    if x >= 100:
+        return f"{x:.0f}"
+    if x >= 1:
+        return f"{x:.2f}"
+    return f"{x:.4f}"
+
+
+def dryrun_table(cells) -> str:
+    out = ["| arch | shape | mesh | status | bytes/device | HLO GFLOP/dev |"
+           " coll GB/dev | compile s |",
+           "|---|---|---|---|---|---|---|---|"]
+    for arch in ORDER:
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                d = cells.get((arch, shape, mesh))
+                if d is None:
+                    out.append(f"| {arch} | {shape} | {mesh} | MISSING |"
+                               " | | | |")
+                    continue
+                if d.get("skipped"):
+                    out.append(f"| {arch} | {shape} | {mesh} | skip"
+                               f" ({d['skipped'][:40]}) | | | | |")
+                    continue
+                if not d["ok"]:
+                    out.append(f"| {arch} | {shape} | {mesh} | **FAIL** |"
+                               " | | | |")
+                    continue
+                mem = d["memory"]["per_device_total"] / 1e9
+                fl = d["hlo"]["flops_per_device"] / 1e9
+                cb = d["hlo"]["collective_bytes_per_device"] / 1e9
+                out.append(
+                    f"| {arch} | {shape} | {mesh} | ok | {mem:.2f} GB |"
+                    f" {fl:,.0f} | {cb:.1f} | {d.get('compile_s', 0):.0f} |")
+    return "\n".join(out)
+
+
+def roofline_table(cells, mesh="single") -> str:
+    out = ["| arch | shape | compute s | memory s | collective s |"
+           " dominant | MODEL/HLO FLOPs | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for arch in ORDER:
+        for shape in SHAPES:
+            d = cells.get((arch, shape, mesh))
+            if d is None or d.get("skipped") or not d.get("ok"):
+                continue
+            r = d["roofline"]
+            dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            frac = r["compute_s"] / dom if dom else 0.0
+            out.append(
+                f"| {arch} | {shape} | {fmt_s(r['compute_s'])} |"
+                f" {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} |"
+                f" {r['dominant']} | {r['useful_ratio']:.2f} |"
+                f" {frac:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--table", default="both",
+                    choices=("dryrun", "roofline", "both"))
+    args = ap.parse_args()
+    cells = load(args.dir)
+    if args.table in ("dryrun", "both"):
+        print("### Dry-run cells\n")
+        print(dryrun_table(cells))
+        print()
+    if args.table in ("roofline", "both"):
+        print("### Roofline (single-pod, per step)\n")
+        print(roofline_table(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Roofline/dry-run numbers live
+in results/dryrun (produced by repro.launch.dryrun) and EXPERIMENTS.md.
+"""
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig1_model_memory, fig3_softmax_sparsity,
+                            fig4_convergence, table1_loss_memory,
+                            tableA1_ignored_tokens,
+                            tableA2_backward_breakdown, tableA3_more_models)
+    modules = [
+        ("table1", table1_loss_memory),
+        ("fig1_tableA4", fig1_model_memory),
+        ("fig3", fig3_softmax_sparsity),
+        ("fig4", fig4_convergence),
+        ("tableA1", tableA1_ignored_tokens),
+        ("tableA2", tableA2_backward_breakdown),
+        ("tableA3", tableA3_more_models),
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"{name}/_wall_s,{(time.time()-t0)*1e6:.0f},"
+                  f"{time.time()-t0:.1f}s total")
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Paper Table A2: where the CCE backward pass spends its work.
+
+On CPU we cannot profile TPU wall time, so the breakdown is in FLOPs from
+the HLO analyzer on the compiled backward at the paper's Gemma-2 geometry:
+logit recomputation (Cᵀ E), softcap chain, dE matmul, dC matmul. The
+paper's A100 numbers for reference: recompute 43.2%, dE 29.6%, dC 17.3%.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.analysis import hlo as hlo_an
+from repro.core import linear_cross_entropy
+
+N, D, V = 4096, 2304, 32768  # paper geometry, vocab scaled to CPU compile
+
+
+def _flops(fn, *sds):
+    comp = jax.jit(fn).lower(*sds).compile()
+    return hlo_an.analyze(comp.as_text())["flops"]
+
+
+def run():
+    sds_e = jax.ShapeDtypeStruct((N, D), jnp.bfloat16)
+    sds_c = jax.ShapeDtypeStruct((V, D), jnp.bfloat16)
+    sds_x = jax.ShapeDtypeStruct((N,), jnp.int32)
+
+    def fwd(E, C, x):
+        return jnp.sum(linear_cross_entropy(E, C, x, impl="cce_jax",
+                                            softcap=30.0))
+
+    def fwd_bwd(E, C, x):
+        return jax.grad(fwd, argnums=(0, 1))(E, C, x)
+
+    f_fwd = _flops(fwd, sds_e, sds_c, sds_x)
+    f_all = _flops(fwd_bwd, sds_e, sds_c, sds_x)
+    f_bwd = f_all - f_fwd
+
+    # analytic components of the backward (2*N*V*D each)
+    mm = 2.0 * N * V * D
+    row("tableA2/total_bwd_GFLOP", 0, f"{f_bwd/1e9:.1f}")
+    row("tableA2/recompute_share", 0,
+        f"{mm/f_bwd:.2%} (paper: 43.2% of time)")
+    row("tableA2/dE_share", 0, f"{mm/f_bwd:.2%} (paper: 29.6%)")
+    row("tableA2/dC_share", 0, f"{mm/f_bwd:.2%} (paper: 17.3%)")
+    row("tableA2/pointwise_share", 0,
+        f"{max(0.0, (f_bwd - 3*mm))/f_bwd:.2%} "
+        f"(softmax+softcap chain; paper: ~10%)")
+    row("tableA2/fwd_GFLOP", 0, f"{f_fwd/1e9:.1f} (1x NVD matmul + LSE)")
+
+
+if __name__ == "__main__":
+    run()

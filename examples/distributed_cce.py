@@ -1,0 +1,85 @@
+"""Distributed CCE: vocab-parallel + sequence-parallel loss on a real mesh.
+
+The beyond-paper extension (DESIGN.md §3): the classifier C is sharded over
+the ``model`` mesh axis and tokens over the ``data`` axis; the global
+(lse, pick) combine costs two O(N) psums — no O(N·|V|) logits and no
+all-gather of C. This example builds a small host mesh (8 CPU devices via
+XLA_FLAGS, set BEFORE jax import), checks the sharded loss and gradients
+against the single-device dense oracle, and prints the collective schedule
+actually lowered.
+
+Run:  PYTHONPATH=src python examples/distributed_cce.py
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax                                                  # noqa: E402
+import jax.numpy as jnp                                     # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core.cce import linear_cross_entropy            # noqa: E402
+from repro.core.vocab_parallel import (                    # noqa: E402
+    vocab_parallel_cross_entropy)
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"on {jax.default_backend()}")
+
+    N, D, V = 256, 128, 2048            # V/4 = 512 rows per model shard
+    key = jax.random.PRNGKey(0)
+    k_e, k_c, k_x = jax.random.split(key, 3)
+    E = jax.random.normal(k_e, (N, D), jnp.float32) * 0.05
+    C = jax.random.normal(k_c, (V, D), jnp.float32) * 0.05
+    x = jax.random.randint(k_x, (N,), 0, V)
+
+    # place the operands the way the production train step does:
+    #   E, x  sequence-sharded over data;  C vocab-sharded over model
+    E_s = jax.device_put(E, NamedSharding(mesh, P("data", None)))
+    C_s = jax.device_put(C, NamedSharding(mesh, P("model", None)))
+    x_s = jax.device_put(x, NamedSharding(mesh, P("data")))
+
+    @jax.jit
+    def dist_loss(E, C, x):
+        nll = vocab_parallel_cross_entropy(
+            E, C, x, mesh=mesh, vocab_axis="model", token_axes=("data",),
+            impl="cce_jax", reduction="none")
+        return jnp.mean(nll)
+
+    loss_dist = dist_loss(E_s, C_s, x_s)
+    loss_ref = jnp.mean(linear_cross_entropy(E, C, x, impl="dense"))
+    print(f"\nvocab-parallel CCE loss : {float(loss_dist):.6f}")
+    print(f"single-device dense ref : {float(loss_ref):.6f}")
+    assert abs(float(loss_dist) - float(loss_ref)) < 1e-4
+
+    # gradients flow through the two psums + local custom VJP
+    g_dist = jax.jit(jax.grad(dist_loss, argnums=(0, 1)))(E_s, C_s, x_s)
+    g_ref = jax.grad(
+        lambda E, C: jnp.mean(linear_cross_entropy(E, C, x, impl="dense")),
+        argnums=(0, 1))(E, C)
+    for name, a, b in (("dE", g_dist[0], g_ref[0]),
+                       ("dC", g_dist[1], g_ref[1])):
+        err = float(jnp.abs(jnp.asarray(a) - b).max())
+        print(f"max|{name}_dist - {name}_ref| = {err:.2e}")
+        assert err < 1e-4, name
+
+    # show the wire cost: the only collectives are O(N) psums (+ the psums
+    # of the shard_map transpose for dE/dC replication) — never O(N*V).
+    hlo = jax.jit(dist_loss).lower(E_s, C_s, x_s).compile().as_text()
+    colls = {}
+    for line in hlo.splitlines():
+        ls = line.strip()
+        for kind in ("all-reduce", "all-gather", "reduce-scatter",
+                     "all-to-all"):
+            if ls.startswith(kind) or f" {kind}(" in ls:
+                colls[kind] = colls.get(kind, 0) + 1
+    print(f"\ncollectives in the lowered forward: {colls or 'none'}")
+    print(f"O(N*V) logit matrix would be {N*V*4/1e6:.1f} MB; "
+          f"wire traffic here is O(N) = {N*4/1e3:.1f} KB per psum")
+    print("\ndistributed_cce OK")
+
+
+if __name__ == "__main__":
+    main()

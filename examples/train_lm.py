@@ -1,0 +1,75 @@
+"""End-to-end driver: train a ~100M-param LLaMA-family LM with the CCE head.
+
+This is deliverable (b)'s "train ~100M model for a few hundred steps" —
+the full production stack on whatever devices are present: config system,
+synthetic data pipeline, AdamW + warmup-cosine, gradient-accumulation
+microbatching, checkpoint/restart (kill -TERM mid-run and re-launch to see
+it resume), and the CCE loss head.
+
+Run:     PYTHONPATH=src python examples/train_lm.py
+Faster:  PYTHONPATH=src python examples/train_lm.py --steps 50 --tiny
+Resume:  re-run the same command; it restores from --ckpt automatically.
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.train import Trainer
+
+
+def model_100m(vocab_size: int = 32000) -> ModelConfig:
+    """~100M params: 12L, d=768, 12H — GPT-2-small-shaped LLaMA blocks."""
+    return ModelConfig(
+        name="llama-100m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=12, d_ff=2048, vocab_size=vocab_size,
+        mlp_activation="silu", dtype="float32", loss_impl="cce_jax",
+        remat="block")
+
+
+def model_tiny() -> ModelConfig:
+    return dataclasses.replace(
+        model_100m(vocab_size=2048), num_layers=4, d_model=256, num_heads=4,
+        num_kv_heads=4, d_ff=512, name="llama-tiny")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--microbatch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm_ckpt")
+    ap.add_argument("--tiny", action="store_true",
+                    help="4L/256d model for a fast smoke run")
+    args = ap.parse_args()
+
+    cfg = model_tiny() if args.tiny else model_100m()
+    print(f"model: {cfg.name}  params ~= {cfg.param_count()/1e6:.0f}M  "
+          f"|V|={cfg.vocab_size}  loss_impl={cfg.loss_impl}")
+
+    tcfg = TrainConfig(
+        learning_rate=args.lr, total_steps=args.steps,
+        warmup_steps=max(args.steps // 10, 1),
+        microbatch=args.microbatch, checkpoint_every=50,
+        grad_clip=1.0, seed=0)
+
+    tr = Trainer(cfg, tcfg, checkpoint_dir=args.ckpt, seq_len=args.seq,
+                 global_batch=args.batch)
+    tr.install_signal_handlers()   # SIGTERM => checkpoint-and-exit
+    if tr.step:
+        print(f"resumed from checkpoint at step {tr.step}")
+
+    history = tr.run(num_steps=args.steps, log_every=10)
+    tr.save()
+
+    if len(history) >= 2:
+        first, last = history[0]["loss"], history[-1]["loss"]
+        print(f"\nloss: {first:.4f} -> {last:.4f} over "
+              f"{history[-1]['step']} steps "
+              f"({'improved' if last < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

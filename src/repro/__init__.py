@@ -1,0 +1,7 @@
+"""repro — Cut Cross-Entropy (CCE) training/inference framework in JAX.
+
+Reproduction + extension of "Cut Your Losses in Large-Vocabulary Language
+Models" (Wijmans et al., ICLR 2025) targeting multi-pod TPU meshes.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,3 @@
+"""Roofline analysis: HLO text analyzer + 3-term roofline model."""
+from repro.analysis import hlo  # noqa: F401
+from repro.analysis.roofline import roofline, model_flops  # noqa: F401

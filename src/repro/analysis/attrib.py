@@ -1,0 +1,138 @@
+"""Per-instruction attribution of the roofline terms from lowered HLO.
+
+The dry-run gives one number per term; hillclimbing needs to know *which*
+instructions dominate. This walks the post-SPMD module exactly like
+``analysis.hlo.analyze`` (same trip-count multipliers, same slice-accurate
+traffic charging) but keeps per-instruction rows so the top-k offenders can
+be printed per term.
+
+Usage (CLI):
+  PYTHONPATH=src python -m repro.analysis.attrib --arch rwkv6_3b \
+      --shape train_4k [--mesh single] [--top 20] [--hlo-out FILE]
+"""
+
+from __future__ import annotations
+
+import argparse
+from collections import defaultdict
+
+from repro.analysis import hlo as H
+
+
+def attribute(hlo_text: str) -> dict:
+    """Returns {"traffic": [(bytes, comp, instr, opcode, type)...],
+    "flops": [...], "collective": [...]} sorted descending, with while-loop
+    trip multipliers applied."""
+    comps, types = H.parse_computations(hlo_text)
+    called = set()
+    for instrs in comps.values():
+        for ins in instrs:
+            for _, c in H._called_comps(ins):
+                called.add(c)
+    entries = [c for c in comps if c not in called]
+    entry = max(entries, key=lambda c: len(comps[c])) if entries \
+        else next(iter(comps))
+
+    traffic, flops, coll = [], [], []
+
+    def visit(name: str, mult: float, in_fusion: bool = False):
+        symtab = types.get(name, {})
+        by_name = {i.name: i for i in comps.get(name, [])}
+        for ins in comps.get(name, []):
+            op = ins.opcode
+            if op == "dot":
+                flops.append((H._dot_flops(ins, symtab) * mult, name,
+                              ins.name, op, ins.out_type[:70]))
+            if op == "while":
+                body = cond = None
+                for kind, c in H._called_comps(ins):
+                    if kind == "body":
+                        body = c
+                    elif kind == "condition":
+                        cond = c
+                trips = H._trip_count(comps.get(cond, [])) if cond else 1
+                for sub in (body, cond):
+                    if sub:
+                        visit(sub, mult * trips, in_fusion)
+                continue
+            fused_comp = None
+            if op in ("fusion", "call", "conditional", "async-start"):
+                for kind, c in H._called_comps(ins):
+                    if op == "fusion" and kind == "call":
+                        fused_comp = c
+                    # traffic is charged at the fusion boundary only (same
+                    # rule as hlo.analyze): everything inside lives in
+                    # registers/VMEM
+                    visit(c, mult, in_fusion or op == "fusion")
+            base = next((c for c in H.COLLECTIVES
+                         if op == c or op.startswith(c + "-")
+                         or op == c + "-start"), None)
+            if base is not None and not op.endswith("-done"):
+                b = sum(H._shape_bytes(t)
+                        for t in H._operand_types(ins, symtab))
+                coll.append((b * mult, name, ins.name, base,
+                             ins.out_type[:70]))
+            if op not in H._SKIP_TRAFFIC and not in_fusion:
+                if op == "fusion" and fused_comp is not None:
+                    b = H._fusion_traffic(ins, fused_comp, comps, types,
+                                          symtab, by_name)
+                else:
+                    b = H._plain_instr_traffic(ins, symtab, by_name,
+                                               comps, types)
+                traffic.append((b * mult, name, ins.name, op,
+                                ins.out_type[:70]))
+
+    visit(entry, 1.0)
+    for rows in (traffic, flops, coll):
+        rows.sort(key=lambda r: -r[0])
+    return {"traffic": traffic, "flops": flops, "collective": coll}
+
+
+def summarize(hlo_text: str, top: int = 20) -> str:
+    rows = attribute(hlo_text)
+    out = []
+    for term, unit, scale in (("traffic", "GB", 1e9), ("flops", "GFLOP", 1e9),
+                              ("collective", "GB", 1e9)):
+        data = rows[term]
+        total = sum(r[0] for r in data)
+        out.append(f"== {term}: total {total/scale:.1f} {unit} ==")
+        for val, comp, name, op, typ in data[:top]:
+            out.append(f"  {val/scale:12.2f} {unit[:2]} {op:26s} "
+                       f"{comp[:28]:30s} {name[:34]:36s} {typ}")
+        # aggregate by opcode for a quick shape-of-the-problem view
+        agg = defaultdict(float)
+        for val, _, _, op, _ in data:
+            agg[op] += val
+        tops = sorted(agg.items(), key=lambda kv: -kv[1])[:8]
+        out.append("  by opcode: " + ", ".join(
+            f"{op}={v/scale:.1f}" for op, v in tops))
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--hlo-out", default=None,
+                    help="also dump the compiled HLO text here")
+    ap.add_argument("--hlo-in", default=None,
+                    help="analyze a saved HLO text instead of compiling")
+    args = ap.parse_args()
+
+    if args.hlo_in:
+        text = open(args.hlo_in).read()
+    else:
+        # late import: sets XLA_FLAGS for 512 host devices
+        from repro.launch import dryrun as D
+        text = D.lower_cell_hlo(args.arch, args.shape,
+                                multi_pod=args.mesh == "multi")
+        if args.hlo_out:
+            with open(args.hlo_out, "w") as f:
+                f.write(text)
+    print(summarize(text, args.top))
+
+
+if __name__ == "__main__":
+    main()

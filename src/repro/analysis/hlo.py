@@ -1,0 +1,472 @@
+"""Post-optimization HLO text analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body exactly once, so
+for scan-over-layers models it under-reports FLOPs/bytes by ~num_layers x.
+This analyzer parses ``compiled.as_text()`` and computes, with *while-loop
+trip-count multipliers* applied recursively:
+
+  * dot FLOPs (2 * prod(output dims) * prod(contraction dims)),
+  * an HBM-traffic estimate (operand+output bytes at fusion/instruction
+    granularity, skipping pure layout ops),
+  * per-collective wire bytes (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), reported both raw (sum of operand
+    sizes, as the assignment specifies) and ring-algorithm adjusted.
+
+Shapes in post-SPMD HLO are per-device, so all numbers are per-device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f16": 2, "bf16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "u1": 0.125, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+# header params may contain nested tuples, so match greedily to "-> ... {"
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-_]+)\s*\(.*->.*\{\s*$")
+# the output type may be a tuple containing /*index=N*/ comments (with '='),
+# so match it lazily up to the first " opcode(" boundary.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-_]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops that are pure layout/bookkeeping — excluded from the traffic estimate
+_SKIP_TRAFFIC = {
+    "parameter", "constant", "iota", "bitcast", "tuple", "get-tuple-element",
+    "reshape", "after-all", "partition-id", "replica-id",
+}
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems(type_str: str):
+    """First array shape in the string -> (dtype, [dims])."""
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_type: str
+    opcode: str
+    rest: str        # operand list + attributes (may span the line only)
+    is_root: bool = False
+
+
+def parse_computations(hlo_text: str) -> tuple:
+    """(comps, types): comps name -> list[Instr]; types name -> dict of
+    instruction-name -> output type string (the per-computation symbol
+    table — scheduled HLO prints operands without inline types)."""
+    comps: dict[str, list[Instr]] = {}
+    types: dict[str, dict] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        if current is None:
+            m = _COMP_START.match(line.strip())
+            if m and "{" in line:
+                current = m.group(1)
+                comps[current] = []
+                types[current] = {}
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), m.group(3), m.group(4),
+                        is_root=line.lstrip().startswith("ROOT"))
+            comps[current].append(ins)
+            types[current][ins.name] = ins.out_type
+    return comps, types
+
+
+def _called_comps(instr: Instr) -> list:
+    """computation names referenced via calls=/body=/condition=/branches=
+    or to_apply= (we exclude to_apply: reduce/sort lambdas are tiny)."""
+    out = []
+    for attr in ("body", "condition"):
+        m = re.search(attr + r"=%?([\w\.\-_]+)", instr.rest)
+        if m:
+            out.append((attr, m.group(1)))
+    m = re.search(r"(?:calls|fusion)=%?([\w\.\-_]+)", instr.rest)
+    if m:
+        out.append(("call", m.group(1)))
+    m = re.search(r"branches=\{([^}]*)\}", instr.rest)
+    if m:
+        for b in m.group(1).split(","):
+            out.append(("branch", b.strip().lstrip("%")))
+    return out
+
+
+_NAME_RE = re.compile(r"%([\w\.\-_]+)")
+
+_ATTR_KEYWORDS = (
+    "), metadata=", "), backend_config=", "), calls=", "), to_apply=",
+    "), body=", "), condition=", "), dimensions=", "), replica_groups=",
+    "), channel_id=", "), sharding=", "), source_target_pairs=",
+    "), slice=", "), kind=", "), lhs_contracting_dims=", "), custom_call",
+    "), branches=", "), index=")
+
+
+def _operand_segment(instr: Instr) -> str:
+    """The operand-list part of the instruction text (before attributes)."""
+    text = instr.rest
+    cut = len(text)
+    for kw in _ATTR_KEYWORDS:
+        i = text.find(kw)
+        if 0 <= i < cut:
+            cut = i + 1  # keep the ")"
+    return text[:cut]
+
+
+def _operand_names(instr: Instr) -> list:
+    return _NAME_RE.findall(_operand_segment(instr))
+
+
+def _operand_types(instr: Instr, symtab: dict) -> list:
+    """Output-type strings of this instruction's operands."""
+    return [symtab[n] for n in _operand_names(instr) if n in symtab]
+
+
+def _dot_flops(instr: Instr, symtab: dict) -> float:
+    _, out_dims = _shape_elems(instr.out_type)
+    ops = _operand_types(instr, symtab)
+    if not ops:
+        return 0.0
+    _, lhs_dims = _shape_elems(ops[0])
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+    contract = 1
+    if m and m.group(1):
+        for i in m.group(1).split(","):
+            contract *= lhs_dims[int(i)]
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    return 2.0 * out_elems * contract
+
+
+# ---------------------------------------------------------------------------
+# Slice-accurate HBM traffic charging.
+#
+# XLA buffer-aliases ``dynamic-update-slice`` in place inside while loops
+# (lax.scan carry/stacking), and a fused ``dynamic-slice`` reads only the
+# sliced region. Charging such instructions at full-buffer size inflates the
+# traffic of scan-heavy models by the trip count (~100x for a 64-chunk
+# recurrence): a 672 MB stacked buffer written via a 10.5 MB DUS per trip
+# must be charged 10.5 MB, not 672 MB.
+#
+# Dtype-cast normalization: the CPU backend has no native bf16 FMA, so it
+# rewrites every bf16 dot/scatter as convert(bf16->f32) + f32 op (+ convert
+# back), materializing f32 copies of every large tensor. On the TPU target
+# none of that traffic exists — the MXU consumes bf16 directly and pure
+# casts always fuse into their producer/consumer. The traffic model
+# therefore charges standalone ``convert``s (and cast-only fusions) zero
+# and resolves operands through cast chains to their *narrow-side* bytes.
+# ---------------------------------------------------------------------------
+
+_PARAM_IDX_RE = re.compile(r"^\s*(\d+)\s*\)")
+
+_CAST_CHAIN_OPS = ("convert", "bitcast", "reshape", "copy")
+
+
+def _is_cast_only_fusion(finstrs: list) -> bool:
+    return all(i.opcode in _CAST_CHAIN_OPS or i.opcode in
+               ("parameter", "constant", "tuple")
+               for i in finstrs)
+
+
+def _effective_bytes(name: str, by_name: dict, symtab: dict,
+                     comps: dict, types: dict, depth: int = 0) -> float:
+    """Bytes a consumer actually moves for operand ``name``: dtype-cast
+    chains are resolved to the narrowest tensor along the chain (what the
+    TPU fusion boundary would read)."""
+    t = symtab.get(name)
+    if t is None:
+        return 0.0
+    b = _shape_bytes(t)
+    if depth > 6:
+        return b
+    ins = by_name.get(name)
+    if ins is None:
+        return b
+    if ins.opcode == "convert":
+        ops = _operand_names(ins)
+        if ops:
+            return min(b, _effective_bytes(ops[0], by_name, symtab, comps,
+                                           types, depth + 1))
+    if ins.opcode == "fusion":
+        for kind, c in _called_comps(ins):
+            if kind == "call" and _is_cast_only_fusion(comps.get(c, [])):
+                inner = [
+                    _effective_bytes(opn, by_name, symtab, comps, types,
+                                     depth + 1)
+                    for opn in _operand_names(ins) if opn in symtab]
+                if inner:
+                    return min(b, min(inner))
+    return b
+
+
+def _root_write_bytes(comp_instrs: list, ftypes: dict) -> float | None:
+    """Bytes actually *written* by a fused computation's root, following
+    bitcast/reshape chains and resolving DUS roots to their update size.
+    None => unknown (charge full output)."""
+    by_name = {i.name: i for i in comp_instrs}
+    root = next((i for i in comp_instrs if i.is_root), None)
+    if root is None:
+        return None
+
+    def written(ins, depth=0) -> float | None:
+        if depth > 8:
+            return None
+        if ins.opcode in ("bitcast", "reshape", "copy"):
+            ops = _operand_names(ins)
+            if ops and ops[0] in by_name:
+                return written(by_name[ops[0]], depth + 1)
+            return None
+        if ins.opcode == "dynamic-update-slice":
+            ops = _operand_names(ins)
+            if len(ops) >= 2 and ops[1] in ftypes:
+                return _shape_bytes(ftypes[ops[1]])
+            return None
+        if ins.opcode == "tuple":
+            total = 0.0
+            for opn in _operand_names(ins):
+                if opn in by_name:
+                    w = written(by_name[opn], depth + 1)
+                    total += (w if w is not None
+                              else _shape_bytes(ftypes.get(opn, "")))
+                else:
+                    total += _shape_bytes(ftypes.get(opn, ""))
+            return total
+        return None  # ordinary root: full output charge
+
+    return written(root)
+
+
+def _fusion_traffic(instr: Instr, fused: str, comps: dict, types: dict,
+                    symtab: dict, by_name: dict | None = None) -> float:
+    """Charged HBM bytes for one fusion boundary (reads + writes)."""
+    full_out = _shape_bytes(instr.out_type)
+    op_names = _operand_names(instr)
+    op_bytes = [_shape_bytes(symtab[n]) for n in op_names if n in symtab]
+    finstrs = comps.get(fused)
+    if not finstrs:
+        return full_out + sum(op_bytes)
+    if _is_cast_only_fusion(finstrs):
+        return 0.0          # pure dtype/layout cast: fused away on TPU
+    by_name = by_name or {}
+    ftypes = types.get(fused, {})
+
+    # map fusion operands (positional) to parameter names inside
+    params_by_idx: dict[int, str] = {}
+    for ins in finstrs:
+        if ins.opcode == "parameter":
+            m = _PARAM_IDX_RE.match(ins.rest)
+            if m:
+                params_by_idx[int(m.group(1))] = ins.name
+    # consumers of each parameter: (instr, operand position)
+    consumers: dict[str, list] = {}
+    for ins in finstrs:
+        if ins.opcode == "parameter":
+            continue
+        for pos, opn in enumerate(_operand_names(ins)):
+            if opn in ftypes:
+                consumers.setdefault(opn, []).append((ins, pos))
+
+    reads = 0.0
+    for pos, name in enumerate(op_names):
+        if name not in symtab:
+            continue
+        full = _effective_bytes(name, by_name, symtab, comps, types)
+        pname = params_by_idx.get(pos)
+        cons = consumers.get(pname, []) if pname else []
+        if cons and all(i.opcode == "dynamic-slice" for i, _ in cons):
+            # only sliced regions are read
+            charged = sum(_shape_bytes(i.out_type) for i, _ in cons)
+            reads += min(charged, full)
+        elif cons and all(i.opcode == "dynamic-update-slice" and p == 0
+                          for i, p in cons):
+            # in-place accumulator: region outside the update is untouched
+            reads += 0.0
+        else:
+            reads += full
+    writes = _root_write_bytes(finstrs, ftypes)
+    if writes is None:
+        writes = full_out
+    return reads + min(writes, full_out)
+
+
+def _plain_instr_traffic(instr: Instr, symtab: dict, by_name: dict,
+                         comps: dict, types: dict) -> float:
+    """Charged bytes for a non-fusion instruction."""
+    out_b = _shape_bytes(instr.out_type)
+    if instr.opcode == "convert":
+        return 0.0                             # fused away on the TPU target
+    if instr.opcode == "dynamic-slice":
+        return 2.0 * out_b                     # read slice + write slice
+    if instr.opcode == "dynamic-update-slice":
+        ops = _operand_names(instr)
+        upd = (_shape_bytes(symtab[ops[1]])
+               if len(ops) >= 2 and ops[1] in symtab else out_b)
+        return 2.0 * upd                       # read update + write region
+    return out_b + sum(
+        _effective_bytes(n, by_name, symtab, comps, types)
+        for n in _operand_names(instr) if n in symtab)
+
+
+def _trip_count(cond_instrs: list) -> int:
+    """Heuristic scan trip count: the largest integer constant compared in
+    the loop condition (lax.scan lowers to `lt(i, N)`)."""
+    best = 1
+    for ins in cond_instrs:
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", "constant(" + ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def analyze(hlo_text: str, entry: str | None = None) -> dict:
+    """Whole-module analysis with while-loop multipliers.
+
+    Returns dict(flops, traffic_bytes, collective_bytes,
+                 collective_wire_bytes, collectives={op: bytes},
+                 collective_counts={op: n}).
+    """
+    comps, types = parse_computations(hlo_text)
+    if not comps:
+        return {"flops": 0, "traffic_bytes": 0, "collective_bytes": 0,
+                "collective_wire_bytes": 0, "collectives": {},
+                "collective_counts": {}}
+    if entry is None:
+        # entry computation: the one never called by others, largest
+        called = set()
+        for instrs in comps.values():
+            for ins in instrs:
+                for _, c in _called_comps(ins):
+                    called.add(c)
+        entries = [c for c in comps if c not in called]
+        entry = max(entries, key=lambda c: len(comps[c])) if entries \
+            else next(iter(comps))
+
+    memo: dict[str, dict] = {}
+
+    def group_size(instr):
+        m = re.search(r"replica_groups=\{\{([^}]*)\}", instr.rest)
+        if m:
+            return max(1, m.group(1).count(",") + 1)
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]", instr.rest)
+        if m:
+            return max(1, int(m.group(2)))
+        return 2
+
+    def visit(name: str) -> dict:
+        if name in memo:
+            return memo[name]
+        acc = {"flops": 0.0, "traffic_bytes": 0.0, "collective_bytes": 0.0,
+               "collective_wire_bytes": 0.0,
+               "collectives": defaultdict(float),
+               "collective_counts": defaultdict(float)}
+        memo[name] = acc  # guard vs accidental cycles
+        symtab = types.get(name, {})
+        by_name = {i.name: i for i in comps.get(name, [])}
+        for ins in comps.get(name, []):
+            op = ins.opcode
+            if op == "dot":
+                acc["flops"] += _dot_flops(ins, symtab)
+            if op == "while":
+                body = cond = None
+                for kind, c in _called_comps(ins):
+                    if kind == "body":
+                        body = c
+                    elif kind == "condition":
+                        cond = c
+                trips = _trip_count(comps.get(cond, [])) if cond else 1
+                for sub in (body, cond):
+                    if sub:
+                        child = visit(sub)
+                        for k in ("flops", "traffic_bytes",
+                                  "collective_bytes",
+                                  "collective_wire_bytes"):
+                            acc[k] += trips * child[k]
+                        for cname, v in child["collectives"].items():
+                            acc["collectives"][cname] += trips * v
+                        for cname, v in child["collective_counts"].items():
+                            acc["collective_counts"][cname] += trips * v
+                continue
+            fused_comp = None
+            if op in ("fusion", "call", "conditional", "async-start"):
+                # fusions/calls contribute their inner FLOPs and collectives,
+                # but NOT inner traffic: everything inside a fusion lives in
+                # registers — the HBM boundary is the fusion instruction
+                # itself (its operands/outputs, charged slice-accurately
+                # below via _fusion_traffic).
+                for kind, c in _called_comps(ins):
+                    child = visit(c)
+                    if op == "fusion" and kind == "call":
+                        fused_comp = c
+                    for k in ("flops", "collective_bytes",
+                              "collective_wire_bytes"):
+                        acc[k] += child[k]
+                    if op in ("conditional",):
+                        acc["traffic_bytes"] += child["traffic_bytes"]
+                    for cname, v in child["collectives"].items():
+                        acc["collectives"][cname] += v
+                    for cname, v in child["collective_counts"].items():
+                        acc["collective_counts"][cname] += v
+            base = next((c for c in COLLECTIVES
+                         if op == c or op.startswith(c + "-")
+                         or op == c + "-start"), None)
+            if base is not None and not op.endswith("-done"):
+                opb = sum(_shape_bytes(t)
+                          for t in _operand_types(ins, symtab))
+                acc["collective_bytes"] += opb
+                acc["collectives"][base] += opb
+                acc["collective_counts"][base] += 1
+                g = group_size(ins)
+                ring = {(  # per-device wire bytes, ring algorithms
+                    "all-gather"): opb * (g - 1),
+                    "all-reduce": 2.0 * opb * (g - 1) / g,
+                    "reduce-scatter": opb * (g - 1) / g,
+                    "all-to-all": opb * (g - 1) / g,
+                    "collective-permute": opb,
+                }[base]
+                acc["collective_wire_bytes"] += ring
+            if op not in _SKIP_TRAFFIC:
+                if op == "fusion" and fused_comp is not None:
+                    acc["traffic_bytes"] += _fusion_traffic(
+                        ins, fused_comp, comps, types, symtab, by_name)
+                else:
+                    acc["traffic_bytes"] += _plain_instr_traffic(
+                        ins, symtab, by_name, comps, types)
+        acc["collectives"] = dict(acc["collectives"])
+        acc["collective_counts"] = dict(acc["collective_counts"])
+        return acc
+
+    out = visit(entry)
+    out["entry"] = entry
+    return out

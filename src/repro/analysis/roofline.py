@@ -1,0 +1,75 @@
+"""Three-term roofline model from the compiled dry-run artifact.
+
+Per (arch x shape x mesh) cell:
+    compute term    = HLO_FLOPs   / (chips * 197e12 bf16 FLOP/s)
+    memory term     = HLO_bytes   / (chips * 819e9  B/s HBM)
+    collective term = coll_bytes  / (chips * 50e9   B/s per ICI link)
+
+HLO_FLOPs / HLO_bytes / coll_bytes come from the HLO text analyzer
+(analysis/hlo.py) with while-loop trip multipliers, evaluated on the
+post-SPMD per-device module and multiplied back by chip count for the
+global figures. MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) gives the
+"useful compute" ratio that exposes remat/dispatch waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# TPU v5e-class chip constants (assignment).
+PEAK_FLOPS_BF16 = 197e12     # per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6 * params_active * tokens (train includes backward; decode 2*N*D)."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                   else 1)
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    # forward-only (prefill counts the full sequence)
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+    return 2.0 * n_active * tokens
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float
+    per_device_bytes: float | None = None
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline(per_device: dict, chips: int, cfg: ModelConfig,
+             shape: ShapeConfig, memory_stats=None) -> Roofline:
+    """per_device: output of analysis.hlo.analyze (per-device numbers)."""
+    t_comp = per_device["flops"] / PEAK_FLOPS_BF16
+    t_mem = per_device["traffic_bytes"] / HBM_BW
+    t_coll = per_device["collective_bytes"] / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_total = per_device["flops"] * chips
+    per_dev_bytes = None
+    if memory_stats is not None:
+        per_dev_bytes = (memory_stats.argument_size_in_bytes
+                         + memory_stats.output_size_in_bytes
+                         + memory_stats.temp_size_in_bytes
+                         - memory_stats.alias_size_in_bytes)
+    return Roofline(
+        compute_s=t_comp, memory_s=t_mem, collective_s=t_coll,
+        dominant=dominant, model_flops=mf, hlo_flops=hlo_total,
+        useful_ratio=mf / hlo_total if hlo_total else 0.0,
+        per_device_bytes=per_dev_bytes)

@@ -1,0 +1,162 @@
+"""Config dataclasses: model architecture, input shapes, mesh, training.
+
+Every assigned architecture is a ``ModelConfig`` in ``repro/configs/<id>.py``
+registered under its ``--arch`` id. Shapes are the four assigned input-shape
+cells; meshes are the production single-/multi-pod meshes (launch/mesh.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int            # per-expert FFN hidden size
+    num_shared_experts: int = 0  # qwen2-moe: always-active shared experts
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.01  # load-balance loss weight
+    dispatch: str = "gather"     # "gather" (sort/scatter) | "einsum" (one-hot)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """RG-LRU (recurrentgemma) / RWKV-6 temporal-mixer hyper-params."""
+    kind: str                    # "rglru" | "rwkv6"
+    chunk_len: int = 64          # chunked-recurrence length (rwkv6)
+    conv_width: int = 4          # temporal conv (rglru recurrent block)
+    lru_width: Optional[int] = None  # rglru recurrence width (default d_model)
+    head_dim: int = 64           # rwkv6 head size
+    decay_lora: int = 64         # rwkv6 data-dependent decay LoRA rank
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None      # default d_model // num_heads
+    # layer pattern: mixer kinds cycled over layers.
+    #   "attn"   full causal self-attention
+    #   "swa"    sliding-window attention (window = sliding_window)
+    #   "rglru"  RG-LRU recurrent block (recurrentgemma)
+    #   "rwkv6"  RWKV-6 linear-attention mixer
+    layer_pattern: tuple = ("attn",)
+    sliding_window: Optional[int] = None
+    mlp_activation: str = "silu"        # silu | geglu | gelu
+    tie_embeddings: bool = False
+    logit_softcap: Optional[float] = None
+    attn_softcap: Optional[float] = None
+    rope_theta: float = 10000.0
+    rope_sections: Optional[tuple] = None  # qwen2-vl M-RoPE (t, h, w) split
+    norm_eps: float = 1e-6
+    embed_scale: bool = False           # gemma-style sqrt(d) embed scaling
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    encoder_layers: int = 0             # >0 => encoder-decoder (seamless)
+    input_mode: str = "tokens"          # tokens | embeds (vlm/audio stubs)
+    dtype: str = "bfloat16"
+    loss_impl: str = "cce_jax"          # repro.core impl for the head
+    remat: str = "block"                # none | block (checkpoint each group)
+    # Megatron-style vocab padding: embed/head rows are padded to a multiple
+    # of this so the classifier shards evenly over any TP degree dividing it
+    # (and stays MXU-aligned). Labels never reference padded rows; training
+    # pushes their probability down exactly as in Megatron-LM.
+    vocab_pad_multiple: int = 512
+    # Gradient-accumulation microbatch (rows of the global batch per
+    # accumulation step) for the production train step. Per-step roofline
+    # totals are unchanged; peak activation transients shrink ~linearly —
+    # set for archs whose full-batch train step exceeds the 16 GB/chip HBM.
+    train_microbatch: Optional[int] = None
+
+    @property
+    def padded_vocab_size(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def pattern_for(self, num_layers: int) -> tuple:
+        p = self.layer_pattern
+        return tuple(p[i % len(p)] for i in range(num_layers))
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks + head)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.resolved_head_dim
+        qkv = d * hd * self.num_heads + 2 * d * hd * self.num_kv_heads
+        att = qkv + self.num_heads * hd * d
+        mlp_mult = 3 if self.mlp_activation in ("silu", "geglu") else 2
+        if self.moe is not None:
+            moe = self.moe
+            mlp = (moe.num_experts * mlp_mult * d * moe.d_ff_expert
+                   + d * moe.num_experts)
+            if moe.num_shared_experts:
+                mlp += mlp_mult * d * moe.d_ff_expert * moe.num_shared_experts
+        else:
+            mlp = mlp_mult * d * ff
+        per_layer = {"attn": att + mlp, "swa": att + mlp,
+                     "rglru": 3 * d * d + mlp, "rwkv6": 4 * d * d + mlp}
+        total = sum(per_layer[k] for k in self.pattern_for(self.num_layers))
+        if self.is_encdec:
+            total += self.encoder_layers * (att + mlp) + self.num_layers * att
+        total += v * d * (1 if self.tie_embeddings else 2)
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed top-k + shared)."""
+        if self.moe is None:
+            return self.param_count()
+        moe = self.moe
+        mlp_mult = 3 if self.mlp_activation in ("silu", "geglu") else 2
+        inactive = ((moe.num_experts - moe.top_k)
+                    * mlp_mult * self.d_model * moe.d_ff_expert
+                    * self.num_layers)
+        return self.param_count() - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str                   # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    grad_clip: float = 1.0
+    microbatch: Optional[int] = None    # grad-accumulation microbatch size
+    checkpoint_every: int = 200
+    keep_checkpoints: int = 3
+    seed: int = 0
+    grad_allreduce_dtype: Optional[str] = None  # e.g. "bfloat16" compression

@@ -1,0 +1,34 @@
+"""gemma2-2b — the paper's flagship benchmark model (Table 1): 26L, d=2304,
+8H (GQA kv=4), head_dim 256, ff=9216, |V|=256128, logit softcap 30
+[arXiv:2408.00118]. Not one of the 40 assigned cells; used by the paper
+benchmarks (benchmarks/table1_loss_memory.py uses N=8192, D=2304,
+|V|=256000 to match the paper exactly)."""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-2b",
+    family="dense",
+    num_layers=26,
+    d_model=2304,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab_size=256128,
+    layer_pattern=("attn", "swa"),
+    sliding_window=4096,
+    mlp_activation="geglu",
+    tie_embeddings=True,
+    embed_scale=True,
+    logit_softcap=30.0,
+    attn_softcap=50.0,
+)
+
+
+def reduced():
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=256, vocab_size=512, sliding_window=32)

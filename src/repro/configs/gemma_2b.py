@@ -1,0 +1,33 @@
+"""gemma-2b [dense]: 18L, d=2048, 8H (MQA kv=1), ff=16384, |V|=256000 —
+GeGLU, head_dim=256 [arXiv:2403.08295; hf]. Tied embeddings + sqrt(d)
+embed scaling (gemma family)."""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-2b",
+    family="dense",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=256000,
+    layer_pattern=("attn",),
+    mlp_activation="geglu",
+    tie_embeddings=True,
+    embed_scale=True,
+    rope_theta=10000.0,
+    # remat="save_dots" was tried and REFUTED for this memory-bound cell
+    # (§Perf gemma G2): compute -13% but the dominant memory term +16%
+    # and per-device bytes 9.0 -> 20.4 GB (over the 16 GB HBM budget).
+)
+
+
+def reduced():
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=1,
+        head_dim=16, d_ff=256, vocab_size=512)

@@ -1,0 +1,32 @@
+"""h2o-danube-3-4b [dense]: 24L, d=3840, 32H (GQA kv=8), ff=10240,
+|V|=32000 — llama+mistral mix with sliding-window attention
+[arXiv:2401.16818; unverified]. Window 4096 (mistral-style).
+
+SWA gives this arch a bounded decode cache, so long_500k runs (ring
+buffer), despite being otherwise a dense transformer.
+"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b",
+    family="dense",
+    num_layers=24,
+    d_model=3840,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=10240,
+    vocab_size=32000,
+    layer_pattern=("swa",),
+    sliding_window=4096,
+    mlp_activation="silu",
+    rope_theta=10000.0,
+)
+
+
+def reduced():
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=160, vocab_size=512, sliding_window=32)

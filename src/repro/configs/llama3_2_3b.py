@@ -1,0 +1,27 @@
+"""llama3.2-3b [dense]: 28L, d=3072, 24H (GQA kv=8), ff=8192, |V|=128256
+[hf:meta-llama/Llama-3.2-1B; unverified]."""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-3b",
+    family="dense",
+    num_layers=28,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=128256,
+    layer_pattern=("attn",),
+    mlp_activation="silu",
+    rope_theta=5e5,
+    tie_embeddings=True,
+)
+
+
+def reduced():
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=160, vocab_size=512)

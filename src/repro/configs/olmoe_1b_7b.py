@@ -1,0 +1,30 @@
+"""olmoe-1b-7b [moe]: 16L, d=2048, 16H (kv=16), expert ff=1024, |V|=50304,
+MoE 64 experts top-8 [arXiv:2409.02060; hf]."""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1024,
+    vocab_size=50304,
+    layer_pattern=("attn",),
+    mlp_activation="silu",
+    rope_theta=10000.0,
+    moe=MoEConfig(num_experts=64, top_k=8, d_ff_expert=1024),
+    # full-batch train step exceeds 16 GB/chip; 4-step grad accumulation
+    train_microbatch=64,
+)
+
+
+def reduced():
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=96, vocab_size=512,
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=96))

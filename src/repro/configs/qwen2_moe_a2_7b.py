@@ -1,0 +1,33 @@
+"""qwen2-moe-a2.7b [moe]: 24L, d=2048, 16H (kv=16), expert ff=1408,
+|V|=151936 — 4 shared + 60 routed experts top-4
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]."""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=151936,
+    layer_pattern=("attn",),
+    mlp_activation="silu",
+    rope_theta=1e6,
+    moe=MoEConfig(num_experts=60, top_k=4, d_ff_expert=1408,
+                  num_shared_experts=4),
+    # full-batch train step exceeds 16 GB/chip; 4-step grad accumulation
+    train_microbatch=64,
+)
+
+
+def reduced():
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=96, vocab_size=512,
+        moe=MoEConfig(num_experts=6, top_k=2, d_ff_expert=96,
+                      num_shared_experts=2))

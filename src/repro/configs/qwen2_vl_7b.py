@@ -1,0 +1,34 @@
+"""qwen2-vl-7b [vlm]: 28L, d=3584, 28H (GQA kv=4), ff=18944, |V|=152064 —
+M-RoPE, dynamic resolution [arXiv:2409.12191; hf].
+
+Backbone only per the assignment: the vision frontend is a STUB —
+``input_specs`` provides precomputed patch/text embeddings plus the three
+M-RoPE position streams (t, h, w). head_dim=128, sections (16, 24, 24)
+half-dims.
+"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152064,
+    layer_pattern=("attn",),
+    mlp_activation="silu",
+    rope_theta=1e6,
+    rope_sections=(16, 24, 24),
+    input_mode="embeds",
+)
+
+
+def reduced():
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=160, vocab_size=512, rope_sections=(4, 2, 2))

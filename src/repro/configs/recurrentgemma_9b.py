@@ -1,0 +1,38 @@
+"""recurrentgemma-9b [hybrid]: 38L, d=4096, 16H (MQA kv=1), ff=12288,
+|V|=256000 — RG-LRU + local attention, 2 recurrent : 1 attention
+[arXiv:2402.19427; unverified]. Local attention window 2048.
+
+38 = 12 x (rglru, rglru, swa) + 2 rglru tail layers. O(1) recurrent state
+and a window-bounded attention cache => long_500k decode runs.
+"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256000,
+    layer_pattern=("rglru", "rglru", "swa"),
+    sliding_window=2048,
+    mlp_activation="geglu",
+    tie_embeddings=True,
+    embed_scale=True,
+    ssm=SSMConfig(kind="rglru", conv_width=4),
+    # full-batch train step exceeds 16 GB/chip; 4-step grad accumulation
+    train_microbatch=64,
+)
+
+
+def reduced():
+    return dataclasses.replace(
+        CONFIG, num_layers=6, d_model=64, num_heads=4, num_kv_heads=1,
+        head_dim=16, d_ff=128, vocab_size=512, sliding_window=32,
+        ssm=SSMConfig(kind="rglru", conv_width=4, lru_width=None))

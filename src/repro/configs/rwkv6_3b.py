@@ -1,0 +1,31 @@
+"""rwkv6-3b [ssm] "Finch": 32L, d=2560, attention-free, ff=8960, |V|=65536
+— data-dependent per-channel decay [arXiv:2404.05892; hf].
+
+head_dim 64 (40 heads). O(1) state => long_500k decode runs. The head is a
+standard linear classifier, so CCE applies verbatim (DESIGN.md §6).
+"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    num_layers=32,
+    d_model=2560,
+    num_heads=40,          # informational: rwkv6 heads = d_model / head_dim
+    num_kv_heads=40,
+    d_ff=8960,
+    vocab_size=65536,
+    layer_pattern=("rwkv6",),
+    mlp_activation="silu",  # unused by rwkv6 channel mix
+    ssm=SSMConfig(kind="rwkv6", head_dim=64, chunk_len=128, decay_lora=64),
+)
+
+
+def reduced():
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=512,
+        ssm=SSMConfig(kind="rwkv6", head_dim=16, chunk_len=16, decay_lora=8))

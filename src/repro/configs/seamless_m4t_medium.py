@@ -1,0 +1,32 @@
+"""seamless-m4t-medium [audio]: enc-dec, 12+12L, d=1024, 16H (kv=16),
+ff=4096, |V|=256206 [arXiv:2308.11596; hf].
+
+The speech frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings for the encoder; the decoder is a text LM whose
+256k-vocab head is the biggest CCE win per parameter in the pool.
+"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    num_layers=12,
+    encoder_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256206,
+    layer_pattern=("attn",),
+    mlp_activation="gelu",
+    rope_theta=10000.0,
+)
+
+
+def reduced():
+    return dataclasses.replace(
+        CONFIG, num_layers=2, encoder_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=4, d_ff=128, vocab_size=512)

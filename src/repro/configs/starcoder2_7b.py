@@ -1,0 +1,28 @@
+"""starcoder2-7b [dense]: 32L, d=4608, 36H (GQA kv=4), ff=18432,
+|V|=49152 — GQA + RoPE [arXiv:2402.19173; hf]."""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b",
+    family="dense",
+    num_layers=32,
+    d_model=4608,
+    num_heads=36,
+    num_kv_heads=4,
+    d_ff=18432,
+    vocab_size=49152,
+    layer_pattern=("attn",),
+    mlp_activation="gelu",
+    rope_theta=1e5,
+    # full-batch train step exceeds 16 GB/chip; 2-step grad accumulation
+    train_microbatch=128,
+)
+
+
+def reduced():
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=72, num_heads=6, num_kv_heads=2,
+        d_ff=144, vocab_size=512)

@@ -1,0 +1,13 @@
+"""Core CCE API — the paper's primary contribution as composable JAX ops."""
+
+from repro.core.cce import (  # noqa: F401
+    CCEConfig,
+    IMPLS,
+    linear_cross_entropy,
+    lse_and_pick,
+)
+from repro.core.vocab_parallel import (  # noqa: F401
+    vocab_parallel_cross_entropy,
+    vocab_parallel_lse_pick,
+)
+from repro.kernels.ref import IGNORE_INDEX  # noqa: F401

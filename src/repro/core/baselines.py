@@ -1,0 +1,134 @@
+"""Baseline cross-entropy implementations the paper compares against.
+
+Each mirrors a row of the paper's Table 1:
+
+  * :func:`dense_linear_cross_entropy`   — "Baseline"/"torch.compile": the
+    full (N, V) logit matrix is materialized (XLA fuses what it can, like
+    torch.compile does; the O(N·V) residual for the backward remains).
+  * :func:`chunked_linear_cross_entropy` — "Torch Tune (8 chunks)": the token
+    axis is split into K chunks; each chunk computes a dense loss under
+    ``jax.checkpoint`` so the backward recomputes that chunk's logits.
+    Peak live logits: O(N/K · V).
+  * :func:`liger_style_cross_entropy`    — "Liger Kernels": chunked, and the
+    gradient is computed *during the forward* and stored (O(N·D + V·D)),
+    so the op must own the loss reduction (mean over valid tokens) — the
+    composability restriction the paper points out. Returns a scalar.
+
+All support softcap and IGNORE_INDEX semantics, matching the CCE paths.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import IGNORE_INDEX, apply_softcap
+
+
+def _dense_nll(E, C, x, softcap):
+    logits = jax.lax.dot_general(E, C, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    logits = apply_softcap(logits, softcap)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    safe_x = jnp.where(x == IGNORE_INDEX, 0, x)
+    pick = jnp.take_along_axis(logits, safe_x[:, None], axis=-1)[:, 0]
+    return jnp.where(x == IGNORE_INDEX, 0.0, lse - pick)
+
+
+def dense_linear_cross_entropy(E, C, x, softcap=None):
+    """Per-token NLL, materializing the full logit matrix (paper Baseline)."""
+    orig_shape = x.shape
+    if E.ndim == 3:
+        E, x = E.reshape(-1, E.shape[-1]), x.reshape(-1)
+    return _dense_nll(E, C, x, softcap).reshape(orig_shape)
+
+
+def chunked_linear_cross_entropy(E, C, x, softcap=None, num_chunks: int = 8):
+    """Per-token NLL in N-chunks (Torch-Tune style). ``jax.checkpoint`` keeps
+    the backward's live logits to one chunk as well."""
+    orig_shape = x.shape
+    if E.ndim == 3:
+        E, x = E.reshape(-1, E.shape[-1]), x.reshape(-1)
+    n = E.shape[0]
+    chunk = -(-n // num_chunks)
+    pad = chunk * num_chunks - n
+    if pad:
+        E = jnp.concatenate([E, jnp.zeros((pad, E.shape[1]), E.dtype)])
+        x = jnp.concatenate([x, jnp.full((pad,), IGNORE_INDEX, x.dtype)])
+    Eb = E.reshape(num_chunks, chunk, -1)
+    xb = x.reshape(num_chunks, chunk)
+
+    f = jax.checkpoint(functools.partial(_dense_nll, softcap=softcap))
+    nll = jax.lax.map(lambda args: f(args[0], C, args[1]), (Eb, xb))
+    return nll.reshape(-1)[:n].reshape(orig_shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _liger_loss(E, C, x, softcap, num_chunks):
+    loss, _, _ = _liger_fwd_impl(E, C, x, softcap, num_chunks)
+    return loss
+
+
+def _liger_fwd_impl(E, C, x, softcap, num_chunks):
+    """Computes mean NLL and its (unscaled) grads chunk-by-chunk in one pass."""
+    n, d = E.shape
+    chunk = -(-n // num_chunks)
+    pad = chunk * num_chunks - n
+    if pad:
+        E = jnp.concatenate([E, jnp.zeros((pad, d), E.dtype)])
+        x = jnp.concatenate([x, jnp.full((pad,), IGNORE_INDEX, x.dtype)])
+    Eb = E.reshape(num_chunks, chunk, d)
+    xb = x.reshape(num_chunks, chunk)
+    n_valid = jnp.maximum(jnp.sum(x != IGNORE_INDEX), 1).astype(jnp.float32)
+
+    def step(dc_acc, inp):
+        e, xc = inp
+        logits = jax.lax.dot_general(e, C, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        if softcap is not None:
+            t = jnp.tanh(logits / softcap)
+            logits_c, dcap = softcap * t, 1.0 - t * t
+        else:
+            logits_c, dcap = logits, None
+        lse = jax.scipy.special.logsumexp(logits_c, axis=-1)
+        safe = jnp.where(xc == IGNORE_INDEX, 0, xc)
+        pick = jnp.take_along_axis(logits_c, safe[:, None], -1)[:, 0]
+        valid = (xc != IGNORE_INDEX)
+        nll_sum = jnp.sum(jnp.where(valid, lse - pick, 0.0))
+        # grad of mean-NLL w.r.t. raw logits for this chunk
+        s = jnp.exp(logits_c - lse[:, None])
+        onehot = jax.nn.one_hot(safe, C.shape[0], dtype=jnp.float32)
+        dz = (s - onehot) * (valid[:, None] / n_valid)
+        if dcap is not None:
+            dz = dz * dcap
+        de = jnp.dot(dz, C.astype(jnp.float32)).astype(e.dtype)
+        dc_acc = dc_acc + jax.lax.dot_general(
+            dz, e, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        return dc_acc, (nll_sum, de)
+
+    dc, (nll_sums, de) = jax.lax.scan(
+        step, jnp.zeros(C.shape, jnp.float32), (Eb, xb))
+    loss = jnp.sum(nll_sums) / n_valid
+    return loss, de.reshape(-1, d)[:n], dc.astype(C.dtype)
+
+
+def _liger_vjp_fwd(E, C, x, softcap, num_chunks):
+    loss, de, dc = _liger_fwd_impl(E, C, x, softcap, num_chunks)
+    return loss, (de, dc)
+
+
+def _liger_vjp_bwd(softcap, num_chunks, residuals, g):
+    de, dc = residuals
+    return g * de, g * dc, None
+
+
+_liger_loss.defvjp(_liger_vjp_fwd, _liger_vjp_bwd)
+
+
+def liger_style_cross_entropy(E, C, x, softcap=None, num_chunks: int = 8):
+    """Scalar mean NLL; gradient precomputed during forward (Liger style)."""
+    if E.ndim == 3:
+        E, x = E.reshape(-1, E.shape[-1]), x.reshape(-1)
+    return _liger_loss(E, C, x, softcap, num_chunks)

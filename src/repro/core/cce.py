@@ -1,0 +1,97 @@
+"""Public CCE API — the paper's contribution as one composable JAX op.
+
+``linear_cross_entropy(E, C, x, impl=...)`` dispatches between:
+
+  impl="cce"        Pallas TPU kernels (interpret-mode on CPU) — the paper's
+                    method, with gradient filtering + vocab sorting.
+  impl="cce_jax"    portable lax.scan twin (same algorithm & memory class;
+                    what the distributed train step lowers on the dry-run).
+  impl="dense"      paper "Baseline"/"torch.compile" row (O(N·V) memory).
+  impl="chunked"    paper "Torch Tune" row (O(N/K·V)).
+  impl="liger"      paper "Liger Kernels" row (scalar loss, fwd-computed
+                    grads, O(N·D + V·D)).
+  impl="auto"       "cce" on TPU, "cce_jax" elsewhere.
+
+Reductions: "none" (per-token), "mean" (over non-ignored tokens), "sum".
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import baselines, cce_jax
+from repro.kernels import ops as kernel_ops
+from repro.kernels.ref import IGNORE_INDEX
+
+CCEConfig = kernel_ops.CCEConfig
+
+IMPLS = ("auto", "cce", "cce_jax", "dense", "chunked", "liger")
+
+
+def _reduce(nll, x, reduction):
+    if reduction == "none":
+        return nll
+    valid = (x != IGNORE_INDEX)
+    total = jnp.sum(nll)
+    if reduction == "sum":
+        return total
+    if reduction == "mean":
+        return total / jnp.maximum(jnp.sum(valid), 1).astype(nll.dtype)
+    raise ValueError(f"unknown reduction {reduction!r}")
+
+
+def linear_cross_entropy(E, C, x, *, impl: str = "auto",
+                         softcap: float | None = None,
+                         reduction: str = "none",
+                         cfg: CCEConfig | None = None,
+                         num_chunks: int = 8):
+    """Cross-entropy of next-token logits ``softcap(E @ C.T)`` vs labels x.
+
+    E: (..., D) embeddings, C: (V, D) classifier, x: (...) int labels
+    (IGNORE_INDEX positions get loss 0 / no gradient).
+    """
+    if impl == "auto":
+        import jax
+        impl = "cce" if jax.default_backend() == "tpu" else "cce_jax"
+    if cfg is None:
+        cfg = CCEConfig(softcap=softcap)
+    elif softcap is not None and cfg.softcap != softcap:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, softcap=softcap)
+
+    if impl == "cce":
+        nll = kernel_ops.linear_cross_entropy_pallas(E, C, x, cfg)
+    elif impl == "cce_jax":
+        nll = cce_jax.linear_cross_entropy_jax(E, C, x, cfg)
+    elif impl == "dense":
+        nll = baselines.dense_linear_cross_entropy(E, C, x, cfg.softcap)
+    elif impl == "chunked":
+        nll = baselines.chunked_linear_cross_entropy(
+            E, C, x, cfg.softcap, num_chunks)
+    elif impl == "liger":
+        if reduction != "mean":
+            raise ValueError("liger-style computes grads in the forward and "
+                             "therefore owns the reduction; use "
+                             "reduction='mean' (the paper's composability "
+                             "caveat, §2).")
+        return baselines.liger_style_cross_entropy(
+            E, C, x, cfg.softcap, num_chunks)
+    else:
+        raise ValueError(f"unknown impl {impl!r}; one of {IMPLS}")
+    return _reduce(nll, x, reduction)
+
+
+def lse_and_pick(E, C, x, *, impl: str = "auto",
+                 cfg: CCEConfig | None = None):
+    """The (lse, pick) primitive — building block for custom losses and the
+    vocab-parallel combination."""
+    if impl == "auto":
+        import jax
+        impl = "cce" if jax.default_backend() == "tpu" else "cce_jax"
+    cfg = cfg or CCEConfig()
+    if impl == "cce":
+        return kernel_ops.lse_and_pick_pallas(E, C, x, cfg)
+    if impl == "cce_jax":
+        return cce_jax.lse_and_pick_jax(E, C, x, cfg)
+    raise ValueError(f"lse_and_pick supports impl in ('cce','cce_jax'), "
+                     f"got {impl!r}")

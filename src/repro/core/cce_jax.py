@@ -1,0 +1,164 @@
+"""Pure-JAX blockwise CCE — the *analyzable twin* of the Pallas kernels.
+
+Identical algorithm (online log-sum-exp over vocabulary blocks, logit tiles
+recomputed in the backward pass, O(N + |V|·D) live memory), expressed with
+``lax.scan`` so that:
+
+  * it runs on any backend (the CPU dry-run lowers it; Pallas custom calls
+    would be opaque to ``cost_analysis`` and would not lower on CPU), and
+  * XLA's cost/memory analysis of the *production train step* sees the true
+    FLOP/byte structure of CCE — this is the implementation the distributed
+    train step uses under ``pjit``/``shard_map`` on the dry-run, and its HLO
+    is what §Roofline measures.
+
+Differences vs. the kernels (documented in DESIGN.md §2): no gradient
+filtering / vocabulary sorting — block skipping is real control flow, which
+is exactly what Pallas provides on hardware; the scan twin is therefore the
+*unfiltered upper bound* on CCE cost (conservative for the roofline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import CCEConfig
+from repro.kernels.ref import IGNORE_INDEX, apply_softcap
+
+DEFAULT_BLOCK_V = 2048
+
+
+def _pick_block_v(vocab: int, target: int) -> int:
+    """Largest block size <= target that divides vocab (so the block view
+    is a free reshape, not a padded copy of the whole classifier); fall
+    back to the padded path only when no divisor >= target/2 exists."""
+    if vocab <= target:
+        return vocab
+    for b in range(min(target, vocab), max(target // 2, 127), -1):
+        if vocab % b == 0:
+            return b
+    return target
+
+
+def _blocks(C, block_v):
+    """View (or pad) C as (nV, block_v, D) vocabulary blocks."""
+    vocab, d = C.shape
+    nv = -(-vocab // block_v)
+    pad = nv * block_v - vocab
+    if pad:
+        C = jnp.concatenate([C, jnp.zeros((pad, d), C.dtype)], axis=0)
+    return C.reshape(nv, block_v, d), nv
+
+
+def _tile(E, cb, softcap):
+    """One (N, block_v) logit tile in f32."""
+    a = jax.lax.dot_general(E, cb, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    return apply_softcap(a, softcap)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _lse_pick_scan(cfg: CCEConfig, E, C, x):
+    return _fwd_impl(cfg, E, C, x)
+
+
+def _fwd_impl(cfg, E, C, x):
+    n_tokens, _ = E.shape
+    vocab = C.shape[0]
+    block_v = cfg.block_v or _pick_block_v(vocab, DEFAULT_BLOCK_V)
+    cb_all, nv = _blocks(C, block_v)
+    vstarts = jnp.arange(nv, dtype=jnp.int32) * block_v
+    labels = x[:, None]
+
+    def step(carry, inp):
+        m, s, p = carry
+        cb, vstart = inp
+        a = _tile(E, cb, cfg.softcap)
+        col = vstart + jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+        a = jnp.where(col < vocab, a, -jnp.inf)
+        p = p + jnp.sum(jnp.where(col == labels, a, 0.0), axis=1)
+        bmax = jnp.max(a, axis=1)
+        m_new = jnp.maximum(m, bmax)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        s = s * jnp.exp(m - m_safe) + jnp.sum(jnp.exp(a - m_safe[:, None]), 1)
+        return (m_new, s, p), None
+
+    # Derive the init from E *and* C so it inherits both varying-axis types
+    # when this runs inside shard_map (vocab-parallel CCE: E varies over the
+    # token axes, C over the vocab axis) — plain constants would not.
+    zero_n = (E[:, 0] * 0 + C[0, 0] * 0).astype(jnp.float32)
+    init = (zero_n - jnp.inf, zero_n, zero_n)
+    (m, s, p), _ = jax.lax.scan(step, init, (cb_all, vstarts))
+    return m + jnp.log(s), p
+
+
+def _vjp_fwd(cfg, E, C, x):
+    lse, pick = _fwd_impl(cfg, E, C, x)
+    return (lse, pick), (E, C, x, lse)
+
+
+def _vjp_bwd(cfg, residuals, cotangents):
+    E, C, x, lse = residuals
+    g_lse, g_pick = cotangents
+    n_tokens, d = E.shape
+    vocab = C.shape[0]
+    block_v = cfg.block_v or _pick_block_v(vocab, DEFAULT_BLOCK_V)
+    cb_all, nv = _blocks(C, block_v)
+    vstarts = jnp.arange(nv, dtype=jnp.int32) * block_v
+    labels = x[:, None]
+    gl = g_lse.astype(jnp.float32)[:, None]
+    gp = g_pick.astype(jnp.float32)[:, None]
+
+    def step(de_acc, inp):
+        cb, vstart = inp
+        a = jax.lax.dot_general(E, cb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if cfg.softcap is not None:
+            t = jnp.tanh(a / cfg.softcap)
+            a_capped = cfg.softcap * t
+            dcap = 1.0 - t * t
+        else:
+            a_capped, dcap = a, None
+        col = vstart + jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+        valid = col < vocab
+        s = jnp.where(valid, jnp.exp(a_capped - lse[:, None]), 0.0)
+        onehot = jnp.where((col == labels) & valid, 1.0, 0.0)
+        dz = gl * s + gp * onehot
+        if dcap is not None:
+            dz = dz * dcap
+        de_acc = de_acc + jnp.dot(dz, cb.astype(jnp.float32),
+                                  preferred_element_type=jnp.float32)
+        dcb = jax.lax.dot_general(dz, E, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        return de_acc, dcb
+
+    # E+C-derived init: see _fwd_impl (shard_map varying-axis types).
+    de, dcb = jax.lax.scan(step, (E * 0 + C[0, 0] * 0).astype(jnp.float32),
+                           (cb_all, vstarts))
+    dc = dcb.reshape(nv * block_v, d)[:vocab]
+    return de.astype(E.dtype), dc.astype(C.dtype), None
+
+
+_lse_pick_scan.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def lse_and_pick_jax(E, C, x, cfg: CCEConfig | None = None, **overrides):
+    """(lse, pick) via the portable scan implementation (shapes like x)."""
+    cfg = dataclasses.replace(cfg or CCEConfig(), **overrides)
+    orig_shape = x.shape
+    if E.ndim == 3:
+        E = E.reshape(-1, E.shape[-1])
+        x = x.reshape(-1)
+    safe_x = jnp.where(x == IGNORE_INDEX, 0, x).astype(jnp.int32)
+    lse, pick = _lse_pick_scan(cfg, E, C, safe_x)
+    return lse.reshape(orig_shape), pick.reshape(orig_shape)
+
+
+def linear_cross_entropy_jax(E, C, x, cfg: CCEConfig | None = None,
+                             **overrides):
+    """Per-token NLL (shape of x) with CCE memory behaviour, pure JAX."""
+    lse, pick = lse_and_pick_jax(E, C, x, cfg, **overrides)
+    return jnp.where(x == IGNORE_INDEX, 0.0, lse - pick)

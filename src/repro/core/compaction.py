@@ -1,0 +1,37 @@
+"""Removing ignored tokens before the loss (paper Appendix B).
+
+Every implementation the paper surveys first computes logits/loss for
+ignored positions (padding, system prompts, ...) and then zeroes them.
+Compacting valid tokens to the front and slicing to a static ``capacity``
+skips that work entirely, with bit-identical loss/gradients as long as
+``capacity >= number of valid tokens`` (the caller owns that bound — under
+jit shapes must be static, so dynamic token counts are not expressible).
+
+The gather is differentiable: dE scatters back to the original rows, with
+exact zeros at ignored positions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ref import IGNORE_INDEX
+
+
+def compact_valid_tokens(E, x, capacity: int):
+    """(E2 (capacity, D), x2 (capacity,)) with valid tokens first.
+
+    Overflow beyond ``capacity`` is dropped (choose capacity with
+    headroom); padding slots carry IGNORE_INDEX labels so downstream loss
+    masks them to zero.
+    """
+    n = x.shape[0]
+    valid = x != IGNORE_INDEX
+    # stable ordering: valid tokens keep their relative order
+    order = jnp.argsort(jnp.where(valid, 0, 1), stable=True)
+    idx = order[:capacity]
+    E2 = jnp.take(E, idx, axis=0)
+    x2 = jnp.take(x, idx, axis=0)
+    in_range = jnp.arange(capacity) < jnp.sum(valid)
+    x2 = jnp.where(in_range, x2, IGNORE_INDEX)
+    return E2, x2

@@ -1,0 +1,114 @@
+"""Distributed CCE: vocabulary(tensor)-parallel + sequence/data-parallel.
+
+Beyond-paper extension (DESIGN.md §3): the paper evaluates CCE on a single
+GPU with a replicated classifier. At pod scale the classifier C (|V|×D, up
+to 256k×4k ≈ 2 GB bf16) is sharded over the ``model`` mesh axis. Each shard
+computes a *local* (lse, pick) over its vocabulary slice with the CCE
+primitive; the global combine needs only two O(N) collectives:
+
+    pick  = psum_over_shards(local pick masked to the owning shard)
+    lse   = m + log( psum_over_shards( exp(local_lse - m) ) ),
+    m     = pmax_over_shards(local_lse)            (stop-gradient: LSE is
+                                                    mathematically m-free)
+
+Compare: a Megatron-style vocab-parallel CE materializes the (N, |V|/tp)
+logit shard in HBM; CCE never does. Wire bytes stay O(N) either way — CCE
+removes the O(N·|V|/tp) *memory* term, which is what limits batch size.
+
+Tokens are sharded over the data axes (sequence/data parallel): the loss is
+token-local, so composing the two costs nothing extra. Autodiff flows
+through psum/pmax, and the local primitive's custom VJP receives exactly the
+per-shard cotangents (softmax weights of the global LSE) — no bespoke
+backward is needed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import cce as cce_api
+from repro.kernels.ops import CCEConfig
+from repro.kernels.ref import IGNORE_INDEX
+
+
+def _local_lse_pick(E_l, C_l, x_l, vocab_axis, token_axes, impl, cfg,
+                    use_vma):
+    """Per-device body: local CCE over this device's vocab shard."""
+    if use_vma:
+        # E/x arrive replicated over the vocab axis and C replicated over the
+        # token axes; mark them device-varying so the transpose of these
+        # casts (a psum over the corresponding shards) yields the correct
+        # global gradients — each device contributes its (token-slice ×
+        # vocab-slice) partial of dE and dC. Under check_vma=False (the
+        # Pallas-interpret path) shard_map's pessimistic transpose inserts
+        # the same psums itself.
+        E_l = jax.lax.pcast(E_l, (vocab_axis,), to="varying")
+        x_l = jax.lax.pcast(x_l, (vocab_axis,), to="varying")
+        C_l = jax.lax.pcast(C_l, tuple(token_axes), to="varying")
+    idx = jax.lax.axis_index(vocab_axis)
+    v_local = C_l.shape[0]
+    lo = idx * v_local
+    in_range = (x_l >= lo) & (x_l < lo + v_local)
+    x_loc = jnp.where(in_range, x_l - lo, 0)
+    if impl == "dense":
+        # Megatron-style vocab-parallel CE baseline: the (N_loc, V_loc)
+        # logit shard IS materialized (the O(N·|V|/tp) object CCE removes).
+        # Kept for the paper-baseline comparison at pod scale.
+        a = jax.lax.dot_general(E_l, C_l, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if cfg is not None and cfg.softcap is not None:
+            a = cfg.softcap * jnp.tanh(a / cfg.softcap)
+        lse_l = jax.scipy.special.logsumexp(a, axis=1)
+        pick_l = jnp.take_along_axis(a, x_loc[:, None], axis=1)[:, 0]
+    else:
+        lse_l, pick_l = cce_api.lse_and_pick(E_l, C_l, x_loc, impl=impl,
+                                             cfg=cfg)
+
+    pick = jax.lax.psum(jnp.where(in_range, pick_l, 0.0), vocab_axis)
+    # stop_gradient *before* pmax (no diff rule) — LSE is mathematically
+    # independent of the max-shift m, so this is exact.
+    m = jax.lax.pmax(jax.lax.stop_gradient(lse_l), vocab_axis)
+    lse = m + jnp.log(jax.lax.psum(jnp.exp(lse_l - m), vocab_axis))
+    return lse, pick
+
+
+def vocab_parallel_lse_pick(E, C, x, *, mesh, vocab_axis: str = "model",
+                            token_axes=("data",), impl: str = "auto",
+                            cfg: CCEConfig | None = None):
+    """(lse, pick) with C sharded over ``vocab_axis`` and tokens sharded over
+    ``token_axes``. E: (N, D), C: (V, D), x: (N,).
+    """
+    cfg = cfg or CCEConfig()
+    token_spec = P(tuple(token_axes))
+
+    # check_vma must be off for the Pallas path: in interpret mode (CPU) the
+    # kernel body is evaluated as JAX ops whose internal iotas/constants are
+    # unvarying, which trips the checker; shard_map then inserts the
+    # replication-transpose psums pessimistically, so gradients match.
+    use_vma = impl != "cce"
+
+    def f(E_l, C_l, x_l):
+        return _local_lse_pick(E_l, C_l, x_l, vocab_axis, token_axes, impl,
+                               cfg, use_vma)
+
+    return jax.shard_map(
+        f, mesh=mesh,
+        in_specs=(P(tuple(token_axes), None), P(vocab_axis, None), token_spec),
+        out_specs=(token_spec, token_spec),
+        check_vma=use_vma,
+    )(E, C, x)
+
+
+def vocab_parallel_cross_entropy(E, C, x, *, mesh, vocab_axis: str = "model",
+                                 token_axes=("data",), impl: str = "auto",
+                                 cfg: CCEConfig | None = None,
+                                 reduction: str = "none"):
+    """Vocab-parallel CCE loss. IGNORE_INDEX handled as in the local API."""
+    safe_x = jnp.where(x == IGNORE_INDEX, 0, x).astype(jnp.int32)
+    lse, pick = vocab_parallel_lse_pick(
+        E, C, safe_x, mesh=mesh, vocab_axis=vocab_axis,
+        token_axes=token_axes, impl=impl, cfg=cfg)
+    nll = jnp.where(x == IGNORE_INDEX, 0.0, lse - pick)
+    return cce_api._reduce(nll, x, reduction)

@@ -1,0 +1,2 @@
+"""Data pipeline: deterministic, shard-aware, checkpointable-by-step."""
+from repro.data.synthetic import DataConfig, SyntheticLM  # noqa: F401

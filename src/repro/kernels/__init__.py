@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for Cut Cross-Entropy (the paper's compute hot-spot).
+
+Layout per repo convention:
+  cce_fwd.py / cce_bwd.py / indexed_matmul.py — pl.pallas_call kernels with
+      explicit BlockSpec VMEM tiling (TPU target; interpret=True on CPU).
+  ops.py — jit'd differentiable wrappers + block-size heuristics.
+  ref.py — pure-jnp oracles the kernels are tested against.
+"""
+
+from repro.kernels.ops import (  # noqa: F401
+    CCEConfig,
+    choose_blocks,
+    linear_cross_entropy_pallas,
+    lse_and_pick_pallas,
+)
+from repro.kernels.indexed_matmul import indexed_matmul_pallas  # noqa: F401
+from repro.kernels.ref import IGNORE_INDEX  # noqa: F401

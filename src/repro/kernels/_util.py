@@ -1,0 +1,25 @@
+"""Shared helpers for the Pallas kernel wrappers."""
+
+from __future__ import annotations
+
+import jax
+
+
+def out_vma(*arrays) -> frozenset:
+    """Union of the inputs' varying-manual-axes types.
+
+    Inside ``jax.shard_map`` (check_vma=True), ``pl.pallas_call`` outputs
+    must declare how they vary across mesh axes; kernel outputs vary over
+    every axis any input varies over. Outside shard_map this is the empty
+    set, which is equally valid.
+    """
+    vma: set = set()
+    for a in arrays:
+        t = jax.typeof(a)
+        vma |= set(getattr(t, "vma", ()) or ())
+    return frozenset(vma)
+
+
+def sds(shape, dtype, *arrays) -> jax.ShapeDtypeStruct:
+    """ShapeDtypeStruct carrying the vma union of ``arrays``."""
+    return jax.ShapeDtypeStruct(shape, dtype, vma=out_vma(*arrays))

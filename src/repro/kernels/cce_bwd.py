@@ -1,0 +1,284 @@
+"""Pallas-TPU backward kernels for Cut Cross-Entropy (paper Alg. 3 + 4, fused).
+
+Gradient of ``nll_i = lse_i - pick_i`` w.r.t. the raw logit tile ``a``:
+
+    d nll / d a[i, j] = (S[i, j] - 1[j == x_i]) * g_i,   S = exp(a~ - lse)
+
+where ``a~`` is the (optionally softcapped) logit and ``g`` the upstream
+cotangent. The logit tile is *recomputed* in VMEM (never stored), exactly as
+in the paper.
+
+TPU adaptation (DESIGN.md §2): the paper's single Triton kernel accumulates
+``dE`` and ``dC`` concurrently with global-memory atomics. TPUs have no such
+atomics; instead we run **two sequential-grid passes** whose accumulation
+axis is innermost:
+
+  * ``dE`` pass: grid (n, v), v innermost — dE tile accumulates in VMEM
+    scratch over vocab blocks, one HBM write per n-block.
+  * ``dC`` pass: grid (v, n), n innermost — symmetric.
+
+Both passes implement the paper's two throughput tricks:
+
+  * **Gradient filtering**: a block is skipped (``@pl.when``) when every
+    entry of the pre-upstream-scaled gradient ``|S - onehot|`` is below
+    ``eps`` (default 2^-12, the smallest non-truncated bf16 value — paper
+    §4.3). The label's one-hot keeps blocks containing a label from ever
+    being filtered. ``filter=False`` reproduces CCE-Kahan-FullC / -FullE.
+  * **Vocabulary sorting** is applied by the caller (ops.py) by permuting C
+    so hot vocab entries share blocks; the kernels are order-agnostic.
+
+Accumulation is f32 in VMEM by default (strictly tighter than the paper's
+bf16+Kahan in HBM); ``accum="bf16_kahan"`` reproduces the paper's
+compensated-summation variant for the ablation benchmarks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._util import sds
+
+DEFAULT_FILTER_EPS = 2.0 ** -12
+
+
+def _zero_padded_rows(tile, start, limit):
+    """Zero rows of a (rows, D) tile whose global index >= limit.
+
+    Ragged-edge tiles are padded by Pallas with undefined values (NaN in
+    interpret mode); they must not enter any contraction (0*NaN = NaN).
+    """
+    rows = start + jax.lax.broadcasted_iota(jnp.int32, tile.shape, 0)
+    return jnp.where(rows < limit, tile, 0.0)
+
+
+def _grad_tile(e, c, labels, lse, g_lse, g_pick, *, softcap, vocab, v_start,
+               n_start, n_tokens):
+    """Recompute the logit tile and return (dz, block_live).
+
+    The forward primitive is ``(lse_i, pick_i)``; this tile computes the
+    gradient w.r.t. the raw logits for arbitrary upstream cotangents:
+
+        dz[i, j] = g_lse_i * S[i, j] + g_pick_i * 1[j == x_i]      (* dcap)
+
+    For the NLL loss (nll = lse - pick) autodiff supplies g_lse = g and
+    g_pick = -g, recovering the paper's ``(S - onehot) * g``. The block-skip
+    statistic stays the upstream-independent ``max |S - onehot|`` (Alg. 4).
+
+    Padded rows of e/c (ragged N or V edges) must be zeroed by the caller:
+    Pallas pads out-of-bounds tiles with undefined values, and 0*NaN would
+    otherwise poison the contraction of the outgoing matmuls.
+    """
+    a = jax.lax.dot_general(e, c, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if softcap is not None:
+        t = jnp.tanh(a / softcap)
+        a_capped = softcap * t
+        dcap = 1.0 - t * t  # d a~ / d a
+    else:
+        a_capped = a
+        dcap = None
+
+    col = v_start + jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+    row = n_start + jax.lax.broadcasted_iota(jnp.int32, a.shape, 0)
+    valid = (col < vocab) & (row < n_tokens)
+
+    s = jnp.exp(a_capped - lse)           # softmax, normalizer-free (paper §4.3)
+    s = jnp.where(valid, s, 0.0)
+    onehot = jnp.where((col == labels) & valid, 1.0, 0.0)
+
+    live = jnp.max(jnp.abs(s - onehot))   # filter statistic (pre-g, Alg. 4)
+    # g rows at a ragged N edge are undefined (NaN) — zero them, or 0*NaN
+    # would leak into the dC contraction over rows.
+    g_rows = n_start + jax.lax.broadcasted_iota(jnp.int32, g_lse.shape, 0)
+    g_lse = jnp.where(g_rows < n_tokens, g_lse, 0.0)
+    g_pick = jnp.where(g_rows < n_tokens, g_pick, 0.0)
+    dz = g_lse * s + g_pick * onehot      # (block_n, 1) cotangents broadcast
+    if dcap is not None:
+        dz = dz * dcap
+    return dz, live
+
+
+def _accum(acc_ref, comp_ref, contrib, accum_mode):
+    """acc += contrib, optionally with Kahan compensation (paper parity)."""
+    if accum_mode == "f32":
+        acc_ref[...] += contrib
+    elif accum_mode == "bf16":
+        acc_ref[...] = (acc_ref[...].astype(jnp.bfloat16)
+                        + contrib.astype(jnp.bfloat16)).astype(jnp.float32)
+    elif accum_mode == "bf16_kahan":
+        # Kahan: y = contrib - comp; t = acc + y; comp = (t - acc) - y
+        y = contrib.astype(jnp.bfloat16) - comp_ref[...].astype(jnp.bfloat16)
+        acc = acc_ref[...].astype(jnp.bfloat16)
+        t = acc + y
+        comp_ref[...] = ((t - acc) - y).astype(jnp.float32)
+        acc_ref[...] = t.astype(jnp.float32)
+    else:
+        raise ValueError(accum_mode)
+
+
+def _de_kernel(x_ref, gl_ref, gp_ref, lse_ref, e_ref, c_ref, de_ref, acc, comp,
+               *, softcap, vocab, n_tokens, block_n, block_v, filter_eps,
+               accum_mode):
+    v = pl.program_id(1)
+    nv = pl.num_programs(1)
+    n = pl.program_id(0)
+
+    @pl.when(v == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        if comp is not None:
+            comp[...] = jnp.zeros_like(comp)
+
+    e = _zero_padded_rows(e_ref[...].astype(jnp.float32), n * block_n, n_tokens)
+    c = _zero_padded_rows(c_ref[...].astype(jnp.float32), v * block_v, vocab)
+    dz, live = _grad_tile(
+        e, c, x_ref[...], lse_ref[...], gl_ref[...], gp_ref[...],
+        softcap=softcap, vocab=vocab,
+        v_start=v * block_v, n_start=n * block_n, n_tokens=n_tokens)
+
+    if filter_eps is not None:
+        @pl.when(live >= filter_eps)
+        def _mm():
+            _accum(acc, comp, jnp.dot(dz, c, preferred_element_type=jnp.float32),
+                   accum_mode)
+    else:
+        _accum(acc, comp, jnp.dot(dz, c, preferred_element_type=jnp.float32),
+               accum_mode)
+
+    @pl.when(v == nv - 1)
+    def _finalize():
+        de_ref[...] = acc[...].astype(de_ref.dtype)
+
+
+def _dc_kernel(x_ref, gl_ref, gp_ref, lse_ref, e_ref, c_ref, dc_ref, acc, comp,
+               *, softcap, vocab, n_tokens, block_n, block_v, filter_eps,
+               accum_mode):
+    n = pl.program_id(1)
+    nn = pl.num_programs(1)
+    v = pl.program_id(0)
+
+    @pl.when(n == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        if comp is not None:
+            comp[...] = jnp.zeros_like(comp)
+
+    e = _zero_padded_rows(e_ref[...].astype(jnp.float32), n * block_n, n_tokens)
+    c = _zero_padded_rows(c_ref[...].astype(jnp.float32), v * block_v, vocab)
+    dz, live = _grad_tile(
+        e, c, x_ref[...], lse_ref[...], gl_ref[...], gp_ref[...],
+        softcap=softcap, vocab=vocab,
+        v_start=v * block_v, n_start=n * block_n, n_tokens=n_tokens)
+
+    contrib = lambda: jax.lax.dot_general(  # (block_v, block_n) @ (block_n, D)
+        dz, e, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    if filter_eps is not None:
+        @pl.when(live >= filter_eps)
+        def _mm():
+            _accum(acc, comp, contrib(), accum_mode)
+    else:
+        _accum(acc, comp, contrib(), accum_mode)
+
+    @pl.when(n == nn - 1)
+    def _finalize():
+        dc_ref[...] = acc[...].astype(dc_ref.dtype)
+
+
+def _prep(E, C, x, lse, g_lse, g_pick):
+    n_tokens = E.shape[0]
+    x2 = x.astype(jnp.int32).reshape(n_tokens, 1)
+    gl2 = g_lse.astype(jnp.float32).reshape(n_tokens, 1)
+    gp2 = g_pick.astype(jnp.float32).reshape(n_tokens, 1)
+    lse2 = lse.astype(jnp.float32).reshape(n_tokens, 1)
+    return x2, gl2, gp2, lse2
+
+
+def cce_backward_dE_pallas(E, C, x, lse, g_lse, g_pick, *, softcap=None,
+                           block_n=128, block_v=256,
+                           filter_eps=DEFAULT_FILTER_EPS,
+                           accum="f32", interpret=False):
+    """dE (N, D) for cotangents (g_lse, g_pick) of the (lse, pick) primitive.
+    filter_eps=None disables gradient filtering (the -FullE variant)."""
+    n_tokens, d = E.shape
+    vocab = C.shape[0]
+    x2, gl2, gp2, lse2 = _prep(E, C, x, lse, g_lse, g_pick)
+    grid = (pl.cdiv(n_tokens, block_n), pl.cdiv(vocab, block_v))
+    kernel = functools.partial(
+        _de_kernel, softcap=softcap, vocab=vocab, n_tokens=n_tokens,
+        block_n=block_n, block_v=block_v, filter_eps=filter_eps,
+        accum_mode=accum)
+    scratch = [pltpu.VMEM((block_n, d), jnp.float32)]
+    if accum == "bf16_kahan":
+        scratch.append(pltpu.VMEM((block_n, d), jnp.float32))
+    else:
+        kernel = functools.partial(_wrap_no_comp, kernel)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, 1), lambda nn, vv: (nn, 0)),  # labels
+            pl.BlockSpec((block_n, 1), lambda nn, vv: (nn, 0)),  # g_lse
+            pl.BlockSpec((block_n, 1), lambda nn, vv: (nn, 0)),  # g_pick
+            pl.BlockSpec((block_n, 1), lambda nn, vv: (nn, 0)),  # lse
+            pl.BlockSpec((block_n, d), lambda nn, vv: (nn, 0)),  # E
+            pl.BlockSpec((block_v, d), lambda nn, vv: (vv, 0)),  # C
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda nn, vv: (nn, 0)),
+        out_shape=sds((n_tokens, d), E.dtype, x2, gl2, gp2, lse2, E, C),
+        scratch_shapes=scratch,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x2, gl2, gp2, lse2, E, C)
+
+
+def cce_backward_dC_pallas(E, C, x, lse, g_lse, g_pick, *, softcap=None,
+                           block_n=128, block_v=256,
+                           filter_eps=DEFAULT_FILTER_EPS,
+                           accum="f32", interpret=False):
+    """dC (V, D) for cotangents (g_lse, g_pick). filter_eps=None disables
+    filtering (the -FullC variant, the paper's recommended pretraining
+    setting)."""
+    n_tokens, d = E.shape
+    vocab = C.shape[0]
+    x2, gl2, gp2, lse2 = _prep(E, C, x, lse, g_lse, g_pick)
+    grid = (pl.cdiv(vocab, block_v), pl.cdiv(n_tokens, block_n))
+    kernel = functools.partial(
+        _dc_kernel, softcap=softcap, vocab=vocab, n_tokens=n_tokens,
+        block_n=block_n, block_v=block_v, filter_eps=filter_eps,
+        accum_mode=accum)
+    scratch = [pltpu.VMEM((block_v, d), jnp.float32)]
+    if accum == "bf16_kahan":
+        scratch.append(pltpu.VMEM((block_v, d), jnp.float32))
+    else:
+        kernel = functools.partial(_wrap_no_comp, kernel)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, 1), lambda vv, nn: (nn, 0)),  # labels
+            pl.BlockSpec((block_n, 1), lambda vv, nn: (nn, 0)),  # g_lse
+            pl.BlockSpec((block_n, 1), lambda vv, nn: (nn, 0)),  # g_pick
+            pl.BlockSpec((block_n, 1), lambda vv, nn: (nn, 0)),  # lse
+            pl.BlockSpec((block_n, d), lambda vv, nn: (nn, 0)),  # E
+            pl.BlockSpec((block_v, d), lambda vv, nn: (vv, 0)),  # C
+        ],
+        out_specs=pl.BlockSpec((block_v, d), lambda vv, nn: (vv, 0)),
+        out_shape=sds((vocab, d), C.dtype, x2, gl2, gp2, lse2, E, C),
+        scratch_shapes=scratch,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x2, gl2, gp2, lse2, E, C)
+
+
+def _wrap_no_comp(kernel, *refs):
+    """Adapter: insert comp=None for non-Kahan accumulation modes."""
+    *io_refs, acc = refs
+    return kernel(*io_refs, acc, None)

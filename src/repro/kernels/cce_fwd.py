@@ -1,0 +1,119 @@
+"""Pallas-TPU forward kernel for Cut Cross-Entropy (paper Alg. 1 + 2, fused).
+
+One kernel computes, for every token i:
+  * ``lse_i  = log sum_v exp(softcap(C_v . E_i))``   (linear-log-sum-exp)
+  * ``pick_i = softcap(C[x_i] . E_i)``               (indexed matmul)
+
+so that ``nll_i = lse_i - pick_i``. The ``(N, V)`` logit matrix only ever
+exists one ``(block_n, block_v)`` tile at a time, in VMEM.
+
+TPU adaptation vs. the paper's Triton kernel (see DESIGN.md §2):
+  * The grid is *sequential* over the vocabulary axis (innermost,
+    ``dimension_semantics=("parallel", "arbitrary")``). The online LSE is
+    carried in VMEM scratch across vocab steps — no global-memory spin-lock
+    atomics, which TPUs do not have (and do not need here).
+  * The label logit is extracted with a broadcasted-iota column mask fused
+    into the same tile (VPU-friendly), not a dynamic gather.
+  * f32 accumulation in VMEM regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._util import sds
+
+
+def _fwd_kernel(x_ref, e_ref, c_ref, lse_ref, pick_ref, m_acc, s_acc, p_acc,
+                *, softcap, n_tokens, vocab, block_n, block_v):
+    v = pl.program_id(1)
+    nv = pl.num_programs(1)
+
+    @pl.when(v == 0)
+    def _init():
+        m_acc[...] = jnp.full_like(m_acc, -jnp.inf)
+        s_acc[...] = jnp.zeros_like(s_acc)
+        p_acc[...] = jnp.zeros_like(p_acc)
+
+    e = e_ref[...].astype(jnp.float32)  # (block_n, D)
+    c = c_ref[...].astype(jnp.float32)  # (block_v, D)
+    # (block_n, block_v) logit tile — lives only in VMEM.
+    a = jax.lax.dot_general(e, c, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if softcap is not None:
+        a = softcap * jnp.tanh(a / softcap)
+
+    col = v * block_v + jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+    a = jnp.where(col < vocab, a, -jnp.inf)  # mask padded vocab columns
+
+    labels = x_ref[...]  # (block_n, 1) int32
+    pick_mask = col == labels  # each label matches exactly one column overall
+    p_acc[...] += jnp.sum(jnp.where(pick_mask, a, 0.0), axis=1, keepdims=True)
+
+    # Online (streaming) log-sum-exp, numerically stable.
+    bmax = jnp.max(a, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_acc[...], bmax)
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    s_acc[...] = (s_acc[...] * jnp.exp(m_acc[...] - m_safe)
+                  + jnp.sum(jnp.exp(a - m_safe), axis=1, keepdims=True))
+    m_acc[...] = m_new
+
+    @pl.when(v == nv - 1)
+    def _finalize():
+        lse_ref[...] = m_acc[...] + jnp.log(s_acc[...])
+        pick_ref[...] = p_acc[...]
+
+
+def cce_forward_pallas(E: jax.Array, C: jax.Array, x: jax.Array, *,
+                       softcap: float | None = None,
+                       block_n: int = 128, block_v: int = 256,
+                       interpret: bool = False):
+    """Returns ``(lse, pick)`` as f32 ``(N,)`` vectors.
+
+    E: (N, D), C: (V, D), x: (N,) int32 with labels already clamped to
+    [0, V) (ignored positions are handled by the caller via the upstream
+    gradient / loss mask — the kernel itself is label-agnostic).
+    """
+    n_tokens, d = E.shape
+    vocab, d2 = C.shape
+    assert d == d2, (E.shape, C.shape)
+    assert x.shape == (n_tokens,)
+
+    grid = (pl.cdiv(n_tokens, block_n), pl.cdiv(vocab, block_v))
+    x2 = x.astype(jnp.int32).reshape(n_tokens, 1)
+
+    kernel = functools.partial(
+        _fwd_kernel, softcap=softcap, n_tokens=n_tokens, vocab=vocab,
+        block_n=block_n, block_v=block_v)
+
+    lse, pick = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, 1), lambda n, v: (n, 0)),   # labels
+            pl.BlockSpec((block_n, d), lambda n, v: (n, 0)),   # E
+            pl.BlockSpec((block_v, d), lambda n, v: (v, 0)),   # C
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, 1), lambda n, v: (n, 0)),   # lse
+            pl.BlockSpec((block_n, 1), lambda n, v: (n, 0)),   # pick
+        ],
+        out_shape=[
+            sds((n_tokens, 1), jnp.float32, x2, E, C),
+            sds((n_tokens, 1), jnp.float32, x2, E, C),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_n, 1), jnp.float32),  # running max
+            pltpu.VMEM((block_n, 1), jnp.float32),  # running sum-exp
+            pltpu.VMEM((block_n, 1), jnp.float32),  # label-logit accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x2, E, C)
+    return lse[:, 0], pick[:, 0]

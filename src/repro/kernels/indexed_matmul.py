@@ -1,0 +1,62 @@
+"""Standalone memory-efficient indexed matmul (paper Algorithm 1).
+
+Computes ``o_i = C[x_i] . E_i`` in O(N) global memory without materializing
+the gathered classifier rows ``C_x`` (O(N*D)) or the logits (O(N*V)).
+
+TPU adaptation (DESIGN.md §2): the paper's Triton kernel issues per-token
+global-memory gathers of classifier columns. The TPU-native equivalent is
+**scalar prefetch**: the label vector is prefetched into SMEM and used inside
+the *block index map* of ``C``, so the Pallas pipeline DMAs exactly the one
+classifier row each token needs from HBM into VMEM — a gather expressed as
+data-dependent block scheduling rather than in-kernel pointer arithmetic.
+
+This standalone op is used for testing/parity and for embedding-style
+lookups; the production CCE loss uses the fused forward (cce_fwd.py), where
+the label logit is a free by-product of the LSE tile sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._util import sds
+
+
+def _idx_mm_kernel(x_smem, e_ref, c_ref, o_ref, *, softcap):
+    del x_smem  # only used by the index maps
+    e = e_ref[...].astype(jnp.float32)  # (1, D)
+    c = c_ref[...].astype(jnp.float32)  # (1, D) — the row C[x_i]
+    o = jnp.sum(e * c)
+    if softcap is not None:
+        o = softcap * jnp.tanh(o / softcap)
+    o_ref[0, 0] = o
+
+
+def indexed_matmul_pallas(E: jax.Array, C: jax.Array, x: jax.Array, *,
+                          softcap: float | None = None,
+                          interpret: bool = False) -> jax.Array:
+    """o_i = softcap(C[x_i] . E_i), shape (N,), f32."""
+    n_tokens, d = E.shape
+    assert C.shape[1] == d
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tokens,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, x_s: (i, 0)),        # E row i
+            pl.BlockSpec((1, d), lambda i, x_s: (x_s[i], 0)),   # C row x[i]
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, x_s: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_idx_mm_kernel, softcap=softcap),
+        grid_spec=grid_spec,
+        out_shape=sds((n_tokens, 1), jnp.float32, x, E, C),
+        interpret=interpret,
+    )(x.astype(jnp.int32), E, C)
+    return out[:, 0]

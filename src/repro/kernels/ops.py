@@ -1,0 +1,186 @@
+"""Jit-ready wrappers assembling the CCE Pallas kernels into differentiable
+ops, plus block-size heuristics and the vocabulary-sorting wrapper.
+
+The core primitive is :func:`lse_and_pick_pallas` — for every token it
+returns ``(lse_i, pick_i)`` where ``lse_i = logsumexp_v softcap(C_v . E_i)``
+and ``pick_i = softcap(C[x_i] . E_i)``. Its custom VJP accepts arbitrary
+cotangents ``(g_lse, g_pick)``, so both the plain NLL loss
+(``nll = lse - pick``) and the distributed vocab-parallel combination
+(``repro.core.vocab_parallel``) differentiate through it for free.
+
+Public entry point for the loss: :func:`linear_cross_entropy_pallas`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cce_bwd, cce_fwd
+from repro.kernels.cce_bwd import DEFAULT_FILTER_EPS
+from repro.kernels.ref import IGNORE_INDEX
+
+# ~12 MB of the ~16 MB/core VMEM budget for kernel working set; the rest is
+# double-buffering headroom for the Pallas pipeline.
+_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class CCEConfig:
+    """Static (hashable) configuration for the CCE kernels.
+
+    filter_mode_e / filter_mode_c:
+      "filtered" — paper's gradient filtering (eps = 2^-12), default.
+      "full"     — no filtering. ``filter_mode_c="full"`` == CCE-*-FullC,
+                   the paper's recommended pretraining setting.
+    accum: "f32" (TPU-native default) | "bf16_kahan" (paper CCE-Kahan parity)
+           | "bf16" (paper's raw CCE accumulation, for ablation only).
+    sort_vocab: permute C by descending average logit before the backward
+           passes so hot tokens cluster into dense blocks (paper §4.3).
+    """
+    softcap: float | None = None
+    block_n: int | None = None
+    block_v: int | None = None
+    filter_eps: float = DEFAULT_FILTER_EPS
+    filter_mode_e: str = "filtered"
+    filter_mode_c: str = "filtered"
+    accum: str = "f32"
+    sort_vocab: bool = False
+    interpret: bool | None = None  # None = auto (interpret on CPU)
+
+    def resolved_interpret(self) -> bool:
+        return _is_cpu() if self.interpret is None else self.interpret
+
+
+def choose_blocks(n_tokens: int, vocab: int, d: int, itemsize: int,
+                  accum_rows: int = 1) -> tuple[int, int]:
+    """Pick (block_n, block_v): multiples of the (8,128) TPU tile, working
+    set under the VMEM budget. Working set per grid step (input tiles are
+    double-buffered by the pipeline):
+
+        2*(block_n*D + block_v*D)*itemsize          E/C tiles
+      + block_n*block_v*4                           logit tile (f32)
+      + accum_rows*max(block_n,block_v)*D*4         f32 accumulator scratch
+    """
+    def fits(bn, bv):
+        ws = (2 * (bn + bv) * d * itemsize + bn * bv * 4
+              + accum_rows * max(bn, bv) * d * 4)
+        return ws <= _VMEM_BUDGET
+
+    bn, bv = 256, 512
+    while bv > 128 and not fits(bn, bv):
+        bv //= 2
+    while bn > 32 and not fits(bn, bv):
+        bn //= 2
+    bn = max(8, min(bn, _round_up(n_tokens, 8)))
+    bv = max(128, min(bv, _round_up(vocab, 128)))
+    return bn, bv
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _resolve_blocks(cfg: CCEConfig, n_tokens, vocab, d, itemsize,
+                    accum_rows: int = 1):
+    if cfg.block_n is not None and cfg.block_v is not None:
+        return cfg.block_n, cfg.block_v
+    bn, bv = choose_blocks(n_tokens, vocab, d, itemsize, accum_rows)
+    return cfg.block_n or bn, cfg.block_v or bv
+
+
+# ----------------------------------------------------------------------------
+# The differentiable (lse, pick) primitive.
+# ----------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _lse_pick(cfg: CCEConfig, E, C, x):
+    lse, pick = _lse_pick_fwd_impl(cfg, E, C, x)
+    return lse, pick
+
+
+def _lse_pick_fwd_impl(cfg, E, C, x):
+    n_tokens, d = E.shape
+    vocab = C.shape[0]
+    bn, bv = _resolve_blocks(cfg, n_tokens, vocab, d, E.dtype.itemsize)
+    safe_x = jnp.where(x == IGNORE_INDEX, 0, x)
+    return cce_fwd.cce_forward_pallas(
+        E, C, safe_x, softcap=cfg.softcap, block_n=bn, block_v=bv,
+        interpret=cfg.resolved_interpret())
+
+
+def _lse_pick_vjp_fwd(cfg, E, C, x):
+    lse, pick = _lse_pick_fwd_impl(cfg, E, C, x)
+    return (lse, pick), (E, C, x, lse)
+
+
+def _lse_pick_vjp_bwd(cfg, residuals, cotangents):
+    E, C, x, lse = residuals
+    g_lse, g_pick = cotangents
+    n_tokens, d = E.shape
+    vocab = C.shape[0]
+    bn, bv = _resolve_blocks(cfg, n_tokens, vocab, d, E.dtype.itemsize)
+    interpret = cfg.resolved_interpret()
+    g_lse = g_lse.astype(jnp.float32)
+    g_pick = g_pick.astype(jnp.float32)
+    safe_x = jnp.where(x == IGNORE_INDEX, 0, x)
+
+    eps_e = cfg.filter_eps if cfg.filter_mode_e == "filtered" else None
+    eps_c = cfg.filter_eps if cfg.filter_mode_c == "filtered" else None
+
+    if cfg.sort_vocab:
+        # Vocabulary sorting (paper §4.3): order vocab by average logit so
+        # non-trivial softmax mass clusters into few blocks. avg-logit has
+        # the closed form C @ mean(E) — see DESIGN.md §2 (no atomics needed).
+        avg = jnp.dot(C.astype(jnp.float32), jnp.mean(E.astype(jnp.float32), 0))
+        perm = jnp.argsort(-avg)
+        inv_perm = jnp.argsort(perm)
+        C_s = jnp.take(C, perm, axis=0)
+        x_s = jnp.take(inv_perm, safe_x)
+    else:
+        perm = inv_perm = None
+        C_s, x_s = C, safe_x
+
+    kw = dict(softcap=cfg.softcap, block_n=bn, block_v=bv,
+              accum=cfg.accum, interpret=interpret)
+    dE = cce_bwd.cce_backward_dE_pallas(E, C_s, x_s, lse, g_lse, g_pick,
+                                        filter_eps=eps_e, **kw)
+    dC_s = cce_bwd.cce_backward_dC_pallas(E, C_s, x_s, lse, g_lse, g_pick,
+                                          filter_eps=eps_c, **kw)
+    dC = jnp.take(dC_s, inv_perm, axis=0) if perm is not None else dC_s
+    return dE, dC, None
+
+
+_lse_pick.defvjp(_lse_pick_vjp_fwd, _lse_pick_vjp_bwd)
+
+
+def lse_and_pick_pallas(E, C, x, cfg: CCEConfig | None = None, **overrides):
+    """(lse, pick) f32 vectors of shape x.shape; differentiable in E and C.
+
+    ``x == IGNORE_INDEX`` positions are evaluated against vocab entry 0 —
+    callers mask the loss, which zeroes the gradient automatically.
+    """
+    cfg = dataclasses.replace(cfg or CCEConfig(), **overrides)
+    orig_shape = x.shape
+    if E.ndim == 3:  # (B, S, D) convenience
+        E = E.reshape(-1, E.shape[-1])
+        x = x.reshape(-1)
+    lse, pick = _lse_pick(cfg, E, C, x)
+    return lse.reshape(orig_shape), pick.reshape(orig_shape)
+
+
+def linear_cross_entropy_pallas(E, C, x, cfg: CCEConfig | None = None,
+                                **overrides):
+    """Per-token NLL, shape x.shape, f32, via the CCE Pallas kernels;
+    differentiable w.r.t. E and C. Positions with ``x == IGNORE_INDEX`` get
+    loss 0 and contribute no gradient.
+    """
+    lse, pick = lse_and_pick_pallas(E, C, x, cfg, **overrides)
+    return jnp.where(x == IGNORE_INDEX, 0.0, lse - pick)

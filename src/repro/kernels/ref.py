@@ -1,0 +1,123 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground-truth implementations the Pallas kernels are tested
+against (``tests/test_kernels_cce.py`` sweeps shapes/dtypes and asserts
+allclose). They intentionally materialize the full ``(N, V)`` logit matrix —
+that is the memory blow-up CCE removes — so keep test sizes modest.
+
+Conventions (used across the whole repo):
+  E : (N, D)  token embeddings (backbone output).
+  C : (V, D)  classifier / unembedding matrix (row-major vocab).
+  x : (N,)    int32 labels in [0, V) or ``ignore_index``.
+  softcap : optional float t, logits are ``t * tanh(z / t)`` (Gemma-2).
+
+All reductions are performed in float32 regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+IGNORE_INDEX = -100
+
+
+def apply_softcap(logits: jax.Array, softcap: float | None) -> jax.Array:
+    if softcap is None:
+        return logits
+    return softcap * jnp.tanh(logits / softcap)
+
+
+def ref_logits(E: jax.Array, C: jax.Array, softcap: float | None = None) -> jax.Array:
+    """Full (N, V) logit matrix in f32 (the object CCE never materializes)."""
+    z = jnp.dot(E.astype(jnp.float32), C.astype(jnp.float32).T)
+    return apply_softcap(z, softcap)
+
+
+def ref_indexed_matmul(E: jax.Array, C: jax.Array, x: jax.Array,
+                       softcap: float | None = None) -> jax.Array:
+    """o_i = softcap(C[x_i] . E_i)   — Algorithm 1 oracle, O(N*D) memory."""
+    safe_x = jnp.where(x == IGNORE_INDEX, 0, x)
+    picked = jnp.take(C, safe_x, axis=0).astype(jnp.float32)  # (N, D)
+    o = jnp.sum(picked * E.astype(jnp.float32), axis=-1)
+    return apply_softcap(o, softcap)
+
+
+def ref_lse(E: jax.Array, C: jax.Array, softcap: float | None = None) -> jax.Array:
+    """LSE_i = log sum_j exp(logits[i, j])   — Algorithm 2 oracle."""
+    z = ref_logits(E, C, softcap)
+    return jax.scipy.special.logsumexp(z, axis=-1)
+
+
+def ref_linear_cross_entropy(E: jax.Array, C: jax.Array, x: jax.Array,
+                             softcap: float | None = None) -> jax.Array:
+    """Per-token negative log-likelihood; 0.0 at ignored positions.
+
+    nll_i = LSE_i - logits[i, x_i]
+    """
+    z = ref_logits(E, C, softcap)
+    lse = jax.scipy.special.logsumexp(z, axis=-1)
+    safe_x = jnp.where(x == IGNORE_INDEX, 0, x)
+    picked = jnp.take_along_axis(z, safe_x[:, None], axis=-1)[:, 0]
+    nll = lse - picked
+    return jnp.where(x == IGNORE_INDEX, 0.0, nll)
+
+
+def ref_mean_nll(E, C, x, softcap=None):
+    nll = ref_linear_cross_entropy(E, C, x, softcap)
+    valid = (x != IGNORE_INDEX).astype(jnp.float32)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+def ref_grads(E, C, x, softcap=None, g=None):
+    """(dE, dC) for sum(g * nll); g defaults to ones. Computed by autodiff
+    of the dense formulation — the gold standard the Pallas backward kernels
+    must match."""
+    if g is None:
+        g = jnp.ones((E.shape[0],), jnp.float32)
+
+    def loss(e, c):
+        return jnp.sum(ref_linear_cross_entropy(e, c, x, softcap) * g)
+
+    return jax.grad(loss, argnums=(0, 1))(E, C)
+
+
+def ref_softmax(E, C, lse=None, softcap=None):
+    """S = exp(logits - LSE)  (N, V), used by sparsity analyses/benchmarks."""
+    z = ref_logits(E, C, softcap)
+    if lse is None:
+        lse = jax.scipy.special.logsumexp(z, axis=-1)
+    return jnp.exp(z - lse[:, None])
+
+
+def ref_avg_logit(E, C, softcap: float | None = None) -> jax.Array:
+    """Average logit per vocab entry over tokens — the vocabulary-sorting key.
+
+    The paper accumulates this with atomics during the forward pass. Because
+    the mean over tokens commutes with the linear map, avg_v = C_v . mean(E)
+    (exact for softcap=None; for softcapped models the kernel sorts by the
+    *pre-cap* average which preserves order since tanh is monotone).
+    """
+    del softcap  # monotone => ordering identical; sorting is heuristic anyway
+    return jnp.dot(C.astype(jnp.float32), jnp.mean(E.astype(jnp.float32), axis=0))
+
+
+def ref_wkv(r, k, v, w_log, u, state0):
+    """Sequential (per-token) RWKV-6 WKV oracle — O(S) python loop, f32.
+
+    r/k/v/w_log: (B, H, S, hd); u: (H, hd); state0: (B, H, hd, hd).
+    Returns (out (B,H,S,hd), final state). Matches the chunked twin
+    (models/recurrent._rwkv6_chunk) and the Pallas kernel (kernels/wkv.py).
+    """
+    r, k, v = (t.astype(jnp.float32) for t in (r, k, v))
+    w_log = w_log.astype(jnp.float32)
+    St = state0.astype(jnp.float32)
+    outs = []
+    for t in range(r.shape[2]):
+        kt, vt, rt = k[:, :, t], v[:, :, t], r[:, :, t]
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        o = (jnp.einsum("bhd,bhde->bhe", rt, St)
+             + jnp.einsum("bhd,bhde->bhe", rt * u[None], kv))
+        St = jnp.exp(w_log[:, :, t])[..., None] * St + kv
+        outs.append(o)
+    return jnp.stack(outs, 2), St

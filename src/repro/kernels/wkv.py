@@ -1,0 +1,178 @@
+"""Pallas-TPU kernel for the RWKV-6 chunked WKV recurrence (forward).
+
+This is the hardware answer to the rwkv6 train_4k roofline finding
+(EXPERIMENTS.md §Perf cell B): at the XLA level every per-chunk
+intermediate of the chunked recurrence — the decay cumsums, the
+stabilized r2/k2 factors, the (L, L) score tile — round-trips HBM between
+fusions, leaving the cell ~15x memory-bound. Here the whole chunk
+computation lives in VMEM: per grid step the kernel reads the (G, L, hd)
+r/k/v/w tiles, carries the (G, hd, hd) state in VMEM scratch across the
+*sequential* chunk axis, and writes only the (G, L, hd) output tile.
+HBM traffic per chunk is 4 reads + 1 write of L·hd tiles — everything
+else (8+ tile-sized intermediates in the scan twin) stays on-chip.
+
+Like the CCE kernels (DESIGN.md §2) the sequential grid axis replaces
+what a GPU implementation would do with atomics or grid-sync: the state
+hand-off between chunks is a VMEM scratch carried across grid steps with
+``dimension_semantics=("parallel", "arbitrary")``.
+
+The backward runs through the pure-jnp twin (``models/recurrent.
+_rwkv6_chunk``) via ``jax.custom_vjp`` residual recompute — the paper's
+own CCE backward takes the same recompute-over-store stance. The dry-run
+intentionally lowers the jnp twin (a Pallas custom call is opaque to
+``cost_analysis`` and does not lower on CPU); this kernel is validated in
+interpret mode against the sequential oracle (``ref.ref_wkv``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._util import sds
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, out_ref, sf_ref,
+                s_acc, *, nc):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_acc[...] = s0_ref[...].astype(jnp.float32)
+
+    r = r_ref[...].astype(jnp.float32)          # (G, L, hd)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)          # log decay, <= 0
+    u = u_ref[...].astype(jnp.float32)          # (G, hd) bonus
+    S0 = s_acc[...]                             # (G, hd, hd)
+
+    L = r.shape[1]
+    ld = jnp.cumsum(w, axis=1)                  # inclusive within-chunk
+    ld_total = ld[:, -1:, :]                    # (G, 1, hd)
+    ld_prev = ld - w                            # exclusive
+    # stabilized factorization (DESIGN.md §2): exp(ld_prev) <= 1;
+    # exp(-ld) clamped — true contribution below e^-60 is zero anyway.
+    r2 = r * jnp.exp(ld_prev)
+    k2 = k * jnp.exp(-jnp.maximum(ld, -60.0))
+
+    # (G, L, L) score tile — exists only in VMEM.
+    att = jax.lax.dot_general(
+        r2, k2, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    row = jax.lax.broadcasted_iota(jnp.int32, att.shape, 1)
+    col = jax.lax.broadcasted_iota(jnp.int32, att.shape, 2)
+    att = jnp.where(col < row, att, 0.0)        # strictly causal
+
+    diag = jnp.sum(r * u[:, None, :] * k, axis=-1)  # (G, L) bonus term
+    out = (jax.lax.dot_general(att, v, (((2,), (1,)), ((0,), (0,))),
+                               preferred_element_type=jnp.float32)
+           + jax.lax.dot_general(r2, S0, (((2,), (1,)), ((0,), (0,))),
+                                 preferred_element_type=jnp.float32)
+           + diag[..., None] * v)
+
+    # carry state to the next chunk; k·exp(ld_total - ld) reuses exp(-ld)
+    k3 = k2 * jnp.exp(ld_total)
+    s_acc[...] = (jnp.exp(ld_total).transpose(0, 2, 1) * S0
+                  + jax.lax.dot_general(k3, v, (((1,), (1,)), ((0,), (0,))),
+                                        preferred_element_type=jnp.float32))
+    out_ref[...] = out.astype(out_ref.dtype)
+
+    @pl.when(c == nc - 1)
+    def _final():
+        sf_ref[...] = s_acc[...]
+
+
+def wkv_forward_pallas(r, k, v, w_log, u, state0, *, chunk_len: int = 128,
+                       block_g: int = 8, interpret: bool = False):
+    """Chunked WKV forward. r/k/v/w_log: (B, H, S, hd); u: (H, hd);
+    state0: (B, H, hd, hd) f32. Returns (out (B,H,S,hd) f32,
+    final_state (B,H,hd,hd) f32).
+    """
+    b, h, s, hd = r.shape
+    L = min(chunk_len, s)
+    assert s % L == 0, (s, L)
+    nc = s // L
+    bh = b * h
+    g = min(block_g, bh)
+    assert bh % g == 0, (bh, g)
+
+    def flat(x):
+        return x.reshape(bh, s, hd)
+
+    rf, kf, vf, wf = flat(r), flat(k), flat(v), flat(w_log)
+    u_bh = jnp.broadcast_to(u[None], (b, h, hd)).reshape(bh, hd)
+    s0 = state0.reshape(bh, hd, hd)
+
+    grid = (bh // g, nc)
+    kernel = functools.partial(_wkv_kernel, nc=nc)
+    out, sf = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((g, L, hd), lambda i, c: (i, c, 0)),   # r
+            pl.BlockSpec((g, L, hd), lambda i, c: (i, c, 0)),   # k
+            pl.BlockSpec((g, L, hd), lambda i, c: (i, c, 0)),   # v
+            pl.BlockSpec((g, L, hd), lambda i, c: (i, c, 0)),   # w_log
+            pl.BlockSpec((g, hd), lambda i, c: (i, 0)),         # u
+            pl.BlockSpec((g, hd, hd), lambda i, c: (i, 0, 0)),  # state0
+        ],
+        out_specs=[
+            pl.BlockSpec((g, L, hd), lambda i, c: (i, c, 0)),   # out
+            pl.BlockSpec((g, hd, hd), lambda i, c: (i, 0, 0)),  # final state
+        ],
+        out_shape=[
+            sds((bh, s, hd), jnp.float32, rf, kf, vf, wf),
+            sds((bh, hd, hd), jnp.float32, rf, kf, vf, wf),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, hd, hd), jnp.float32),   # carried WKV state
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(rf, kf, vf, wf, u_bh, s0)
+    return out.reshape(b, h, s, hd), sf.reshape(b, h, hd, hd)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: Pallas forward, jnp-twin recompute backward.
+# ---------------------------------------------------------------------------
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def wkv_apply(r, k, v, w_log, u, state0, chunk_len: int = 128,
+              interpret: bool | None = None):
+    """(out, final_state) with the kernel forward and a recompute backward
+    through the pure-jnp twin (the CCE recompute-over-store stance)."""
+    interp = _is_cpu() if interpret is None else interpret
+    return wkv_forward_pallas(r, k, v, w_log, u, state0,
+                              chunk_len=chunk_len, interpret=interp)
+
+
+def _wkv_fwd(r, k, v, w_log, u, state0, chunk_len, interpret):
+    out = wkv_apply(r, k, v, w_log, u, state0, chunk_len, interpret)
+    return out, (r, k, v, w_log, u, state0)
+
+
+def _wkv_bwd(chunk_len, interpret, res, cots):
+    from repro.models.recurrent import _rwkv6_chunk  # jnp twin (no cycle)
+    r, k, v, w_log, u, state0 = res
+
+    def twin(r, k, v, w_log, u, state0):
+        return _rwkv6_chunk(r.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), w_log, u, state0,
+                            chunk_len)
+
+    _, vjp = jax.vjp(twin, r, k, v, w_log, u, state0)
+    return vjp(cots)
+
+
+wkv_apply.defvjp(_wkv_fwd, _wkv_bwd)

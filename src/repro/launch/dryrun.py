@@ -1,0 +1,240 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape) cell and each production mesh,
+``jax.jit(step).lower(**input_specs).compile()`` must succeed; we record
+``memory_analysis()`` (fits-per-device proof), ``cost_analysis()``, and the
+HLO-analyzer roofline terms into one JSON per cell under results/dryrun/.
+
+NOTE the XLA_FLAGS line above MUST precede every other import (jax locks the
+device count at first init). Do not import this module from test/bench
+processes that need a single device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh single,multi [--out results/dryrun] [--force]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.analysis import hlo as hlo_an
+from repro.analysis.roofline import roofline
+from repro.configs.base import SHAPES, TrainConfig
+from repro.core.vocab_parallel import vocab_parallel_cross_entropy
+from repro.launch.inputs import serve_specs, supports_shape, train_specs
+from repro.launch.mesh import data_axes_of, make_production_mesh
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.sharding import make_rules, use_sharding_rules
+from repro.sharding.specs import named, param_specs
+from repro.train.trainer import make_train_step
+
+
+def _train_fn(cfg, mesh):
+    """Full production train step (fwd + bwd + AdamW) with the
+    vocab-parallel CCE head over the model axis."""
+    dp = data_axes_of(mesh)
+
+    # cfg.loss_impl selects the head: "cce_jax" (production), "dense" (the
+    # paper's baseline as a Megatron vocab-parallel CE), or "cce" (Pallas).
+    impl = cfg.loss_impl if cfg.loss_impl in ("dense", "cce") else "cce_jax"
+
+    def loss_fn(e_flat, c, labels):
+        return vocab_parallel_cross_entropy(
+            e_flat, c, labels, mesh=mesh, vocab_axis="model",
+            token_axes=dp, impl=impl,
+            cfg=None, reduction="none")
+
+    tcfg = TrainConfig(microbatch=cfg.train_microbatch)
+    return make_train_step(cfg, tcfg, loss_fn=loss_fn)
+
+
+def _serve_fn(cfg):
+    def step(params, cache, tokens, cache_index, enc_out=None):
+        return T.serve_step(params, cfg, cache, tokens, cache_index,
+                            enc_out=enc_out)
+    return step
+
+
+def lower_cell(cfg, shape, mesh):
+    """Lower one (config x shape) cell on ``mesh``; returns ``lowered`` or
+    None if the shape doesn't apply to this family (long-ctx dense attn)."""
+    ok, _ = supports_shape(cfg, shape)
+    if not ok:
+        return None
+    params_sds = jax.eval_shape(
+        lambda: T.init_lm(jax.random.PRNGKey(0), cfg))
+    p_specs = named(mesh, param_specs(cfg, params_sds, mesh))
+
+    rules = make_rules(mesh, data_axes=data_axes_of(mesh))
+    with use_sharding_rules(rules):
+        if shape.kind in ("train", "prefill"):
+            batch_sds, batch_shard = train_specs(cfg, shape, mesh)
+            if shape.kind == "train":
+                opt_sds = jax.eval_shape(
+                    lambda: adamw.adamw_init(params_sds))
+                o_specs = named(mesh, param_specs(cfg, {"m": params_sds,
+                                                        "v": params_sds},
+                                                  mesh))
+                opt_shard = {"m": o_specs["m"], "v": o_specs["v"],
+                             "count": jax.sharding.NamedSharding(
+                                 mesh, jax.sharding.PartitionSpec())}
+                step = _train_fn(cfg, mesh)
+                return jax.jit(
+                    step,
+                    in_shardings=(p_specs, opt_shard, batch_shard, None),
+                ).lower(params_sds, opt_sds, batch_sds,
+                        jax.ShapeDtypeStruct((), jnp.int32))
+            # prefill: forward pass producing per-token nll
+            def prefill(params, batch):
+                return T.train_loss(params, cfg, batch)
+            return jax.jit(
+                prefill, in_shardings=(p_specs, batch_shard),
+            ).lower(params_sds, batch_sds)
+        # decode
+        args, shard = serve_specs(cfg, shape, mesh)
+        fn = _serve_fn(cfg)
+        if cfg.is_encdec:
+            return jax.jit(fn, in_shardings=(
+                p_specs, shard["cache"], shard["tokens"],
+                shard["cache_index"], shard["enc_out"])).lower(
+                params_sds, args["cache"], args["tokens"],
+                args["cache_index"], args["enc_out"])
+        return jax.jit(fn, in_shardings=(
+            p_specs, shard["cache"], shard["tokens"],
+            shard["cache_index"])).lower(
+            params_sds, args["cache"], args["tokens"],
+            args["cache_index"])
+
+
+def lower_cell_hlo(arch: str, shape_name: str, *, multi_pod: bool = False,
+                   loss_impl: str | None = None) -> str:
+    """Compiled post-SPMD HLO text for one cell (analysis tooling)."""
+    cfg = configs.get_config(arch)
+    if loss_impl:
+        cfg = dataclasses.replace(cfg, loss_impl=loss_impl)
+    lowered = lower_cell(cfg, SHAPES[shape_name],
+                         make_production_mesh(multi_pod=multi_pod))
+    if lowered is None:
+        raise ValueError(f"{arch} does not support {shape_name}")
+    return lowered.compile().as_text()
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             force: bool = False, loss_impl: str | None = None,
+             tag: str = "") -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    path = os.path.join(out_dir,
+                        f"{arch}__{shape_name}__{mesh_name}{tag}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfg = configs.get_config(arch)
+    if loss_impl:
+        cfg = dataclasses.replace(cfg, loss_impl=loss_impl)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "chips": chips, "ok": False, "tag": tag}
+    t0 = time.time()
+    try:
+        lowered = lower_cell(cfg, shape, mesh)
+        if lowered is None:
+            record["skipped"] = supports_shape(cfg, shape)[1]
+            record["ok"] = True
+            _dump(path, record)
+            return record
+
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        analysis = hlo_an.analyze(compiled.as_text())
+        rf = roofline(analysis, chips, cfg, shape, mem)
+
+        record.update({
+            "ok": True,
+            "compile_s": round(time.time() - t0, 1),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "per_device_total": rf.per_device_bytes,
+            },
+            "xla_cost": {k: cost.get(k) for k in ("flops", "bytes accessed")},
+            "hlo": {
+                "flops_per_device": analysis["flops"],
+                "traffic_bytes_per_device": analysis["traffic_bytes"],
+                "collective_bytes_per_device": analysis["collective_bytes"],
+                "collective_wire_bytes_per_device":
+                    analysis["collective_wire_bytes"],
+                "collectives": analysis["collectives"],
+                "collective_counts": analysis["collective_counts"],
+            },
+            "roofline": rf.as_dict(),
+        })
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        record["compile_s"] = round(time.time() - t0, 1)
+    _dump(path, record)
+    return record
+
+
+def _dump(path, record):
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=float)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--loss-impl", default=None,
+                    help="override cfg.loss_impl (e.g. dense for baselines)")
+    ap.add_argument("--tag", default="", help="suffix for result files")
+    args = ap.parse_args()
+
+    archs = list(configs.ASSIGNED) if args.arch == "all" \
+        else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                rec = run_cell(arch, shape, mesh_name == "multi", args.out,
+                               force=args.force, loss_impl=args.loss_impl,
+                               tag=args.tag)
+                status = ("SKIP" if rec.get("skipped")
+                          else "ok" if rec["ok"] else "FAIL")
+                msg = rec.get("error", "")[:120]
+                rf = rec.get("roofline", {})
+                dom = rf.get("dominant", "")
+                print(f"[{status:4s}] {arch:24s} {shape:12s} {mesh_name:6s} "
+                      f"{rec.get('compile_s', 0):7.1f}s {dom:10s} {msg}",
+                      flush=True)
+                n_fail += 0 if rec["ok"] else 1
+    print(f"done; {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable argument
+stand-ins (no device allocation) for the train step; ``serve_specs`` the
+same for the decode step (one new token against a seq_len KV cache).
+
+Conventions for the stub modality frontends (assignment):
+  * [audio] seamless: encoder input = precomputed frame embeddings,
+    S_enc = seq_len // 4 (≈ 4x temporal compression of a speech encoder);
+    decoder operates on seq_len text tokens.
+  * [vlm] qwen2-vl: inputs are precomputed patch/text embeddings (B, S, d)
+    plus the three M-RoPE position streams.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import data_axes_of
+from repro.models import transformer as T
+from repro.sharding.specs import _shard_if, cache_specs
+
+
+def _ns(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+def _batch_axes(mesh, batch):
+    dp = data_axes_of(mesh)
+    return _shard_if(mesh, batch, dp)
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """(args_sds: dict, shardings: dict) for train_step's ``batch``."""
+    b, s = shape.global_batch, shape.seq_len
+    dp = _batch_axes(mesh, b)
+    i32 = jnp.int32
+    bf16 = jnp.dtype(cfg.dtype)
+    args, shard = {}, {}
+
+    if cfg.input_mode == "embeds":
+        args["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), bf16)
+        shard["embeds"] = _ns(mesh, dp, None, None)
+        if cfg.rope_sections is not None:
+            args["positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+            shard["positions"] = _ns(mesh, None, dp, None)
+    else:
+        args["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        shard["tokens"] = _ns(mesh, dp, None)
+    args["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    shard["labels"] = _ns(mesh, dp, None)
+    if cfg.is_encdec:
+        s_enc = max(s // 4, 1)
+        args["enc_embeds"] = jax.ShapeDtypeStruct((b, s_enc, cfg.d_model),
+                                                  bf16)
+        shard["enc_embeds"] = _ns(mesh, dp, None, None)
+    return args, shard
+
+
+def serve_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Stand-ins for serve_step(params, cache, tokens, cache_index [,enc]).
+
+    decode_*: one new token at position seq_len-1 with a seq_len cache.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    dp = _batch_axes(mesh, b)
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, b, s))
+    c_specs = cache_specs(cfg, cache, mesh, data_axes_of(mesh))
+    c_shard = jax.tree.map(lambda sp: NamedSharding(mesh, sp), c_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+
+    args = {
+        "cache": cache,
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "cache_index": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    shard = {
+        "cache": c_shard,
+        "tokens": _ns(mesh, dp, None),
+        "cache_index": NamedSharding(mesh, P()),
+    }
+    if cfg.is_encdec:
+        s_enc = max(s // 4, 1)
+        args["enc_out"] = jax.ShapeDtypeStruct(
+            (b, s_enc, cfg.d_model), jnp.dtype(cfg.dtype))
+        shard["enc_out"] = _ns(mesh, dp, None, None)
+    return args, shard
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Assignment rules: long_500k only for sub-quadratic-decode families."""
+    if shape.name == "long_500k":
+        sub_quadratic = (
+            cfg.family in ("ssm", "hybrid")
+            or all(k in ("swa", "rglru", "rwkv6")
+                   for k in cfg.pattern_for(cfg.num_layers)))
+        if not sub_quadratic:
+            return False, ("skip: pure full-attention arch — a 512k dense KV "
+                           "cache is a capacity gate (DESIGN.md §6)")
+    return True, ""

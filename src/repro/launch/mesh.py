@@ -1,0 +1,43 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. The dry-run forces 512 host devices (dryrun.py sets XLA_FLAGS before
+any import); real launches get the same logical meshes over TPU slices.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    if len(devices) > n:   # e.g. 512 forced devices, single-pod mesh
+        dev = np.asarray(devices[:n]).reshape(shape)
+        return Mesh(dev, axes, axis_types=(AxisType.Auto,) * len(axes))
+    raise RuntimeError(
+        f"need {n} devices for mesh {dict(zip(axes, shape))}, have "
+        f"{len(devices)} — the dry-run must set "
+        f"XLA_FLAGS=--xla_force_host_platform_device_count=512 before any "
+        f"jax import")
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for CI-scale sharding tests (8 forced host devices)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def data_axes_of(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

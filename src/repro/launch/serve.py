@@ -1,0 +1,40 @@
+"""Serving CLI: batched greedy generation with a reduced-config model.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --reduced \
+      --prompts "1,2,3;4,5" --max-new 8
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+import repro.configs as configs
+from repro.models import transformer as T
+from repro.serve import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--prompts", default="1,2,3;4,5,6,7")
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = (configs.get_reduced_config(args.arch) if args.reduced
+           else configs.get_config(args.arch))
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_len=args.max_len,
+                 batch_size=8)
+    prompts = [[int(t) for t in p.split(",")]
+               for p in args.prompts.split(";")]
+    out = eng.generate(prompts, max_new_tokens=args.max_new)
+    for p, o in zip(prompts, out):
+        print(f"prompt {p} -> {o}")
+
+
+if __name__ == "__main__":
+    main()

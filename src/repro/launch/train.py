@@ -1,0 +1,53 @@
+"""Training CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma-2b \
+      --steps 200 --batch 8 --seq 512 [--reduced] [--ckpt DIR] \
+      [--loss-impl cce|cce_jax|dense|chunked]
+
+Runs on whatever devices are available; for the production mesh this is
+driven by the cluster launcher with one process per host (jax.distributed),
+the code paths are identical.
+"""
+
+import argparse
+import dataclasses
+
+import repro.configs as configs
+from repro.configs.base import TrainConfig
+from repro.train import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test-sized config")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--loss-impl", default=None)
+    ap.add_argument("--dtype", default=None)
+    args = ap.parse_args()
+
+    cfg = (configs.get_reduced_config(args.arch) if args.reduced
+           else configs.get_config(args.arch))
+    if args.loss_impl:
+        cfg = dataclasses.replace(cfg, loss_impl=args.loss_impl)
+    if args.dtype:
+        cfg = dataclasses.replace(cfg, dtype=args.dtype)
+    tcfg = TrainConfig(total_steps=args.steps, learning_rate=args.lr,
+                       warmup_steps=max(args.steps // 20, 1),
+                       microbatch=args.microbatch)
+    tr = Trainer(cfg, tcfg, checkpoint_dir=args.ckpt, seq_len=args.seq,
+                 global_batch=args.batch)
+    tr.install_signal_handlers()
+    tr.run(num_steps=args.steps)
+    if args.ckpt:
+        tr.save()
+
+
+if __name__ == "__main__":
+    main()

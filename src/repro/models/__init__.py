@@ -1,0 +1,1 @@
+"""Model zoo: composable LM covering all assigned architectures."""

@@ -1,0 +1,618 @@
+"""Neural-net building blocks (pure functions over param pytrees).
+
+Conventions:
+  * params are nested dicts of jnp arrays; every layer has an ``init_*``
+    returning params and an apply function taking (params, x, ...).
+  * activations flow in the model dtype (bf16 by default); normalization,
+    softmax and recurrence statistics are computed in f32.
+  * attention uses a *chunked* (online-softmax, Rabe–Staats style) scan for
+    long sequences so the (S, S) score matrix never materializes — the same
+    memory discipline CCE applies to the classifier head; dense fallback for
+    short sequences. This keeps the dry-run memory analysis honest.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.constraints import current_rules as _current_rules
+
+# Sequence length above which self-attention switches to the chunked scan.
+DENSE_ATTN_MAX_SEQ = 2048
+ATTN_CHUNK = 1024
+
+
+def _he(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_dense(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return {"w": _he(key, (d_in, d_out), scale, dtype)}
+
+
+def dense(params, x):
+    return x @ params["w"]
+
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + qwen2-vl M-RoPE).
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions, head_dim, theta):
+    """positions (..., S) int -> cos/sin (..., S, head_dim/2) f32."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                             / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (B, S, H, head_dim); cos/sin (B, S, head_dim/2) broadcast over H."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1)
+
+
+def mrope_cos_sin(positions3, head_dim, theta, sections):
+    """qwen2-vl M-RoPE: positions3 (3, B, S) for (t, h, w) position streams;
+    frequency bands are split between the three streams per ``sections``
+    (counts of half-dims, summing to head_dim/2)."""
+    cos_all, sin_all = rope_cos_sin(positions3, head_dim, theta)  # (3,B,S,hd/2)
+    idx = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                           for i, s in enumerate(sections)])
+    cos = jnp.take_along_axis(
+        jnp.moveaxis(cos_all, 0, -1), idx[None, None, :, None], axis=-1)[..., 0]
+    sin = jnp.take_along_axis(
+        jnp.moveaxis(sin_all, 0, -1), idx[None, None, :, None], axis=-1)[..., 0]
+    return cos, sin
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA; causal, sliding-window, bidirectional, cross).
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model, num_heads, num_kv_heads, head_dim, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        "wq": _he(kq, (d_model, num_heads * head_dim), s, dtype),
+        "wk": _he(kk, (d_model, num_kv_heads * head_dim), s, dtype),
+        "wv": _he(kv, (d_model, num_kv_heads * head_dim), s, dtype),
+        "wo": _he(ko, (num_heads * head_dim, d_model),
+                  1.0 / math.sqrt(num_heads * head_dim), dtype),
+    }
+
+
+def _repeat_kv(k, num_heads):
+    """(B, S, Hkv, hd) -> (B, S, H, hd) by repeating groups."""
+    hkv = k.shape[2]
+    if hkv == num_heads:
+        return k
+    return jnp.repeat(k, num_heads // hkv, axis=2)
+
+
+def _dense_attn(q, k, v, *, causal, window, softcap, q_offset=0,
+                kv_pos=None):
+    """q (B,Sq,H,hd), k/v (B,Sk,H,hd) -> (B,Sq,H,hd). f32 softmax.
+
+    kv_pos: optional (Sk,) absolute key positions (ring caches); defaults to
+    arange(Sk). Unwritten ring slots carry pos = -1 and are masked off.
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    sq, sk = q.shape[1], k.shape[1]
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = (jnp.arange(sk) if kv_pos is None else kv_pos)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if kv_pos is not None:
+        mask &= kpos >= 0
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+def _chunked_attn(q, k, v, *, causal, window, softcap):
+    """Memory-efficient attention: scan over KV chunks with an online
+    softmax; the (Sq, Sk) score matrix exists one (Sq_blk, chunk) tile at a
+    time. For sliding windows, only the chunks intersecting the band are
+    visited (banded scan) so FLOPs are O(S·window), not O(S^2)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    ck = min(ATTN_CHUNK, sk)
+    nk = sk // ck
+    assert sk % ck == 0, (sk, ck)
+
+    def kv_step(carry, idx):
+        m, s, o = carry
+        kc = jax.lax.dynamic_slice_in_dim(k, idx * ck, ck, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, idx * ck, ck, axis=1)
+        # QK in the model dtype with f32 accumulation (MXU-native); the
+        # softmax statistics and o-accumulator stay f32; the bounded
+        # post-exp tile goes back to the model dtype for the PV matmul —
+        # flash-attention's standard mixed precision.
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kc,
+                            preferred_element_type=jnp.float32)
+        scores = scores * scale
+        if softcap is not None:
+            scores = softcap * jnp.tanh(scores / softcap)
+        qpos = jnp.arange(sq)[:, None]
+        kpos = idx * ck + jnp.arange(ck)[None, :]
+        mask = jnp.ones((sq, ck), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+        bmax = jnp.max(scores, axis=-1)
+        m_new = jnp.maximum(m, bmax)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(scores - m_safe[..., None])
+        corr = jnp.exp(m - m_safe)
+        s = s * corr + jnp.sum(p, -1)
+        # p stays f32 into the PV matmul: a bf16 cast here measured as a
+        # net extra tile materialization on the dry-run (§Perf gemma G1).
+        o = o * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, s, o), None
+
+    init = (jnp.full((b, h, sq), -jnp.inf, jnp.float32),
+            jnp.zeros((b, h, sq), jnp.float32),
+            jnp.zeros((b, h, sq, hd), jnp.float32))
+    (m, s, o), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+    out = o / jnp.maximum(s, 1e-37)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(v.dtype)  # (B, Sq, H, hd)
+
+
+def multi_head_attention(params, x, *, num_heads, num_kv_heads, head_dim,
+                         cos_sin=None, causal=True, window=None,
+                         softcap=None, kv_x=None, cache=None,
+                         cache_index=None):
+    """Self- or cross-attention with optional KV cache (decode).
+
+    cache: dict(k=(B, S_cache, Hkv, hd), v=...) updated at ``cache_index``
+    when decoding (x has Sq=1). Returns (out, new_cache).
+    """
+    b, sq, _ = x.shape
+    kv_in = x if kv_x is None else kv_x
+    q = dense({"w": params["wq"]}, x).reshape(b, sq, num_heads, head_dim)
+    k = dense({"w": params["wk"]}, kv_in).reshape(
+        b, kv_in.shape[1], num_kv_heads, head_dim)
+    v = dense({"w": params["wv"]}, kv_in).reshape(
+        b, kv_in.shape[1], num_kv_heads, head_dim)
+
+    if cos_sin is not None:
+        cos_q, sin_q, cos_k, sin_k = cos_sin
+        q = apply_rope(q, cos_q, sin_q).astype(x.dtype)
+        k = apply_rope(k, cos_k, sin_k).astype(x.dtype)
+
+    q_offset = 0
+    kv_pos = None
+    if cache is not None:
+        causal = True
+        q_offset = cache_index
+        if "pos" in cache:
+            # Ring buffer (sliding-window cache, length W << context): write
+            # at slot t mod W; the mask comes from the stored absolute
+            # positions, so RoPE'd keys stay valid. Single-token steps only.
+            assert sq == 1, "ring caches support one-token decode steps"
+            w_len = cache["k"].shape[1]
+            slot = jax.lax.rem(cache_index, w_len)
+            k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1)
+            v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)
+            pos = jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], jnp.full((1,), cache_index, jnp.int32), slot, 0)
+            new_cache = {"k": k, "v": v, "pos": pos}
+            kv_pos = pos
+        else:
+            k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k,
+                                                    cache_index, 1)
+            v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v,
+                                                    cache_index, 1)
+            new_cache = {"k": k, "v": v}
+    else:
+        new_cache = None
+
+    kf = _repeat_kv(k, num_heads)
+    vf = _repeat_kv(v, num_heads)
+
+    if sq == 1 or kf.shape[1] <= DENSE_ATTN_MAX_SEQ:
+        out = _dense_attn(q, kf, vf, causal=causal, window=window,
+                          softcap=softcap, q_offset=q_offset, kv_pos=kv_pos)
+        out = out.astype(x.dtype)
+    else:
+        out = _chunked_attn(q, kf, vf, causal=causal, window=window,
+                            softcap=softcap)
+    out = out.reshape(b, sq, num_heads * head_dim)
+    return dense({"w": params["wo"]}, out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs.
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, activation, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / math.sqrt(d_model), 1.0 / math.sqrt(d_ff)
+    p = {"w_up": _he(k1, (d_model, d_ff), s_in, dtype),
+         "w_down": _he(k2, (d_ff, d_model), s_out, dtype)}
+    if activation in ("silu", "geglu"):
+        p["w_gate"] = _he(k3, (d_model, d_ff), s_in, dtype)
+    return p
+
+
+def mlp(params, x, activation):
+    up = x @ params["w_up"]
+    if activation == "silu":
+        h = jax.nn.silu(x @ params["w_gate"]) * up
+    elif activation == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"]) * up
+    elif activation == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(activation)
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (grouped top-k, capacity, gather dispatch).
+# ---------------------------------------------------------------------------
+
+def init_moe(key, d_model, cfg, dtype):
+    ks = jax.random.split(key, 5)
+    e, ff = cfg.num_experts, cfg.d_ff_expert
+    s_in, s_out = 1.0 / math.sqrt(d_model), 1.0 / math.sqrt(ff)
+    p = {
+        "router": _he(ks[0], (d_model, e), s_in, jnp.float32),
+        "w_gate": _he(ks[1], (e, d_model, ff), s_in, dtype),
+        "w_up": _he(ks[2], (e, d_model, ff), s_in, dtype),
+        "w_down": _he(ks[3], (e, ff, d_model), s_out, dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d_model,
+                               ff * cfg.num_shared_experts, "silu", dtype)
+        p["shared_gate"] = _he(ks[4], (d_model, 1), s_in, dtype)
+    return p
+
+
+# --- permutation-aware row movement -----------------------------------------
+# MoE dispatch is a (partial) permutation of token rows, so BOTH directions
+# of every movement can be gathers with precomputed inverse index vectors.
+# Plain jnp would autodiff each gather into a scatter-add; on XLA:CPU a row
+# scatter lowers to u32 bit-pattern scatters + full-buffer compare/select
+# chains (measured: ~3 TB/device on olmoe train_4k), and TPU scatters are
+# serialized too. These custom VJPs keep fwd AND bwd gather-only; the only
+# scatter left anywhere is the O(T·k) i32 build of the inverse index.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _perm_take(x, idx, inv_idx, sentinel_zero):
+    """y[i] = x[idx[i]]; rows where idx == len(x)-1 read the zero pad row.
+    Transpose is the gather via ``inv_idx`` (the inverse permutation)."""
+    del inv_idx
+    return x[idx]
+
+
+def _perm_take_fwd(x, idx, inv_idx, sentinel_zero):
+    return x[idx], (idx, inv_idx, x.shape[0])
+
+
+def _perm_take_bwd(sentinel_zero, res, dy):
+    del sentinel_zero
+    idx, inv_idx, n = res
+    # inv_idx covers rows 0..n-2 of x; row n-1 is the shared zero pad row.
+    # inv_idx values == len(dy) (the sentinel) read the appended zero row.
+    dy_pad = jnp.concatenate(
+        [dy, jnp.zeros((1, dy.shape[1]), dy.dtype)], axis=0)
+    dx = dy_pad[inv_idx]
+    dx = jnp.concatenate(
+        [dx, jnp.zeros((1, dx.shape[1]), dx.dtype)], axis=0)
+    return dx, None, None
+
+
+_perm_take.defvjp(_perm_take_fwd, _perm_take_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _replicated_take(x, st, inv_order, k):
+    """y[i] = x[st[i]] where every row of x appears exactly k times in st.
+    Transpose: dx = dy[inv_order].reshape(T, k, d).sum(1) — a gather, not
+    the scatter-add jnp autodiff would emit."""
+    del inv_order, k
+    return x[st]
+
+
+def _replicated_take_fwd(x, st, inv_order, k):
+    return x[st], (st, inv_order, x.shape[0])
+
+
+def _replicated_take_bwd(k, res, dy):
+    st, inv_order, t = res
+    dx = dy[inv_order].reshape(t, k, dy.shape[1]).sum(axis=1)
+    return dx, None, None
+
+
+_replicated_take.defvjp(_replicated_take_fwd, _replicated_take_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _replicated_untake(y, inv_order, st, k):
+    """out[t] = sum_j y[inv_order[t*k+j]] — the transpose of
+    ``_replicated_take``; its own transpose is the gather via ``st``."""
+    del st
+    t = inv_order.shape[0] // k
+    return y[inv_order].reshape(t, k, y.shape[1]).sum(axis=1)
+
+
+def _replicated_untake_fwd(y, inv_order, st, k):
+    t = inv_order.shape[0] // k
+    return (y[inv_order].reshape(t, k, y.shape[1]).sum(axis=1),
+            (st,))
+
+
+def _replicated_untake_bwd(k, res, dout):
+    (st,) = res
+    return dout[st], None, None
+
+
+_replicated_untake.defvjp(_replicated_untake_fwd, _replicated_untake_bwd)
+
+
+def _moe_gather_dispatch(x, params, cfg, weights=None):
+    """Sort-based, gather-only dispatch: O(T·k·d) data movement, no
+    O(T·E·cap) matmuls, and no row scatters in either direction (see the
+    permutation custom-VJPs above).
+
+    x: (T, d) flat tokens -> (out (T, d), aux_loss scalar)
+    weights: optional (router, w_gate, w_up, w_down) override — used by the
+    shard_map'd expert path, whose weights are the device-local ff slices.
+    """
+    router, w_gate, w_up, w_down = (
+        (params["router"], params["w_gate"], params["w_up"],
+         params["w_down"]) if weights is None else weights)
+    t, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = max(1, int(t * k * cfg.capacity_factor / e))
+    cap = min(cap, t)
+
+    logits = (x.astype(jnp.float32) @ router)            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                # (T, k)
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)     # renormalize
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    density = jnp.mean(jax.nn.one_hot(top_e[:, 0], e), axis=0)
+    p_mean = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(density * p_mean)
+
+    flat_e = top_e.reshape(-1)                            # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)                 # token of each slot
+    flat_p = top_p.reshape(-1)
+
+    order = jnp.argsort(flat_e, stable=True)              # group by expert
+    inv_order = jnp.argsort(order, stable=True)           # sorted pos of slot
+    se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+    # position within expert = index - start offset of that expert
+    counts = jnp.bincount(se, length=e)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(t * k) - starts[se]
+    keep = pos < cap
+    dest = jnp.where(keep, se * cap + pos, e * cap)       # overflow -> trash
+
+    # inverse mapping: which sorted row fills each expert slot (sentinel =
+    # T*k -> zero pad row). The only scatter in the block: O(e*cap) i32.
+    inv_slot = jnp.full((e * cap + 1,), t * k, jnp.int32).at[dest].set(
+        jnp.arange(t * k, dtype=jnp.int32))
+
+    xs = _replicated_take(x, st, inv_order, k)            # (T*k, d) sorted
+    xs_z = jnp.concatenate([xs, jnp.zeros((1, d), xs.dtype)], axis=0)
+    buf = _perm_take(xs_z, inv_slot[:-1], dest, True)     # (e*cap, d)
+    h = buf.reshape(e, cap, d)
+    gate = jnp.einsum("ecd,edf->ecf", h, w_gate)
+    up = jnp.einsum("ecd,edf->ecf", h, w_up)
+    out_e = jnp.einsum("ecf,efd->ecd", jax.nn.silu(gate) * up,
+                       w_down).reshape(e * cap, d)
+    out_e = jnp.concatenate([out_e, jnp.zeros((1, d), out_e.dtype)], 0)
+
+    rows = _perm_take(out_e, dest, inv_slot[:-1], True)   # back to sorted
+    contrib = rows * (sp * keep).astype(rows.dtype)[:, None]
+    out = _replicated_untake(contrib.astype(x.dtype), inv_order, st, k)
+    return out, aux
+
+
+def _moe_ragged_dispatch(x, router, w_gate, w_up, w_down, cfg):
+    """Sorted ragged grouped-matmul dispatch (Megablocks-style, exact MoE).
+
+    Tokens are sorted by expert and multiplied through per-expert weights
+    with ``jax.lax.ragged_dot`` — no capacity buffers, no padding slots, no
+    token dropping: compute is exactly ``T·k`` rows (the einsum/gather
+    dispatches pay a ``capacity_factor`` slack and drop overflow).
+    x: (T, d) -> (out (T, d), aux). Weights may be device-local ff slices.
+    """
+    t, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+
+    logits = x.astype(jnp.float32) @ router               # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)
+    density = jnp.mean(jax.nn.one_hot(top_e[:, 0], e), axis=0)
+    aux = e * jnp.sum(density * jnp.mean(probs, axis=0))
+
+    flat_e = top_e.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)              # group by expert
+    st = jnp.repeat(jnp.arange(t), k)[order]
+    sp = top_p.reshape(-1)[order]
+    counts = jnp.bincount(flat_e, length=e).astype(jnp.int32)
+
+    xs = x[st]                                            # (T·k, d) sorted
+    gate = jax.lax.ragged_dot(xs, w_gate, counts)
+    up = jax.lax.ragged_dot(xs, w_up, counts)
+    rows = jax.lax.ragged_dot((jax.nn.silu(gate) * up).astype(x.dtype),
+                              w_down, counts)             # (T·k, d)
+    contrib = rows * sp.astype(rows.dtype)[:, None]
+    out = jnp.zeros((t, d), x.dtype).at[st].add(contrib.astype(x.dtype))
+    return out, aux
+
+
+def _moe_einsum_dispatch(x, params, cfg):
+    """GShard-style one-hot dispatch (reference / fallback)."""
+    t, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = max(1, int(t * k * cfg.capacity_factor / e))
+    cap = min(cap, t)
+
+    logits = x.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)
+    density = jnp.mean(jax.nn.one_hot(top_e[:, 0], e), axis=0)
+    aux = e * jnp.sum(density * jnp.mean(probs, axis=0))
+
+    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.float32)     # (T, k, E)
+    # position within expert over the flattened (T*k) slot order — the k
+    # slots of one token must get distinct positions too
+    oh_flat = onehot.reshape(t * k, e)
+    pos_flat = jnp.cumsum(oh_flat, axis=0) - 1.0
+    pos = jnp.sum(pos_flat * oh_flat, axis=-1).reshape(t, k)
+    keep = pos < cap
+    disp = (onehot * keep[..., None])                        # (T, k, E)
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32)     # (T, k, cap)
+    dispatch = jnp.einsum("tke,tkc->tec", disp, pos_oh)      # (T, E, cap)
+    combine = jnp.einsum("tk,tke,tkc->tec", top_p, disp, pos_oh)
+
+    h = jnp.einsum("tec,td->ecd", dispatch.astype(x.dtype), x)
+    gate = jnp.einsum("ecd,edf->ecf", h, params["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", h, params["w_up"])
+    out_e = jnp.einsum("ecf,efd->ecd", jax.nn.silu(gate) * up,
+                       params["w_down"])
+    out = jnp.einsum("tec,ecd->td", combine.astype(x.dtype), out_e)
+    return out, aux
+
+
+def _sharded_moe_ok(params, x, cfg, mesh) -> bool:
+    """All shard_map divisibility preconditions for the sharded MoE path."""
+    if "model" not in mesh.axis_names or "data" not in mesh.axis_names:
+        return False
+    tp = mesh.shape["model"]
+    fs = mesh.shape["data"]
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    b, s, d = x.shape
+    ff = params["w_up"].shape[-1]
+    return (b % dp == 0 and s % tp == 0 and d % fs == 0 and ff % tp == 0)
+
+
+def _routed_experts_sharded(params, x, cfg, rules):
+    """Routed-expert computation as an explicit shard_map over the mesh.
+
+    Under pjit, the data-dependent scatter/argsort of the dispatch defeats
+    the SPMD partitioner: it replicates the whole dispatch across the data
+    axis (measured: [global_B, T·k, d/tp] intermediates + 0.5 TB/device of
+    all-reduce on olmoe train_4k). Routing is token-local by construction,
+    so we do what Megatron does and place the block manually:
+
+      x (B@dp, S@model, d)  --all-gather(model, seq)-->  (B_l, S, d)
+      local top-k routing + sort dispatch (device-local, no collectives)
+      expert ff slices (E, d, ff/tp): column-parallel gate/up, elementwise
+        silu on the slice, row-parallel down  ->  partial (B_l, S, d)
+      --psum-scatter(model, seq)-->  (B_l, S@model, d)   [exact: ff sum]
+
+    The only collectives are the Megatron-SP activation all-gather and
+    reduce-scatter — identical to what XLA already emits for the *dense*
+    MLP under sequence sharding. Expert weights keep their FSDP shard on
+    d (all-gathered over the data axes here; the transpose of that gather
+    is the grads' reduce-scatter, i.e. ZeRO semantics for free).
+    """
+    mesh = rules.mesh
+    M = "model"
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    from jax.sharding import PartitionSpec as P  # local import, cheap
+
+    def local(x_l, router, wg_l, wu_l, wd_l):
+        b_l, s_l, d = x_l.shape
+        x_full = jax.lax.all_gather(x_l, M, axis=1, tiled=True)  # (B_l,S,d)
+        # FSDP: gather the d-shard of the expert slices over the data axes
+        wg = jax.lax.all_gather(wg_l, "data", axis=1, tiled=True)
+        wu = jax.lax.all_gather(wu_l, "data", axis=1, tiled=True)
+        wd = jax.lax.all_gather(wd_l, "data", axis=2, tiled=True)
+        flat = x_full.reshape(b_l * x_full.shape[1], d)
+        # NOTE: _moe_ragged_dispatch (cfg.dispatch="ragged") is the better
+        # fit on real TPU hardware, but this container's CPU backend lowers
+        # ragged_dot as one dense masked matmul PER GROUP (measured: 30x
+        # FLOPs, 1.1 TB/device on olmoe) — so the dry-run default stays on
+        # the sorted gather dispatch. See EXPERIMENTS.md §Perf iteration 2.
+        if cfg.dispatch == "ragged":
+            out, aux = _moe_ragged_dispatch(flat, router, wg, wu, wd, cfg)
+        else:
+            out, aux = _moe_gather_dispatch(flat, None, cfg,
+                                            weights=(router, wg, wu, wd))
+        out = out.reshape(b_l, x_full.shape[1], d)
+        # row-parallel combine + back to sequence sharding in one collective
+        out = jax.lax.psum_scatter(out, M, scatter_dimension=1, tiled=True)
+        aux = jax.lax.pmean(aux, dp + (M,))
+        return out, aux
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp, M, None), P(None, None),
+                  P(None, "data", M), P(None, "data", M),
+                  P(None, M, "data")),
+        out_specs=(P(dp, M, None), P()),
+        check_vma=False,
+    )(x, params["router"], params["w_gate"], params["w_up"],
+      params["w_down"])
+
+
+def moe_mlp(params, x, cfg):
+    """x (B, S, d) -> (out, aux_loss). Shared experts always active.
+
+    Single-device / no-mesh: routing is *grouped per batch row* (GShard
+    groups, vmapped). Under installed sharding rules with a "model" axis,
+    the routed experts run as the explicit shard_map block above; the
+    dense shared experts stay on the pjit path (XLA partitions plain
+    matmuls fine — it is only the dispatch scatter it cannot shard).
+    """
+    b, s, d = x.shape
+    rules = _current_rules()
+    if rules is not None and _sharded_moe_ok(params, x, cfg, rules.mesh):
+        out, aux = _routed_experts_sharded(params, x, cfg, rules)
+    else:
+        dispatch = (_moe_gather_dispatch if cfg.dispatch == "gather"
+                    else _moe_einsum_dispatch)
+        out, aux = jax.vmap(lambda row: dispatch(row, params, cfg))(x)
+        aux = jnp.mean(aux)
+    flat = x.reshape(b * s, d)
+    if cfg.num_shared_experts:
+        g = jax.nn.sigmoid(flat @ params["shared_gate"])
+        shared = (mlp(params["shared"], flat, "silu") * g).astype(out.dtype)
+        out = out + shared.reshape(b, s, d)
+    return out, aux

@@ -1,0 +1,271 @@
+"""Recurrent temporal mixers: RG-LRU (recurrentgemma/Griffin) and RWKV-6.
+
+Both are expressed with parallel-friendly primitives:
+  * RG-LRU: elementwise diagonal linear recurrence -> ``associative_scan``.
+  * RWKV-6: matrix-valued state with per-channel data-dependent decay ->
+    chunked recurrence (intra-chunk matmuls + ``scan`` over chunk states),
+    the standard sub-quadratic linear-attention decomposition.
+
+Each mixer also has a single-token ``*_decode_step`` carrying O(1) state —
+this is what makes the long_500k decode shape runnable for these families.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _he, dense, init_dense, rmsnorm, init_rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (Griffin / RecurrentGemma).
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def init_rglru_block(key, d_model, cfg, dtype):
+    width = cfg.lru_width or d_model
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(d_model)
+    # Lambda init so that a = sigmoid(lam)^c is uniform in [0.9, 0.999]
+    u = jax.random.uniform(ks[0], (width,), minval=0.9, maxval=0.999)
+    lam = jnp.log((u ** (1.0 / _RGLRU_C)) / (1.0 - u ** (1.0 / _RGLRU_C)))
+    return {
+        "w_x": _he(ks[1], (d_model, width), s, dtype),       # x branch
+        "w_gate": _he(ks[2], (d_model, width), s, dtype),    # gelu gate branch
+        "w_out": _he(ks[3], (width, d_model),
+                     1.0 / math.sqrt(width), dtype),
+        "conv_w": _he(ks[4], (cfg.conv_width, width), 0.1, dtype),
+        "w_a": _he(ks[5], (width, width), 1.0 / math.sqrt(width), dtype),
+        "w_i": _he(ks[6], (width, width), 1.0 / math.sqrt(width), dtype),
+        "lam": lam.astype(jnp.float32),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal temporal conv. x (B,S,W), w (K,W)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # small static K (4): unrolled adds, XLA fuses
+        out = out + pad[:, i:i + x.shape[1], :] * w[k - 1 - i]
+    return out
+
+
+def _rglru_scan(xt, a):
+    """h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * xt_t via associative scan.
+    xt, a: (B, S, W) f32."""
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * xt
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block(params, x, cfg, state=None, decode=False):
+    """Griffin recurrent block. x (B,S,d) -> (out, new_state).
+
+    state (decode): dict(conv=(B, K-1, W), h=(B, W))."""
+    gate = jax.nn.gelu(dense({"w": params["w_gate"]}, x))
+    xb = dense({"w": params["w_x"]}, x)
+
+    if decode:
+        conv_hist = jnp.concatenate([state["conv"], xb], axis=1)  # (B,K,W)
+        # taps: conv_w[j] multiplies x_{t-j}; history is oldest->newest
+        xb_c = jnp.einsum("bkw,kw->bw", conv_hist,
+                          params["conv_w"][::-1])[:, None]
+        new_conv = conv_hist[:, 1:]
+    else:
+        xb_c = _causal_conv(xb, params["conv_w"])
+        new_conv = xb[:, -(cfg.conv_width - 1):]
+
+    r = jax.nn.sigmoid(dense({"w": params["w_a"]}, xb_c).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense({"w": params["w_i"]}, xb_c).astype(jnp.float32))
+    log_a = -_RGLRU_C * r * jax.nn.softplus(-params["lam"])  # log sigmoid^c
+    a = jnp.exp(log_a)
+    gated = i * xb_c.astype(jnp.float32)
+
+    if decode:
+        h_prev = state["h"]
+        h = a[:, 0] * h_prev + jnp.sqrt(
+            jnp.maximum(1.0 - a[:, 0] ** 2, 1e-12)) * gated[:, 0]
+        hs = h[:, None]
+        new_state = {"conv": new_conv, "h": h}
+    else:
+        hs = _rglru_scan(gated, a)
+        new_state = {"conv": new_conv, "h": hs[:, -1]}
+
+    out = dense({"w": params["w_out"]}, (hs.astype(x.dtype) * gate))
+    return out, new_state
+
+
+def rglru_init_state(batch, cfg, d_model, dtype):
+    width = cfg.lru_width or d_model
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, width), dtype),
+            "h": jnp.zeros((batch, width), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 ("Finch") mixer: data-dependent per-channel decay, matrix state.
+# ---------------------------------------------------------------------------
+
+def init_rwkv6_block(key, d_model, cfg, dtype):
+    ks = jax.random.split(key, 10)
+    s = 1.0 / math.sqrt(d_model)
+    hd = cfg.head_dim
+    nh = d_model // hd
+    return {
+        "w_r": _he(ks[0], (d_model, d_model), s, dtype),
+        "w_k": _he(ks[1], (d_model, d_model), s, dtype),
+        "w_v": _he(ks[2], (d_model, d_model), s, dtype),
+        "w_g": _he(ks[3], (d_model, d_model), s, dtype),
+        "w_o": _he(ks[4], (d_model, d_model), s, dtype),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "decay_w0": jnp.full((d_model,), -5.0, jnp.float32),
+        "decay_A": _he(ks[5], (d_model, cfg.decay_lora), s, dtype),
+        "decay_B": _he(ks[6], (cfg.decay_lora, d_model),
+                       1.0 / math.sqrt(cfg.decay_lora), dtype),
+        "bonus_u": _he(ks[7], (nh, hd), 0.5, jnp.float32),
+        # token-shift lerp weights per projection (static in our variant)
+        "shift_mix": jax.random.uniform(ks[8], (5, d_model)).astype(dtype),
+        "ln_out": init_rmsnorm(d_model, dtype),
+    }
+
+
+def _token_shift(x, prev):
+    """(x_{t-1} with x_{-1}=prev) per batch. x (B,S,d), prev (B,1,d)."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _rwkv6_chunk(r, k, v, w_log, u, state, chunk_len):
+    """Chunked WKV recurrence for one head group.
+
+    r,k,v: (B, H, S, hd) f32; w_log: (B, H, S, hd) f32 (log decay, <= 0);
+    u: (H, hd) bonus; state: (B, H, hd, hd) f32.
+    Returns (out (B,H,S,hd) f32, final state f32).
+
+    All-f32 within the chunk: a mixed bf16/f32 variant was measured WORSE
+    on the dry-run (EXPERIMENTS.md §Perf rwkv6 iter 1 — XLA hoists whole-
+    buffer converts around the remat'd backward's stacked buffers), and the
+    numerically-unbounded decay factors want f32 anyway. The true traffic
+    fix on hardware is the VMEM-resident WKV kernel, not dtype games.
+    """
+    b, h, s, hd = r.shape
+    L = min(chunk_len, s)
+    assert s % L == 0, (s, L)
+    nc = s // L
+
+    def seg(x):
+        return x.reshape(b, h, nc, L, hd).transpose(2, 0, 1, 3, 4)
+
+    rs, ks_, vs, ws = seg(r), seg(k), seg(v), seg(w_log)
+
+    def chunk_step(S0, inp):
+        rc, kc, vc, wc = inp                      # (B,H,L,hd)
+        # inclusive + exclusive within-chunk log decay from one cumsum
+        ld = jnp.cumsum(wc, axis=2)
+        ld_total = ld[:, :, -1:, :]               # (B,H,1,hd)
+        ld_prev = ld - wc                         # exclusive cumsum
+        # stabilized factorization (DESIGN.md): exp(ld_prev) <= 1,
+        # exp(-ld) clamped — true contribution below e^-60 is zero anyway.
+        r2 = rc * jnp.exp(ld_prev)
+        k2 = kc * jnp.exp(-jnp.maximum(ld, -60.0))
+        att = jnp.einsum("bhld,bhmd->bhlm", r2, k2)
+        mask = jnp.tril(jnp.ones((L, L), bool), k=-1)  # strictly causal
+        att = jnp.where(mask, att, 0.0)
+        # current-token bonus term: u replaces the decay for t == i
+        diag = jnp.einsum("bhld,bhld->bhl", rc * u[None, :, None, :], kc)
+        out = (jnp.einsum("bhlm,bhmd->bhld", att, vc)
+               + jnp.einsum("bhld,bhde->bhle", r2, S0)
+               + diag[..., None] * vc)
+        # carry state to next chunk; k·exp(ld_total - ld) reuses exp(-ld)
+        k3 = k2 * jnp.exp(ld_total)               # <= |k|, stable
+        S1 = (jnp.exp(ld_total).transpose(0, 1, 3, 2) * S0
+              + jnp.einsum("bhld,bhle->bhde", k3, vc))
+        return S1, out
+
+    state_f, outs = jax.lax.scan(chunk_step, state, (rs, ks_, vs, ws))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, hd)
+    return out, state_f
+
+
+def rwkv6_mixer(params, x, cfg, state=None, decode=False):
+    """RWKV-6 time mixer. x (B,S,d) -> (out, new_state).
+
+    state: dict(shift=(B,1,d), wkv=(B,H,hd,hd) f32)."""
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    nh = d // hd
+    prev = state["shift"] if state is not None else jnp.zeros(
+        (b, 1, d), x.dtype)
+    xs = _token_shift(x, prev) if not decode else prev
+    mix = params["shift_mix"]
+
+    def proj(w, i):
+        xm = x + (xs - x) * mix[i]
+        return xm @ params[w]
+
+    r = proj("w_r", 0).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    k = proj("w_k", 1).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    v = proj("w_v", 2).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(proj("w_g", 3))
+    xw = x + (xs - x) * mix[4]
+    w_log = -jnp.exp(params["decay_w0"].astype(jnp.float32)
+                     + (jnp.tanh(xw @ params["decay_A"]) @ params["decay_B"]
+                        ).astype(jnp.float32))
+    w_log = w_log.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+
+    wkv0 = (state["wkv"] if state is not None
+            else jnp.zeros((b, nh, hd, hd), jnp.float32))
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    if decode:
+        # single-token update: o = r.(S + u k^T v); S' = diag(w) S + k^T v
+        kv = jnp.einsum("bhsd,bhse->bhde", kf, vf)  # s == 1
+        out = (jnp.einsum("bhsd,bhde->bhse", rf, wkv0)
+               + jnp.einsum("bhsd,bhde->bhse", rf * params["bonus_u"][None, :, None, :], kv))
+        wkv1 = jnp.exp(w_log).transpose(0, 1, 3, 2) * wkv0 + kv
+    else:
+        out, wkv1 = _rwkv6_chunk(rf, kf, vf, w_log, params["bonus_u"],
+                                 wkv0, cfg.chunk_len)
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d).astype(x.dtype)
+    out = rmsnorm(params["ln_out"], out) * g
+    new_state = {"shift": x[:, -1:], "wkv": wkv1}
+    return out @ params["w_o"], new_state
+
+
+def rwkv6_init_state(batch, cfg, d_model, dtype):
+    nh = d_model // cfg.head_dim
+    return {"shift": jnp.zeros((batch, 1, d_model), dtype),
+            "wkv": jnp.zeros((batch, nh, cfg.head_dim, cfg.head_dim),
+                             jnp.float32)}
+
+
+def init_rwkv_channel_mix(key, d_model, d_ff, dtype):
+    ks = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d_model)
+    return {"w_k": _he(ks[0], (d_model, d_ff), s, dtype),
+            "w_v": _he(ks[1], (d_ff, d_model), 1.0 / math.sqrt(d_ff), dtype),
+            "w_r": _he(ks[2], (d_model, d_model), s, dtype),
+            "mix": jax.random.uniform(ks[2], (2, d_model)).astype(dtype)}
+
+
+def rwkv_channel_mix(params, x, state=None, decode=False):
+    """RWKV channel mixer (squared-relu FFN with receptance gate)."""
+    b, s, d = x.shape
+    prev = state if state is not None else jnp.zeros((b, 1, d), x.dtype)
+    xs = _token_shift(x, prev) if not decode else prev
+    xk = x + (xs - x) * params["mix"][0]
+    xr = x + (xs - x) * params["mix"][1]
+    k = jnp.square(jax.nn.relu(xk @ params["w_k"]))
+    out = jax.nn.sigmoid(xr @ params["w_r"]) * (k @ params["w_v"])
+    return out, x[:, -1:]

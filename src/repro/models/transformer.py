@@ -1,0 +1,400 @@
+"""Model core: a composable LM covering all ten assigned architectures.
+
+One parametric decoder-only transformer (``init_lm`` / ``lm_hidden`` /
+``train_loss`` / ``serve_step``) whose per-layer temporal mixer is selected
+by ``ModelConfig.layer_pattern`` — full/sliding-window attention, RG-LRU, or
+RWKV-6 — and whose channel mixer is a dense or MoE MLP. An encoder-decoder
+variant (seamless) reuses the same blocks with a bidirectional encoder and
+cross-attention.
+
+Layers are applied with ``lax.scan`` over *pattern groups* (stacked params),
+optionally wrapped in ``jax.checkpoint`` (cfg.remat="block"): HLO stays
+small and activation memory is one residual per group — the production
+configuration the dry-run lowers. The LM head is CCE
+(``repro.core.linear_cross_entropy``): the full (N, |V|) logit matrix never
+exists in the train step.
+
+Sharding is injected via ``repro.sharding.constraints.constrain`` tags; the
+model code itself is mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cce as cce_api
+from repro.kernels.ref import IGNORE_INDEX
+from repro.models import layers as L
+from repro.models import recurrent as R
+from repro.sharding.constraints import constrain
+
+ATTN_KINDS = ("attn", "swa")
+
+
+# ---------------------------------------------------------------------------
+# Parameter init.
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg, kind):
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    p = {"ln1": L.init_rmsnorm(d, dt), "ln2": L.init_rmsnorm(d, dt)}
+    if kind in ATTN_KINDS:
+        p["mixer"] = L.init_attention(ks[0], d, cfg.num_heads,
+                                      cfg.num_kv_heads,
+                                      cfg.resolved_head_dim, dt)
+    elif kind == "rglru":
+        p["mixer"] = R.init_rglru_block(ks[0], d, cfg.ssm, dt)
+    elif kind == "rwkv6":
+        p["mixer"] = R.init_rwkv6_block(ks[0], d, cfg.ssm, dt)
+    else:
+        raise ValueError(kind)
+    if cfg.moe is not None:
+        p["mlp"] = L.init_moe(ks[1], d, cfg.moe, dt)
+    elif kind == "rwkv6":
+        p["mlp"] = R.init_rwkv_channel_mix(ks[1], d, cfg.d_ff, dt)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], d, cfg.d_ff, cfg.mlp_activation, dt)
+    return p
+
+
+def _pattern_split(cfg):
+    """(pattern, n_groups, tail_kinds): layers = groups x pattern + tail."""
+    p = tuple(cfg.layer_pattern)
+    n_groups = cfg.num_layers // len(p)
+    tail = cfg.pattern_for(cfg.num_layers)[n_groups * len(p):]
+    return p, n_groups, tail
+
+
+def init_lm(key, cfg):
+    """Returns the full parameter pytree for a decoder-only LM."""
+    dt = jnp.dtype(cfg.dtype)
+    pattern, n_groups, tail = _pattern_split(cfg)
+    k_embed, k_blocks, k_tail, k_head, k_enc = jax.random.split(key, 5)
+
+    v_pad = cfg.padded_vocab_size  # Megatron-style padding (configs/base.py)
+    params = {
+        "embed": (jax.random.normal(k_embed, (v_pad, cfg.d_model))
+                  * 0.02).astype(dt),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+    }
+    # stacked params per pattern position: leading axis = n_groups
+    blocks = []
+    bkeys = jax.random.split(k_blocks, len(pattern))
+    for pos, kind in enumerate(pattern):
+        gkeys = jax.random.split(bkeys[pos], max(n_groups, 1))
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[_init_block(gkeys[g], cfg, kind) for g in range(n_groups)])
+        blocks.append(stacked)
+    params["blocks"] = blocks
+    if tail:
+        tkeys = jax.random.split(k_tail, len(tail))
+        params["tail"] = [_init_block(tkeys[i], cfg, kind)
+                          for i, kind in enumerate(tail)]
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(
+            k_head, (v_pad, cfg.d_model)) * 0.02).astype(dt)
+
+    if cfg.is_encdec:
+        ekeys = jax.random.split(k_enc, cfg.encoder_layers + 2)
+        params["encoder"] = {
+            "blocks": jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[_init_block(ekeys[i], cfg, "attn")
+                  for i in range(cfg.encoder_layers)]),
+            "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+        }
+        params["cross"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[{"ln": L.init_rmsnorm(cfg.d_model, dt),
+               "attn": L.init_attention(
+                   jax.random.split(ekeys[-1], cfg.num_layers)[i],
+                   cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                   cfg.resolved_head_dim, dt)}
+              for i in range(cfg.num_layers)])
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block application.
+# ---------------------------------------------------------------------------
+
+def _rope_for(cfg, positions, kv_positions=None):
+    hd = cfg.resolved_head_dim
+    if cfg.rope_sections is not None:
+        if positions.ndim == 2:  # (B, S) text-only -> same stream 3x
+            positions = jnp.broadcast_to(positions[None],
+                                         (3,) + positions.shape)
+        cos, sin = L.mrope_cos_sin(positions, hd, cfg.rope_theta,
+                                   cfg.rope_sections)
+    else:
+        cos, sin = L.rope_cos_sin(positions, hd, cfg.rope_theta)
+    if kv_positions is None:
+        return (cos, sin, cos, sin)
+    if cfg.rope_sections is not None and kv_positions.ndim == 2:
+        kv_positions = jnp.broadcast_to(kv_positions[None],
+                                        (3,) + kv_positions.shape)
+        kcos, ksin = L.mrope_cos_sin(kv_positions, hd, cfg.rope_theta,
+                                     cfg.rope_sections)
+    else:
+        kcos, ksin = L.rope_cos_sin(kv_positions, hd, cfg.rope_theta)
+    return (cos, sin, kcos, ksin)
+
+
+def _apply_block(params, x, kind, cfg, cos_sin, cache, cache_index, decode):
+    """One (mixer + MLP) block with pre-norms. Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        window = cfg.sliding_window if kind == "swa" else None
+        out, new_cache = L.multi_head_attention(
+            params["mixer"], h, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            cos_sin=cos_sin, causal=True, window=window,
+            softcap=cfg.attn_softcap, cache=cache, cache_index=cache_index)
+    elif kind == "rglru":
+        out, new_cache = R.rglru_block(params["mixer"], h, cfg.ssm,
+                                       state=cache, decode=decode)
+    elif kind == "rwkv6":
+        out, new_cache = R.rwkv6_mixer(params["mixer"], h, cfg.ssm,
+                                       state=cache, decode=decode)
+    else:
+        raise ValueError(kind)
+    x = x + constrain(out, "residual")
+
+    h = L.rmsnorm(params["ln2"], x, cfg.norm_eps)
+    if cfg.moe is not None:
+        out, aux = L.moe_mlp(params["mlp"], h, cfg.moe)
+    elif kind == "rwkv6":
+        out, shift = R.rwkv_channel_mix(
+            params["mlp"], h,
+            state=cache.get("mlp_shift") if cache else None, decode=decode)
+        if new_cache is not None:
+            new_cache = dict(new_cache)
+            new_cache["mlp_shift"] = shift
+    else:
+        out = L.mlp(params["mlp"], h, cfg.mlp_activation)
+    x = x + constrain(out, "residual")
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward pass (hidden states).
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg, batch):
+    if cfg.input_mode == "embeds" and "embeds" in batch:
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        tokens = batch["tokens"]
+        safe = jnp.where(tokens == IGNORE_INDEX, 0, tokens)
+        x = jnp.take(params["embed"], safe, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return constrain(x, "residual")
+
+
+def lm_hidden(params, cfg, batch, cache=None, cache_index=None,
+              enc_out=None):
+    """Run the (decoder) stack. Returns (hidden (B,S,d), new_cache, aux).
+
+    cache: pytree from ``init_cache`` for decode; None for teacher forcing.
+    """
+    decode = cache is not None
+    x = _embed(params, cfg, batch)
+    b, s, _ = x.shape
+
+    if decode:
+        positions = jnp.full((b, s), cache_index, jnp.int32) + jnp.arange(s)
+        if cfg.rope_sections is not None:
+            positions = jnp.broadcast_to(positions[None], (3, b, s))
+    elif "positions" in batch:
+        positions = batch["positions"]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    cos_sin = _rope_for(cfg, positions)
+
+    pattern, n_groups, tail = _pattern_split(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    cross_params = params.get("cross")
+
+    def group_body(carry, xs):
+        x, aux = carry
+        block_params = xs["blocks"]
+        block_caches = xs.get("cache")
+        cross_p = xs.get("cross")
+        new_caches = []
+        for pos, kind in enumerate(pattern):
+            c = block_caches[pos] if block_caches is not None else None
+            x, nc, a = _apply_block(block_params[pos], x, kind, cfg, cos_sin,
+                                    c, cache_index, decode)
+            if cross_p is not None:
+                x = _apply_cross(jax.tree.map(lambda a: a[pos], cross_p),
+                                 x, cfg, enc_out)
+            new_caches.append(nc)
+            aux = aux + a
+        ys = {"cache": new_caches} if block_caches is not None else {}
+        return (x, aux), ys
+
+    if cfg.remat == "block":
+        group_body = jax.checkpoint(group_body)
+    elif cfg.remat == "save_dots":
+        # checkpoint the block but keep large matmul outputs (MLP up/gate,
+        # attention projections) resident instead of recomputing them in
+        # the backward — trades ~2 GB/device of saved activations for one
+        # fewer recompute pass over the dominant matmuls (§Perf gemma G2).
+        group_body = jax.checkpoint(
+            group_body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    xs = {"blocks": params["blocks"]}
+    if decode:
+        xs["cache"] = cache["groups"]
+    if cross_params is not None:
+        # cross params are stacked over all layers; regroup to (groups, P)
+        xs["cross"] = jax.tree.map(
+            lambda a: a[:n_groups * len(pattern)].reshape(
+                (n_groups, len(pattern)) + a.shape[1:]), cross_params)
+
+    if n_groups > 0:
+        (x, aux_total), ys = jax.lax.scan(group_body, (x, aux_total), xs)
+    else:
+        ys = {}
+
+    new_cache = {"groups": ys.get("cache")} if decode else None
+
+    for i, kind in enumerate(tail):
+        c = cache["tail"][i] if decode else None
+        x, nc, a = _apply_block(params["tail"][i], x, kind, cfg, cos_sin,
+                                c, cache_index, decode)
+        aux_total = aux_total + a
+        if decode:
+            new_cache.setdefault("tail", []).append(nc)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, new_cache, aux_total
+
+
+def _apply_cross(cross_p, x, cfg, enc_out):
+    h = L.rmsnorm(cross_p["ln"], x, cfg.norm_eps)
+    out, _ = L.multi_head_attention(
+        cross_p["attn"], h, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+        cos_sin=None, causal=False, kv_x=enc_out)
+    return x + constrain(out, "residual")
+
+
+def encode(params, cfg, enc_batch):
+    """Bidirectional encoder over stub frontend embeddings (B, S_enc, d)."""
+    enc = params["encoder"]
+    x = enc_batch["enc_embeds"].astype(jnp.dtype(cfg.dtype))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    cos, sin = L.rope_cos_sin(positions, cfg.resolved_head_dim,
+                              cfg.rope_theta)
+    cos_sin = (cos, sin, cos, sin)
+
+    def body(carry, block_params):
+        x = carry
+        h = L.rmsnorm(block_params["ln1"], x, cfg.norm_eps)
+        out, _ = L.multi_head_attention(
+            block_params["mixer"], h, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            cos_sin=cos_sin, causal=False)
+        x = x + out
+        h = L.rmsnorm(block_params["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp(block_params["mlp"], h, cfg.mlp_activation)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "block" else body
+    x, _ = jax.lax.scan(body_fn, x, enc["blocks"])
+    return L.rmsnorm(enc["final_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Losses / serving.
+# ---------------------------------------------------------------------------
+
+def classifier_matrix(params, cfg):
+    return params["embed"] if cfg.tie_embeddings else params["head"]
+
+
+def train_loss(params, cfg, batch, loss_impl=None, loss_fn=None):
+    """Mean NLL over non-ignored tokens (+ MoE aux). batch needs "labels".
+
+    loss_fn: optional override (E, C, labels) -> per-token nll; used by the
+    distributed train step to swap in vocab-parallel CCE.
+    """
+    enc_out = encode(params, cfg, batch) if cfg.is_encdec else None
+    hidden, _, aux = lm_hidden(params, cfg, batch, enc_out=enc_out)
+    hidden = constrain(hidden, "residual")
+    C = classifier_matrix(params, cfg)
+    labels = batch["labels"]
+    e_flat = hidden.reshape(-1, cfg.d_model)
+    l_flat = labels.reshape(-1)
+    if loss_fn is not None:
+        nll = loss_fn(e_flat, C, l_flat)
+    else:
+        nll = cce_api.linear_cross_entropy(
+            e_flat, C, l_flat, impl=loss_impl or cfg.loss_impl,
+            softcap=cfg.logit_softcap)
+    valid = (l_flat != IGNORE_INDEX)
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_loss * aux
+    return loss
+
+
+def init_cache(cfg, batch_size, max_len, dtype=None):
+    """Decode cache pytree: stacked per group x pattern position."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    pattern, n_groups, tail = _pattern_split(cfg)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def one(kind):
+        if kind in ATTN_KINDS:
+            length = max_len
+            if kind == "swa" and cfg.sliding_window is not None:
+                length = min(max_len, cfg.sliding_window)
+            c = {"k": jnp.zeros((batch_size, length, hkv, hd), dt),
+                 "v": jnp.zeros((batch_size, length, hkv, hd), dt)}
+            if length < max_len:  # ring buffer: track absolute positions
+                c["pos"] = jnp.full((length,), -1, jnp.int32)
+            return c
+        if kind == "rglru":
+            return R.rglru_init_state(batch_size, cfg.ssm, cfg.d_model, dt)
+        if kind == "rwkv6":
+            st = R.rwkv6_init_state(batch_size, cfg.ssm, cfg.d_model, dt)
+            st["mlp_shift"] = jnp.zeros((batch_size, 1, cfg.d_model), dt)
+            return st
+        raise ValueError(kind)
+
+    cache = {"groups": [jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape),
+        one(kind)) for kind in pattern]}
+    if tail:
+        cache["tail"] = [one(kind) for kind in tail]
+    return cache
+
+
+def serve_step(params, cfg, cache, tokens, cache_index, enc_out=None):
+    """One decode step: tokens (B, 1) -> (logits (B, V), new cache).
+
+    The full vocab distribution for a *single* position is O(B·V) — the
+    memory-cheap case the paper notes is already fine at inference (§3.2).
+    """
+    batch = {"tokens": tokens}
+    hidden, new_cache, _ = lm_hidden(params, cfg, batch, cache=cache,
+                                     cache_index=cache_index, enc_out=enc_out)
+    C = classifier_matrix(params, cfg)
+    logits = hidden[:, -1].astype(jnp.float32) @ C.astype(jnp.float32).T
+    if cfg.logit_softcap is not None:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits[:, :cfg.vocab_size], new_cache

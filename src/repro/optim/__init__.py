@@ -1,0 +1,5 @@
+"""Optimizer substrate: AdamW + schedules, pure pytree ops."""
+from repro.optim.adamw import (  # noqa: F401
+    adamw_init, adamw_update, clip_by_global_norm, global_norm,
+    warmup_cosine,
+)

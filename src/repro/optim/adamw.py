@@ -1,0 +1,80 @@
+"""AdamW (decoupled weight decay) + global-norm clipping, pure pytree ops.
+
+Optimizer moments are f32 regardless of parameter dtype (mixed-precision
+training keeps bf16 params with f32 master statistics). State shards
+identically to the parameters (the FSDP/ZeRO axis), so no extra sharding
+rules are needed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, grad_clip=None):
+    """Returns (new_params, new_state, metrics)."""
+    if grad_clip is not None:
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+    else:
+        gnorm = global_norm(grads)
+
+    count = state["count"] + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return m, v, new_p.astype(p.dtype)
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    flat_p = tdef.flatten_up_to(params)
+    out = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_state = {
+        "m": tdef.unflatten([o[0] for o in out]),
+        "v": tdef.unflatten([o[1] for o in out]),
+        "count": count,
+    }
+    new_params = tdef.unflatten([o[2] for o in out])
+    return new_params, new_state, {"grad_norm": gnorm}
+
+
+def warmup_cosine(step, *, base_lr, warmup_steps, total_steps,
+                  final_frac=0.1):
+    """Linear warmup then cosine decay to final_frac * base_lr."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+    progress = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(
+        jnp.pi * progress))
+    return jnp.where(step < warmup_steps, warm, base_lr * cos)

@@ -1,0 +1,2 @@
+"""Serving: batched greedy decode engine over serve_step."""
+from repro.serve.engine import Engine  # noqa: F401

@@ -1,0 +1,59 @@
+"""Batched serving engine (greedy decode, continuous-batching-lite).
+
+Requests of different prompt lengths share one batch and one timeline: at
+step t a row still inside its prompt is teacher-forced with its next prompt
+token; rows past their prompt generate. Each row's KV cache only ever
+contains its own tokens, so no padding/masking gymnastics are needed and
+the step function stays a single ``serve_step`` jit.
+
+Inference memory is O(B·V) for the one-position logits — the case the paper
+notes is already cheap (§3.2); CCE is a training-time fix.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+
+class Engine:
+    def __init__(self, cfg, params, *, max_len: int = 512,
+                 batch_size: int = 8):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.batch_size = batch_size
+        self._step = jax.jit(functools.partial(T.serve_step, cfg=cfg))
+
+    def generate(self, prompts: list, max_new_tokens: int = 16,
+                 enc_out=None) -> list:
+        assert len(prompts) <= self.batch_size
+        b = len(prompts)
+        cache = T.init_cache(self.cfg, b, self.max_len)
+        outputs: list[list[int]] = [[] for _ in range(b)]
+        tok = jnp.asarray([[p[0]] for p in prompts], jnp.int32)
+
+        t = 0
+        while min(len(o) for o in outputs) < max_new_tokens:
+            logits, cache = self._step(params=self.params, cache=cache,
+                                       tokens=tok, cache_index=t,
+                                       enc_out=enc_out)
+            nxt = jnp.argmax(logits, axis=-1)
+            next_tok = []
+            for i, p in enumerate(prompts):
+                if t + 1 < len(p):
+                    next_tok.append(p[t + 1])          # prefill continues
+                else:
+                    tok_i = int(nxt[i])
+                    if len(outputs[i]) < max_new_tokens:
+                        outputs[i].append(tok_i)
+                    next_tok.append(tok_i)
+            tok = jnp.asarray(next_tok, jnp.int32)[:, None]
+            t += 1
+            if t >= self.max_len - 1:
+                break
+        return outputs

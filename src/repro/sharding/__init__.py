@@ -1,0 +1,8 @@
+"""Sharding: parameter PartitionSpec rules + activation constraints."""
+
+from repro.sharding.constraints import (  # noqa: F401
+    ShardingRules,
+    constrain,
+    make_rules,
+    use_sharding_rules,
+)

@@ -1,0 +1,74 @@
+"""Activation-sharding constraint injection.
+
+Model code tags activations with semantic kinds (``constrain(x, "residual")``
+etc.); the launcher installs a rule set mapping kinds to PartitionSpecs for
+the active mesh. Without an installed rule set every tag is a no-op, so the
+models stay mesh-agnostic and runnable on one device.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+class ShardingRules:
+    """kind -> callable(ndim) -> PartitionSpec (or None to skip)."""
+
+    def __init__(self, mesh, rules):
+        self.mesh = mesh
+        self.rules = rules
+
+    def spec_for(self, kind, ndim):
+        fn = self.rules.get(kind)
+        return None if fn is None else fn(ndim)
+
+
+@contextlib.contextmanager
+def use_sharding_rules(rules: ShardingRules):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def current_rules():
+    """The installed ShardingRules (or None outside a launcher context).
+    Lets mesh-aware blocks (sharded MoE dispatch) discover the mesh without
+    threading it through every model signature."""
+    return getattr(_state, "rules", None)
+
+
+def constrain(x, kind: str):
+    rules = getattr(_state, "rules", None)
+    if rules is None:
+        return x
+    spec = rules.spec_for(kind, x.ndim)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def make_rules(mesh, *, data_axes=("data",), model_axis="model",
+               seq_shard: bool = True):
+    """Production rule set: batch over data axes; residual stream optionally
+    sequence-sharded over the model axis (Megatron-SP style) so per-device
+    activation checkpoints stay flat as TP grows."""
+    dp = tuple(a for a in data_axes if a in mesh.axis_names)
+
+    def residual(ndim):
+        if ndim == 3:   # (B, S, D)
+            return P(dp, model_axis if seq_shard else None, None)
+        if ndim == 2:   # (N, D) flat tokens
+            return P(dp, None)
+        return None
+
+    return ShardingRules(mesh, {"residual": residual})

@@ -1,0 +1,166 @@
+"""Parameter / cache / input PartitionSpec rules (FSDP x TP x EP + pod DP).
+
+Mapping (DESIGN.md §5):
+  * ``model`` axis: tensor parallel — attention heads, MLP ff, MoE experts
+    (EP), the classifier vocab (the CCE axis), recurrence width.
+  * ``data`` axis: FSDP/ZeRO-3 — the non-TP dim of every weight is sharded
+    over data; XLA SPMD all-gathers per layer and reduce-scatters grads.
+  * ``pod`` axis (multi-pod): pure DP replicas — parameters replicated,
+    gradients all-reduced across pods.
+
+Every rule degrades gracefully: an axis is applied only if it divides the
+dimension (``_shard_if``), so MQA heads, odd head_dims etc. simply stay
+replicated on that axis instead of failing to lower.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+MODEL_AXIS = "model"
+FSDP_AXIS = "data"
+
+
+def _axsize(mesh, axis):
+    if isinstance(axis, tuple):
+        return int(np.prod([_axsize(mesh, a) for a in axis]))
+    return mesh.shape[axis] if axis in mesh.axis_names else 0
+
+
+def _shard_if(mesh, dim, axis):
+    """axis if it exists in mesh and divides dim, else None."""
+    size = _axsize(mesh, axis)
+    return axis if size and dim % size == 0 else None
+
+
+def _spec2(mesh, shape, a0, a1):
+    return P(_shard_if(mesh, shape[0], a0), _shard_if(mesh, shape[1], a1))
+
+
+def _param_rule(mesh, path_keys, shape, cfg):
+    """Base spec (without the stacked-group axis) for one parameter leaf."""
+    name = path_keys[-1]
+    parent = path_keys[-2] if len(path_keys) > 1 else ""
+    M, F = MODEL_AXIS, FSDP_AXIS
+
+    if name == "embed":
+        # tied embeddings double as the CCE classifier -> vocab-parallel
+        return (_spec2(mesh, shape, M, None) if cfg.tie_embeddings
+                else _spec2(mesh, shape, None, M))
+    if name == "head":
+        return _spec2(mesh, shape, M, None)   # vocab-parallel CCE classifier
+
+    if name in ("wq", "wk", "wv"):
+        return _spec2(mesh, shape, F, M)      # column parallel
+    if name == "wo":
+        return _spec2(mesh, shape, M, F)      # row parallel
+    if name in ("w_up", "w_gate") and parent != "mixer":
+        if len(shape) == 3:                   # MoE experts (E, d, ff)
+            # TP inside each expert over the ff dim (column-parallel; the
+            # gating nonlinearity is elementwise over ff so this is exact).
+            # Chosen over EP-on-E: shape-robust for E that doesn't divide
+            # the axis (qwen2-moe: 60/16) and pairs with the shard_map MoE
+            # block (layers._routed_experts_sharded) whose only collectives
+            # are the Megatron-SP all-gather/reduce-scatter of activations.
+            return P(None, _shard_if(mesh, shape[1], F),
+                     _shard_if(mesh, shape[2], M))
+        return _spec2(mesh, shape, F, M)
+    if name == "w_down":
+        if len(shape) == 3:                   # MoE experts (E, ff, d)
+            return P(None, _shard_if(mesh, shape[1], M),
+                     _shard_if(mesh, shape[2], F))
+        return _spec2(mesh, shape, M, F)
+    if name == "router":
+        return P(*([None] * len(shape)))      # tiny; replicate (read inside
+                                              # the shard_map'd MoE block)
+    if name == "shared_gate":
+        return _spec2(mesh, shape, F, None)
+
+    # rglru
+    if name in ("w_x",):
+        return _spec2(mesh, shape, F, M)
+    if name == "w_out":
+        return _spec2(mesh, shape, M, F)
+    if name in ("w_a", "w_i"):
+        return _spec2(mesh, shape, F, M)
+    if name == "conv_w":
+        return P(None, _shard_if(mesh, shape[1], M))
+    if name == "lam":
+        return P(_shard_if(mesh, shape[0], M))
+
+    # rwkv6
+    if name in ("w_r", "w_k", "w_v", "w_g"):
+        if len(shape) == 2 and shape[0] == shape[1]:
+            return _spec2(mesh, shape, F, M)
+        return _spec2(mesh, shape, F, M)
+    if name == "w_o":
+        return _spec2(mesh, shape, M, F)
+    if name == "decay_A":
+        return _spec2(mesh, shape, F, None)
+    if name == "decay_B":
+        return _spec2(mesh, shape, None, M)
+    if name in ("decay_w0",):
+        return P(_shard_if(mesh, shape[0], M))
+    if name in ("shift_mix", "mix"):
+        return P(None, _shard_if(mesh, shape[1], M))
+
+    # norms, scalars, small params: replicated
+    return P(*([None] * len(shape)))
+
+
+def _path_keys(path):
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_specs(cfg, params, mesh):
+    """Pytree of PartitionSpec matching ``params`` (shapes or arrays).
+
+    Works for the raw parameter tree AND for trees wrapping it (optimizer
+    moments {"m": params, "v": params}): stacked-block detection looks for
+    the "blocks"/"cross" path component anywhere, not just at the root —
+    a wrapper prefix must not silently demote stacked params to the
+    (wrong, often fully-replicated) flat rules.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        keys = _path_keys(path)
+        shape = leaf.shape
+        stacked = "blocks" in keys or "cross" in keys
+        base_shape = shape[1:] if stacked else shape
+        spec = _param_rule(mesh, keys, base_shape, cfg)
+        if stacked:
+            spec = P(None, *spec)
+        out.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def cache_specs(cfg, cache, mesh, data_axes):
+    """Decode-cache specs: batch over data axes; KV head_dim over model
+    (flash-decode style TP — the contraction over head_dim is what SPMD
+    partitions); recurrent states batch-sharded, width over model."""
+    dp = tuple(a for a in data_axes if a in mesh.axis_names)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in flat:
+        keys = _path_keys(path)
+        name = keys[-1]
+        stacked = keys[0] == "groups"   # leading n_groups axis
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        if name == "pos":
+            spec = [None] * len(shape)
+        else:
+            spec = [_shard_if(mesh, shape[0], dp)] + [None] * (len(shape) - 1)
+            if len(shape) >= 2:
+                spec[-1] = _shard_if(mesh, shape[-1], MODEL_AXIS)
+        if stacked:
+            spec = [None] + spec
+        out.append(P(*spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

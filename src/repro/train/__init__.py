@@ -1,0 +1,3 @@
+"""Training loop + checkpoint manager."""
+from repro.train.checkpoint import CheckpointManager  # noqa: F401
+from repro.train.trainer import Trainer, make_train_step  # noqa: F401

@@ -1,0 +1,152 @@
+"""Training loop: jit'd step with gradient accumulation, checkpoint/resume,
+preemption handling, and optional gradient-compression for the DP all-reduce.
+
+The distributed configuration (mesh, param/activation shardings, vocab-
+parallel CCE head) is injected by the launcher (repro.launch.train); this
+module is mesh-agnostic and also runs single-device (examples, tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.train.checkpoint import CheckpointManager
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, loss_fn=None):
+    """Returns step(params, opt_state, batch, step_idx) -> (params, opt,
+    metrics). Gradient accumulation: batch is split into microbatches along
+    the batch axis and grads are averaged with a lax.scan (the scheduling
+    substrate pipeline parallelism would reuse)."""
+
+    def loss_of(params, batch):
+        return T.train_loss(params, cfg, batch, loss_fn=loss_fn)
+
+    def step(params, opt_state, batch, step_idx):
+        b = batch["labels"].shape[0]
+        micro = min(tcfg.microbatch or b, b)   # clamp: micro can't exceed b
+        assert b % micro == 0, (b, micro)
+        n_micro = b // micro
+
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((n_micro, micro) + x.shape[1:]), batch)
+
+            def acc_step(carry, one):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_of)(params, one)
+                return (loss_acc + l,
+                        jax.tree.map(jnp.add, g_acc, g)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros(()), zeros), mb)
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+
+        if tcfg.grad_allreduce_dtype:
+            # gradient compression for the cross-pod all-reduce: cast to the
+            # wire dtype; XLA reduces in that dtype and the optimizer
+            # accumulates back in f32 master statistics.
+            wire = jnp.dtype(tcfg.grad_allreduce_dtype)
+            grads = jax.tree.map(lambda g: g.astype(wire), grads)
+
+        lr = adamw.warmup_cosine(
+            step_idx, base_lr=tcfg.learning_rate,
+            warmup_steps=tcfg.warmup_steps, total_steps=tcfg.total_steps)
+        params, opt_state, om = adamw.adamw_update(
+            grads, opt_state, params, lr=lr, b1=tcfg.beta1, b2=tcfg.beta2,
+            eps=tcfg.eps, weight_decay=tcfg.weight_decay,
+            grad_clip=tcfg.grad_clip)
+        metrics = {"loss": loss, "lr": lr, **om}
+        return params, opt_state, metrics
+
+    return step
+
+
+class Trainer:
+    """Single-process training driver with checkpoint/restart.
+
+    Preemption-safe: SIGTERM/SIGINT triggers a final checkpoint before exit
+    (install_signal_handlers). Restart resumes params, optimizer and the
+    data position (= step, since batches are pure functions of step).
+    """
+
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, *,
+                 data: SyntheticLM | None = None, checkpoint_dir=None,
+                 seq_len: int = 512, global_batch: int = 8, loss_fn=None,
+                 jit: bool = True):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.data = data or SyntheticLM(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=seq_len,
+            global_batch=global_batch, seed=tcfg.seed))
+        self.ckpt = (CheckpointManager(checkpoint_dir, tcfg.keep_checkpoints)
+                     if checkpoint_dir else None)
+        step_fn = make_train_step(cfg, tcfg, loss_fn=loss_fn)
+        self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1)) if jit \
+            else step_fn
+        self._preempted = False
+
+        key = jax.random.PRNGKey(tcfg.seed)
+        self.params = T.init_lm(key, cfg)
+        self.opt_state = adamw.adamw_init(self.params)
+        self.step = 0
+        self.history: list[dict] = []
+        if self.ckpt is not None:
+            self._try_resume()
+
+    def _try_resume(self):
+        tree, step, extra = self.ckpt.restore(
+            {"params": self.params, "opt": self.opt_state})
+        if tree is not None:
+            self.params, self.opt_state = tree["params"], tree["opt"]
+            self.step = step
+            return True
+        return False
+
+    def install_signal_handlers(self):
+        def handler(signum, frame):
+            self._preempted = True
+        signal.signal(signal.SIGTERM, handler)
+        signal.signal(signal.SIGINT, handler)
+
+    def save(self):
+        if self.ckpt is not None:
+            self.ckpt.save(self.step,
+                           {"params": self.params, "opt": self.opt_state},
+                           extra={"time": time.time()})
+
+    def run(self, num_steps: int | None = None, log_every: int = 10,
+            log_fn=print):
+        total = num_steps or self.tcfg.total_steps
+        while self.step < total and not self._preempted:
+            batch = self.data.batch_at(self.step)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch, self.step)
+            self.step += 1
+            if self.step % log_every == 0 or self.step == total:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = self.step
+                self.history.append(m)
+                if log_fn:
+                    log_fn(f"step {self.step:5d} loss {m['loss']:.4f} "
+                           f"lr {m['lr']:.2e} gnorm {m['grad_norm']:.3f}")
+            if (self.ckpt is not None and self.tcfg.checkpoint_every
+                    and self.step % self.tcfg.checkpoint_every == 0):
+                self.save()
+        if self._preempted:
+            self.save()   # preemption-safe final checkpoint
+        return self.history

@@ -1,0 +1,121 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import linear_cross_entropy
+from repro.data.synthetic import (DataConfig, SyntheticLM, pack_documents,
+                                  packed_labels)
+from repro.kernels import CCEConfig, linear_cross_entropy_pallas
+from repro.kernels import ref
+from repro.optim import adamw
+
+
+def _problem(seed, n, d, v):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    E = jax.random.normal(ks[0], (n, d)) * 0.5
+    C = jax.random.normal(ks[1], (v, d)) * 0.5
+    x = jax.random.randint(ks[2], (n,), 0, v)
+    return E, C, x
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), shift=st.floats(-5, 5),
+       n=st.sampled_from([8, 17, 32]), v=st.sampled_from([128, 200, 256]))
+def test_cce_shift_invariance(seed, shift, n, v):
+    """nll is invariant to adding a constant column to the classifier bias
+    structure: shifting ALL logits of a token (adding s to E's projection
+    via C -> logits+s) leaves softmax CE unchanged. We emulate by appending
+    a constant feature."""
+    E, C, x = _problem(seed, n, 16, v)
+    E2 = jnp.concatenate([E, jnp.ones((n, 1))], 1)
+    C2 = jnp.concatenate([C, jnp.full((v, 1), shift)], 1)
+    cfg = CCEConfig(block_n=8, block_v=128)
+    a = linear_cross_entropy_pallas(E2, C2, x, cfg)
+    b = ref.ref_linear_cross_entropy(E, C, x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_cce_vocab_permutation_equivariance(seed):
+    """Permuting the vocabulary (and labels accordingly) leaves the loss
+    unchanged and permutes dC accordingly."""
+    E, C, x = _problem(seed, 16, 16, 128)
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 1), 128)
+    inv = jnp.argsort(perm)
+    cfg = CCEConfig(block_n=8, block_v=128)
+    nll1 = linear_cross_entropy_pallas(E, C, x, cfg)
+    nll2 = linear_cross_entropy_pallas(E, C[perm], inv[x], cfg)
+    np.testing.assert_allclose(np.asarray(nll1), np.asarray(nll2),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_nll_exceeds_label_margin_bound(seed):
+    """0 <= nll and nll >= logsumexp bound: nll_i >= log(1) = 0, with
+    equality only if the label holds all probability mass."""
+    E, C, x = _problem(seed, 24, 16, 128)
+    nll = ref.ref_linear_cross_entropy(E, C, x)
+    assert np.all(np.asarray(nll) >= -1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_impl_equivalence(seed):
+    """All five implementations agree on the mean loss."""
+    E, C, x = _problem(seed, 32, 16, 160)
+    ms = []
+    for impl in ("cce", "cce_jax", "dense", "chunked"):
+        nll = linear_cross_entropy(E, C, x, impl=impl)
+        ms.append(float(jnp.mean(nll)))
+    ms.append(float(linear_cross_entropy(E, C, x, impl="liger",
+                                         reduction="mean")))
+    np.testing.assert_allclose(ms, ms[0], rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(step=st.integers(0, 10**6), shards=st.sampled_from([1, 2, 4, 8]))
+def test_data_determinism_and_sharding(step, shards):
+    """batch_at is pure in step; shards tile the global batch exactly."""
+    data = SyntheticLM(DataConfig(vocab_size=512, seq_len=16,
+                                  global_batch=8, seed=3))
+    b1 = data.batch_at(step)
+    b2 = data.batch_at(step)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    got = np.concatenate([data.shard_batch(b1, i, shards)["tokens"]
+                          for i in range(shards)])
+    assert np.array_equal(got, b1["tokens"])
+
+
+@settings(max_examples=20, deadline=None)
+@given(lengths=st.lists(st.integers(1, 64), min_size=1, max_size=40),
+       seq=st.sampled_from([64, 128]))
+def test_packing_conservation(lengths, seq):
+    """Packing never drops tokens, never overlaps, never exceeds rows."""
+    rows = pack_documents(lengths, seq)
+    placed = sorted(d for row in rows for (d, _, _) in row)
+    assert placed == sorted(range(len(lengths)))
+    for row in rows:
+        spans = sorted((s, s + ln) for (_, s, ln) in row)
+        assert spans[-1][1] <= seq
+        for (a, b), (c, d) in zip(spans, spans[1:]):
+            assert b <= c  # no overlap
+    valid = packed_labels(rows, seq)
+    assert valid.sum() == sum(min(l, seq) - 1 for l in lengths)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), clip=st.floats(0.1, 2.0))
+def test_grad_clip_bounds_norm(seed, clip):
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(seed), (8, 8)) * 5,
+            "b": jax.random.normal(jax.random.PRNGKey(seed + 1), (3,))}
+    clipped, norm = adamw.clip_by_global_norm(tree, clip)
+    new_norm = float(adamw.global_norm(clipped))
+    assert new_norm <= clip * 1.001
+    if float(norm) <= clip:
+        assert abs(new_norm - float(norm)) < 1e-5

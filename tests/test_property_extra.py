@@ -1,0 +1,212 @@
+"""Property-based tests for the system invariants added in the perf work:
+the shard_map/gather-only MoE dispatch, the WKV recurrence, the RG-LRU
+scan, and the distributed log-sum-exp combine used by vocab-parallel CCE.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MoEConfig, SSMConfig
+from repro.kernels import ref
+from repro.models import layers as L
+from repro.models import recurrent as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+_SETTINGS = dict(max_examples=10, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# WKV recurrence: state composition (chunking must be associative).
+# ---------------------------------------------------------------------------
+
+@settings(**_SETTINGS)
+@given(seed=st.integers(0, 2**16), split=st.sampled_from([8, 16, 24]))
+def test_wkv_state_composition(seed, split):
+    """Running [0, split) then [split, S) with the carried state equals one
+    full run — the invariant that makes chunked training and O(1)-state
+    decode (long_500k) the same computation."""
+    B, H, S, hd = 1, 2, 32, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    r, k, v = (jax.random.normal(ks[i], (B, H, S, hd)) for i in range(3))
+    w_log = -jnp.exp(jax.random.normal(ks[3], (B, H, S, hd)) - 2.0)
+    u = jax.random.normal(ks[4], (H, hd)) * 0.5
+    s0 = jnp.zeros((B, H, hd, hd))
+
+    o_full, s_full = ref.ref_wkv(r, k, v, w_log, u, s0)
+    o1, s_mid = ref.ref_wkv(r[:, :, :split], k[:, :, :split],
+                            v[:, :, :split], w_log[:, :, :split], u, s0)
+    o2, s_end = ref.ref_wkv(r[:, :, split:], k[:, :, split:],
+                            v[:, :, split:], w_log[:, :, split:], u, s_mid)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 2)),
+                               np.asarray(o_full), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_end), np.asarray(s_full),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(**_SETTINGS)
+@given(seed=st.integers(0, 2**16), chunk=st.sampled_from([4, 8, 16]))
+def test_wkv_chunked_equals_sequential(seed, chunk):
+    B, H, S, hd = 1, 1, 32, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    r, k, v = (jax.random.normal(ks[i], (B, H, S, hd)) for i in range(3))
+    w_log = -jnp.exp(jax.random.normal(ks[3], (B, H, S, hd)) - 2.0)
+    u = jax.random.normal(ks[4], (H, hd)) * 0.5
+    s0 = jnp.zeros((B, H, hd, hd))
+    o_ref, s_ref = ref.ref_wkv(r, k, v, w_log, u, s0)
+    o, sf = R._rwkv6_chunk(r, k, v, w_log, u, s0, chunk)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(s_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch invariants.
+# ---------------------------------------------------------------------------
+
+def _moe_setup(seed, t=48, d=16, e=4, k=2, cap=8.0):
+    cfg = MoEConfig(num_experts=e, top_k=k, d_ff_expert=24,
+                    capacity_factor=cap)
+    params = L.init_moe(jax.random.PRNGKey(seed), d, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (t, d)) * 0.5
+    return cfg, params, x
+
+
+@settings(**_SETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_moe_dispatch_token_permutation_equivariance(seed):
+    """Routing is per-token: permuting the tokens permutes the outputs
+    (with generous capacity so drop sets are permutation-independent)."""
+    cfg, params, x = _moe_setup(seed)
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 2), x.shape[0])
+    out, _ = L._moe_gather_dispatch(x, params, cfg)
+    out_p, _ = L._moe_gather_dispatch(x[perm], params, cfg)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out[perm]),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(**_SETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_moe_dispatch_matches_dense_topk_oracle(seed):
+    """With capacity >= T the dispatch equals the dense 'every expert on
+    every token, combine top-k' oracle."""
+    cfg, params, x = _moe_setup(seed)
+    out, _ = L._moe_gather_dispatch(x, params, cfg)
+
+    logits = x @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)
+    gate = jnp.einsum("td,edf->tef", x, params["w_gate"])
+    up = jnp.einsum("td,edf->tef", x, params["w_up"])
+    all_out = jnp.einsum("tef,efd->ted", jax.nn.silu(gate) * up,
+                         params["w_down"])   # (T, E, d)
+    dense = jnp.einsum("tk,tkd->td", top_p,
+                       jnp.take_along_axis(
+                           all_out, top_e[:, :, None], axis=1))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               atol=1e-4, rtol=1e-4)
+
+
+def _scatter_dispatch_oracle(x, params, cfg):
+    """The original scatter-based dispatch (plain jnp autodiff transpose)
+    — ground truth for the gather-only custom VJPs, drops included."""
+    t, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = min(max(1, int(t * k * cfg.capacity_factor / e)), t)
+    logits = x.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)
+    flat_e = top_e.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sp = flat_e[order], flat_t[order], top_p.reshape(-1)[order]
+    counts = jnp.bincount(se, length=e)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(t * k) - starts[se]
+    keep = pos < cap
+    dest = jnp.where(keep, se * cap + pos, e * cap)
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[dest].set(x[st])
+    h = buf[:-1].reshape(e, cap, d)
+    gate = jnp.einsum("ecd,edf->ecf", h, params["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", h, params["w_up"])
+    out_e = jnp.einsum("ecf,efd->ecd", jax.nn.silu(gate) * up,
+                       params["w_down"]).reshape(e * cap, d)
+    out_e = jnp.concatenate([out_e, jnp.zeros((1, d), out_e.dtype)], 0)
+    contrib = out_e[dest] * (sp * keep).astype(out_e.dtype)[:, None]
+    return jnp.zeros((t, d), x.dtype).at[st].add(contrib.astype(x.dtype))
+
+
+@settings(**_SETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_moe_permutation_vjps_match_plain_autodiff(seed):
+    """The gather-only custom VJPs must equal what plain jnp indexing
+    autodiff (scatter-add transpose) produces — including under tight
+    capacity with dropped tokens."""
+    cfg, params, x = _moe_setup(seed, cap=1.2)   # tight capacity: with drops
+    g = jax.random.normal(jax.random.PRNGKey(seed + 3), x.shape)
+
+    def loss_new(x, params):
+        out, _ = L._moe_gather_dispatch(x, params, cfg)
+        return jnp.sum(out * g)
+
+    def loss_ref(x, params):
+        return jnp.sum(_scatter_dispatch_oracle(x, params, cfg) * g)
+
+    gx_new, gp_new = jax.grad(loss_new, argnums=(0, 1))(x, params)
+    gx_ref, gp_ref = jax.grad(loss_ref, argnums=(0, 1))(x, params)
+    np.testing.assert_allclose(np.asarray(gx_new), np.asarray(gx_ref),
+                               atol=1e-5, rtol=1e-5)
+    for key in ("w_gate", "w_up", "w_down", "router"):
+        np.testing.assert_allclose(np.asarray(gp_new[key]),
+                                   np.asarray(gp_ref[key]),
+                                   atol=1e-5, rtol=1e-5, err_msg=key)
+
+
+# ---------------------------------------------------------------------------
+# Distributed LSE combine (the vocab-parallel CCE reduction).
+# ---------------------------------------------------------------------------
+
+@settings(**_SETTINGS)
+@given(seed=st.integers(0, 2**16), shards=st.sampled_from([2, 4, 8]))
+def test_sharded_logsumexp_combine(seed, shards):
+    """lse = m + log(sum_i exp(lse_i - m)) over arbitrary vocab splits —
+    the exact combine vocab_parallel uses across the model axis."""
+    n, v = 16, 64
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (n, v)) * 3.0
+    full = jax.scipy.special.logsumexp(a, axis=1)
+    parts = jnp.stack([jax.scipy.special.logsumexp(p, axis=1)
+                       for p in jnp.split(a, shards, axis=1)])
+    m = jnp.max(parts, axis=0)
+    combined = m + jnp.log(jnp.sum(jnp.exp(parts - m), axis=0))
+    np.testing.assert_allclose(np.asarray(combined), np.asarray(full),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU: associative scan equals the sequential recurrence.
+# ---------------------------------------------------------------------------
+
+@settings(**_SETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_rglru_scan_matches_sequential(seed):
+    B, S, W = 2, 24, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    xt = jax.random.normal(ks[0], (B, S, W))
+    a = jax.nn.sigmoid(jax.random.normal(ks[1], (B, S, W)))  # decay in (0,1)
+    h_scan = R._rglru_scan(xt, a)
+    h = jnp.zeros((B, W))
+    hs = []
+    for t in range(S):
+        h = a[:, t] * h + jnp.sqrt(jnp.maximum(1 - a[:, t] ** 2, 1e-12)) \
+            * xt[:, t]
+        hs.append(h)
+    np.testing.assert_allclose(np.asarray(h_scan),
+                               np.asarray(jnp.stack(hs, 1)),
+                               atol=1e-5, rtol=1e-5)
