@@ -1,0 +1,98 @@
+"""Memory class of every ``repro.losses`` registry entry vs the dense head.
+
+For each registered loss this lowers (AOT, no execution) the value-and-grad
+computation at a large-vocabulary size and checks, via
+``repro.analysis.hlo.array_shape_census`` on the optimized HLO, that **no
+N×V-element buffer exists anywhere in the module** — i.e. the loss lives in
+CCE's O(N·D + V·D) memory class. The dense baseline is lowered at the same
+size as the control: its census is dominated by exactly that N×V buffer.
+
+Also reports XLA's compiled temp+output allocation for the same
+computations (from the one AOT compile per loss).
+
+Run: PYTHONPATH=src python -m benchmarks.loss_zoo_memory [--paper]
+  default size: N=4096, D=512, V=65536    (fast CI lowering;
+                chosen so 4*max(N.D, V.D) << N.V and the verdict is sharp)
+  --paper:      N=8192, D=2304, V=256000  (paper Table-1 configuration)
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.analysis import hlo as hlo_an
+from repro.losses import get_loss, list_losses
+
+# per-loss hyper-parameters exercised by the benchmark (defaults otherwise)
+KWARGS = {"z_loss": {"z_weight": 1e-4}, "focal": {"gamma": 2.0},
+          "label_smoothing": {"eps": 0.1}}
+
+
+def _value_and_grad_fn(loss_name, impl, n, d, v):
+    loss = get_loss(loss_name, **KWARGS.get(loss_name, {}))
+
+    if loss_name == "seq_logprob":
+        def f(E, C, x):  # scoring: grad of the summed sequence scores
+            return jnp.sum(loss(E.reshape(8, n // 8, d), C,
+                                x.reshape(8, n // 8), impl=impl))
+    else:
+        def f(E, C, x):
+            return loss(E, C, x, impl=impl, reduction="mean")
+
+    return jax.value_and_grad(f, argnums=(0, 1))
+
+
+def _lowered_text(fn, n, d, v, dtype=jnp.bfloat16):
+    E = jax.ShapeDtypeStruct((n, d), dtype)
+    C = jax.ShapeDtypeStruct((v, d), dtype)
+    x = jax.ShapeDtypeStruct((n,), jnp.int32)
+    comp = jax.jit(fn).lower(E, C, x).compile()
+    return comp, comp.as_text()
+
+
+def run(n=4096, d=512, v=65536):
+    nv = n * v
+    # everything a CCE-class loss may legitimately hold: activations/grads
+    # (N·D), classifier/grad (V·D), plus the scan twin's per-block stacked
+    # dC (again V·D). 4x headroom still sits orders of magnitude below N·V.
+    budget = 4 * max(n * d, v * d)
+    print(f"# loss_zoo_memory: N={n} D={d} V={v}  "
+          f"NxV={nv:.3g} elems  budget={budget:.3g} elems")
+
+    ok = True
+    for name in list_losses():
+        comp, text = _lowered_text(_value_and_grad_fn(name, "cce_jax",
+                                                      n, d, v), n, d, v)
+        top = hlo_an.array_shape_census(text, top=1)[0]
+        m = comp.memory_analysis()   # same compile: no second lowering
+        live = m.temp_size_in_bytes + m.output_size_in_bytes
+        in_class = top[0] <= budget
+        ok &= in_class
+        row(f"loss_zoo/{name}/cce_jax", 0,
+            f"largest={top[1]}({top[0]:.3g} elems) "
+            f"live={live/1e6:.0f}MB "
+            f"{'O(N.D+V.D) OK' if in_class else 'N×V MATERIALIZED!'}")
+
+    # control: the dense head at the same size must show the N×V buffer
+    _, text = _lowered_text(_value_and_grad_fn("nll", "dense", n, d, v),
+                            n, d, v)
+    top = hlo_an.array_shape_census(text, top=1)[0]
+    row("loss_zoo/nll/dense(control)", 0,
+        f"largest={top[1]}({top[0]:.3g} elems) "
+        f"{'has NxV as expected' if top[0] >= nv else 'UNEXPECTEDLY SMALL'}")
+
+    print(f"# memory-class verdict: "
+          f"{'ALL LOSSES IN CCE CLASS' if ok else 'FAILURES ABOVE'}")
+    return ok
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    import sys
+    ap.add_argument("--paper", action="store_true",
+                    help="paper Table-1 sizes (slower lowering)")
+    args = ap.parse_args()
+    ok = run(n=8192, d=2304, v=256000) if args.paper else run()
+    sys.exit(0 if ok else 1)

@@ -11,11 +11,12 @@ import traceback
 
 def main() -> None:
     from benchmarks import (fig1_model_memory, fig3_softmax_sparsity,
-                            fig4_convergence, table1_loss_memory,
-                            tableA1_ignored_tokens,
+                            fig4_convergence, loss_zoo_memory,
+                            table1_loss_memory, tableA1_ignored_tokens,
                             tableA2_backward_breakdown, tableA3_more_models)
     modules = [
         ("table1", table1_loss_memory),
+        ("loss_zoo", loss_zoo_memory),
         ("fig1_tableA4", fig1_model_memory),
         ("fig3", fig3_softmax_sparsity),
         ("fig4", fig4_convergence),

@@ -9,12 +9,24 @@ it resume), and the CCE loss head.
 Run:     PYTHONPATH=src python examples/train_lm.py
 Faster:  PYTHONPATH=src python examples/train_lm.py --steps 50 --tiny
 Resume:  re-run the same command; it restores from --ckpt automatically.
+
+The training loss is any entry of the ``repro.losses`` registry — all of
+them ride the CCE (lse, pick[, sum]) primitive, so none re-introduce the
+N×V logit matrix:
+
+  z-loss (PaLM-style logit-norm regularizer):
+    PYTHONPATH=src python examples/train_lm.py --tiny --steps 50 \\
+        --loss z_loss --loss-kwargs '{"z_weight": 1e-4}'
+  label smoothing (exercises the kernel's third sum-logits output):
+    PYTHONPATH=src python examples/train_lm.py --tiny --steps 50 \\
+        --loss label_smoothing --loss-kwargs '{"eps": 0.1}'
 """
 
 import argparse
 import dataclasses
 
 from repro.configs.base import ModelConfig, TrainConfig
+from repro.losses import LossConfig, list_losses
 from repro.train import Trainer
 
 
@@ -43,17 +55,25 @@ def main():
     ap.add_argument("--ckpt", default="/tmp/repro_train_lm_ckpt")
     ap.add_argument("--tiny", action="store_true",
                     help="4L/256d model for a fast smoke run")
+    ap.add_argument("--loss", default="nll",
+                    help=f"repro.losses registry entry; one of "
+                         f"{list_losses()}")
+    ap.add_argument("--loss-kwargs", default="{}",
+                    help='JSON hyper-parameters for --loss')
     args = ap.parse_args()
 
     cfg = model_tiny() if args.tiny else model_100m()
     print(f"model: {cfg.name}  params ~= {cfg.param_count()/1e6:.0f}M  "
-          f"|V|={cfg.vocab_size}  loss_impl={cfg.loss_impl}")
+          f"|V|={cfg.vocab_size}  loss_impl={cfg.loss_impl}  "
+          f"loss={args.loss}")
 
+    loss_cfg = LossConfig.from_json(args.loss, args.loss_kwargs)
     tcfg = TrainConfig(
         learning_rate=args.lr, total_steps=args.steps,
         warmup_steps=max(args.steps // 10, 1),
         microbatch=args.microbatch, checkpoint_every=50,
-        grad_clip=1.0, seed=0)
+        grad_clip=1.0, seed=0,
+        loss=loss_cfg.name, loss_kwargs=loss_cfg.kwargs)
 
     tr = Trainer(cfg, tcfg, checkpoint_dir=args.ckpt, seq_len=args.seq,
                  global_batch=args.batch)

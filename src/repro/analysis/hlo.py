@@ -68,6 +68,28 @@ def _shape_elems(type_str: str):
     return m.group(1), dims
 
 
+def array_shape_census(hlo_text: str, top: int = 8) -> list:
+    """Largest *distinct* array shapes in the module: [(elems, "dtype[dims]")]
+    sorted descending.
+
+    A cheap, layout-independent detector for accidental materialization:
+    a loss in CCE's O(N·D + V·D) memory class must not contain any
+    N×V-element buffer anywhere in its optimized HLO, while the dense
+    baseline always does (``benchmarks/loss_zoo_memory.py``).
+    """
+    seen: dict[str, float] = {}
+    for dtype, dims in _SHAPE_RE.findall(hlo_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        seen[f"{dtype}[{dims}]"] = n
+    return sorted(((n, k) for k, n in seen.items()),
+                  key=lambda p: -p[0])[:top]
+
+
 @dataclasses.dataclass
 class Instr:
     name: str

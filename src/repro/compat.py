@@ -1,0 +1,65 @@
+"""Cross-version JAX compatibility shims.
+
+The repo targets the modern JAX surface (``jax.shard_map``, explicit
+``AxisType`` meshes, the varying-manual-axes checker and ``jax.lax.pcast``)
+but must also run on older releases where those names either live elsewhere
+(``jax.experimental.shard_map``), take different keywords (``check_rep`` vs
+``check_vma``) or do not exist at all (``pcast``/``AxisType`` — the vma
+system itself is absent, so there is nothing to declare and the shims are
+no-ops there).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with graceful fallback to the experimental API.
+
+    On old JAX the vma checker does not exist; ``check_vma`` maps onto
+    ``check_rep=False`` so that shard_map's pessimistic transpose inserts
+    the replication psums itself — correct (if occasionally redundant)
+    gradients on every version.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def pcast_varying(x, axes):
+    """Mark ``x`` device-varying over mesh ``axes`` where the vma system
+    exists; identity elsewhere (old shard_map treats everything as varying).
+    """
+    pcast = getattr(jax.lax, "pcast", None)
+    if pcast is None:
+        return x
+    return pcast(x, tuple(axes), to="varying")
+
+
+def _axis_types(n):
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the concept exists."""
+    return jax.make_mesh(shape, axes, **_axis_types(len(axes)))
+
+
+def mesh_from_devices(devices, shape, axes):
+    """Explicit-device Mesh (e.g. a subset of forced host devices)."""
+    from jax.sharding import Mesh
+    dev = np.asarray(devices).reshape(shape)
+    try:
+        return Mesh(dev, axes, **_axis_types(len(axes)))
+    except TypeError:  # old Mesh: no axis_types kwarg
+        return Mesh(dev, axes)

@@ -160,3 +160,12 @@ class TrainConfig:
     keep_checkpoints: int = 3
     seed: int = 0
     grad_allreduce_dtype: Optional[str] = None  # e.g. "bfloat16" compression
+    # Training loss from the repro.losses registry (nll, z_loss, focal,
+    # weighted, label_smoothing, ...) with its hyper-parameters as sorted
+    # (key, value) pairs — hashable, so TrainConfig stays a valid static
+    # arg. Use loss_options() to read them back as a dict.
+    loss: str = "nll"
+    loss_kwargs: tuple = ()
+
+    def loss_options(self) -> dict:
+        return dict(self.loss_kwargs)

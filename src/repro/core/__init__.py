@@ -1,4 +1,6 @@
-"""Core CCE API — the paper's primary contribution as composable JAX ops."""
+"""Core CCE API — the paper's primary contribution as composable JAX ops.
+
+The loss *family* built on these ops lives in :mod:`repro.losses`."""
 
 from repro.core.cce import (  # noqa: F401
     CCEConfig,

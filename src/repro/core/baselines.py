@@ -45,6 +45,29 @@ def dense_linear_cross_entropy(E, C, x, softcap=None):
     return _dense_nll(E, C, x, softcap).reshape(orig_shape)
 
 
+def dense_lse_pick(E, C, x, softcap=None, with_sum=False):
+    """(lse, pick[, sum_logits]) from the materialized (N, V) logit matrix.
+
+    The O(N·V) reference twin of the CCE primitive: differentiable by plain
+    autodiff, used to gradcheck every loss in :mod:`repro.losses` and as the
+    ``impl="dense"`` dispatch of ``repro.core.lse_and_pick``.
+    """
+    orig_shape = x.shape
+    if E.ndim == 3:
+        E, x = E.reshape(-1, E.shape[-1]), x.reshape(-1)
+    logits = jax.lax.dot_general(E, C, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    logits = apply_softcap(logits, softcap)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    safe_x = jnp.where(x == IGNORE_INDEX, 0, x)
+    pick = jnp.take_along_axis(logits, safe_x[:, None], axis=-1)[:, 0]
+    if not with_sum:
+        return lse.reshape(orig_shape), pick.reshape(orig_shape)
+    zsum = jnp.sum(logits, axis=-1)
+    return (lse.reshape(orig_shape), pick.reshape(orig_shape),
+            zsum.reshape(orig_shape))
+
+
 def chunked_linear_cross_entropy(E, C, x, softcap=None, num_chunks: int = 8):
     """Per-token NLL in N-chunks (Torch-Tune style). ``jax.checkpoint`` keeps
     the backward's live logits to one chunk as well."""
@@ -121,7 +144,9 @@ def _liger_vjp_fwd(E, C, x, softcap, num_chunks):
 
 def _liger_vjp_bwd(softcap, num_chunks, residuals, g):
     de, dc = residuals
-    return g * de, g * dc, None
+    # g (f32 scalar) * bf16 residual promotes to f32; cotangents must keep
+    # the primal dtype or custom_vjp rejects them on bf16 models.
+    return ((g * de).astype(de.dtype), (g * dc).astype(dc.dtype), None)
 
 
 _liger_loss.defvjp(_liger_vjp_fwd, _liger_vjp_bwd)

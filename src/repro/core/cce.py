@@ -13,6 +13,12 @@
   impl="auto"       "cce" on TPU, "cce_jax" elsewhere.
 
 Reductions: "none" (per-token), "mean" (over non-ignored tokens), "sum".
+
+NLL is only one member of the loss family built on the ``lse_and_pick``
+primitive: see :mod:`repro.losses` for the registry of memory-efficient
+vocabulary losses (z-loss, focal, label smoothing, per-token weighting,
+sequence scoring) — ``repro.losses.get_loss(name, **kw)`` — all of which
+inherit CCE's O(N·D + V·D) memory class through this module.
 """
 
 from __future__ import annotations
@@ -82,16 +88,31 @@ def linear_cross_entropy(E, C, x, *, impl: str = "auto",
 
 
 def lse_and_pick(E, C, x, *, impl: str = "auto",
-                 cfg: CCEConfig | None = None):
-    """The (lse, pick) primitive — building block for custom losses and the
-    vocab-parallel combination."""
+                 cfg: CCEConfig | None = None,
+                 with_sum_logits: bool = False):
+    """The (lse, pick[, sum_logits]) primitive — building block for the
+    loss family in :mod:`repro.losses` and the vocab-parallel combination.
+
+    ``with_sum_logits=True`` requests the third output (per-token sum of
+    softcapped logits over the vocabulary, e.g. for label smoothing); it is
+    a static flag, so the two-output path compiles no dead sum compute.
+    ``impl="dense"`` materializes the (N, V) logit matrix — the O(N·V)
+    reference twin the loss tests gradcheck against.
+    """
     if impl == "auto":
         import jax
         impl = "cce" if jax.default_backend() == "tpu" else "cce_jax"
     cfg = cfg or CCEConfig()
     if impl == "cce":
+        if with_sum_logits:
+            return kernel_ops.lse_pick_sum_pallas(E, C, x, cfg)
         return kernel_ops.lse_and_pick_pallas(E, C, x, cfg)
     if impl == "cce_jax":
+        if with_sum_logits:
+            return cce_jax.lse_pick_sum_jax(E, C, x, cfg)
         return cce_jax.lse_and_pick_jax(E, C, x, cfg)
-    raise ValueError(f"lse_and_pick supports impl in ('cce','cce_jax'), "
-                     f"got {impl!r}")
+    if impl == "dense":
+        return baselines.dense_lse_pick(E, C, x, cfg.softcap,
+                                        with_sum=with_sum_logits)
+    raise ValueError(f"lse_and_pick supports impl in ('cce', 'cce_jax', "
+                     f"'dense'), got {impl!r}")

@@ -60,12 +60,12 @@ def _tile(E, cb, softcap):
     return apply_softcap(a, softcap)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _lse_pick_scan(cfg: CCEConfig, E, C, x):
-    return _fwd_impl(cfg, E, C, x)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _lse_pick_scan(cfg: CCEConfig, want_sum: bool, E, C, x):
+    return _fwd_impl(cfg, want_sum, E, C, x)
 
 
-def _fwd_impl(cfg, E, C, x):
+def _fwd_impl(cfg, want_sum, E, C, x):
     n_tokens, _ = E.shape
     vocab = C.shape[0]
     block_v = cfg.block_v or _pick_block_v(vocab, DEFAULT_BLOCK_V)
@@ -74,35 +74,42 @@ def _fwd_impl(cfg, E, C, x):
     labels = x[:, None]
 
     def step(carry, inp):
-        m, s, p = carry
+        m, s, p, z = carry
         cb, vstart = inp
         a = _tile(E, cb, cfg.softcap)
         col = vstart + jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+        if want_sum:
+            # per-token sum of (capped) logits — accumulated pre the -inf
+            # mask (padded columns contribute 0, not -inf).
+            z = z + jnp.sum(jnp.where(col < vocab, a, 0.0), axis=1)
         a = jnp.where(col < vocab, a, -jnp.inf)
         p = p + jnp.sum(jnp.where(col == labels, a, 0.0), axis=1)
         bmax = jnp.max(a, axis=1)
         m_new = jnp.maximum(m, bmax)
         m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
         s = s * jnp.exp(m - m_safe) + jnp.sum(jnp.exp(a - m_safe[:, None]), 1)
-        return (m_new, s, p), None
+        return (m_new, s, p, z), None
 
     # Derive the init from E *and* C so it inherits both varying-axis types
     # when this runs inside shard_map (vocab-parallel CCE: E varies over the
     # token axes, C over the vocab axis) — plain constants would not.
     zero_n = (E[:, 0] * 0 + C[0, 0] * 0).astype(jnp.float32)
-    init = (zero_n - jnp.inf, zero_n, zero_n)
-    (m, s, p), _ = jax.lax.scan(step, init, (cb_all, vstarts))
+    init = (zero_n - jnp.inf, zero_n, zero_n, zero_n)
+    (m, s, p, z), _ = jax.lax.scan(step, init, (cb_all, vstarts))
+    if want_sum:
+        return m + jnp.log(s), p, z
     return m + jnp.log(s), p
 
 
-def _vjp_fwd(cfg, E, C, x):
-    lse, pick = _fwd_impl(cfg, E, C, x)
-    return (lse, pick), (E, C, x, lse)
+def _vjp_fwd(cfg, want_sum, E, C, x):
+    outs = _fwd_impl(cfg, want_sum, E, C, x)
+    return outs, (E, C, x, outs[0])
 
 
-def _vjp_bwd(cfg, residuals, cotangents):
+def _vjp_bwd(cfg, want_sum, residuals, cotangents):
     E, C, x, lse = residuals
-    g_lse, g_pick = cotangents
+    g_lse, g_pick = cotangents[0], cotangents[1]
+    gz = cotangents[2].astype(jnp.float32)[:, None] if want_sum else None
     n_tokens, d = E.shape
     vocab = C.shape[0]
     block_v = cfg.block_v or _pick_block_v(vocab, DEFAULT_BLOCK_V)
@@ -127,6 +134,8 @@ def _vjp_bwd(cfg, residuals, cotangents):
         s = jnp.where(valid, jnp.exp(a_capped - lse[:, None]), 0.0)
         onehot = jnp.where((col == labels) & valid, 1.0, 0.0)
         dz = gl * s + gp * onehot
+        if gz is not None:
+            dz = dz + gz * jnp.where(valid, 1.0, 0.0)
         if dcap is not None:
             dz = dz * dcap
         de_acc = de_acc + jnp.dot(dz, cb.astype(jnp.float32),
@@ -145,16 +154,27 @@ def _vjp_bwd(cfg, residuals, cotangents):
 _lse_pick_scan.defvjp(_vjp_fwd, _vjp_bwd)
 
 
-def lse_and_pick_jax(E, C, x, cfg: CCEConfig | None = None, **overrides):
-    """(lse, pick) via the portable scan implementation (shapes like x)."""
-    cfg = dataclasses.replace(cfg or CCEConfig(), **overrides)
+def _flatten_call(E, C, x, cfg, want_sum):
     orig_shape = x.shape
     if E.ndim == 3:
         E = E.reshape(-1, E.shape[-1])
         x = x.reshape(-1)
     safe_x = jnp.where(x == IGNORE_INDEX, 0, x).astype(jnp.int32)
-    lse, pick = _lse_pick_scan(cfg, E, C, safe_x)
-    return lse.reshape(orig_shape), pick.reshape(orig_shape)
+    outs = _lse_pick_scan(cfg, want_sum, E, C, safe_x)
+    return tuple(o.reshape(orig_shape) for o in outs)
+
+
+def lse_and_pick_jax(E, C, x, cfg: CCEConfig | None = None, **overrides):
+    """(lse, pick) via the portable scan implementation (shapes like x)."""
+    cfg = dataclasses.replace(cfg or CCEConfig(), **overrides)
+    return _flatten_call(E, C, x, cfg, False)
+
+
+def lse_pick_sum_jax(E, C, x, cfg: CCEConfig | None = None, **overrides):
+    """(lse, pick, sum_logits) via the portable scan twin — same third
+    output as :func:`repro.kernels.ops.lse_pick_sum_pallas`."""
+    cfg = dataclasses.replace(cfg or CCEConfig(), **overrides)
+    return _flatten_call(E, C, x, cfg, True)
 
 
 def linear_cross_entropy_jax(E, C, x, cfg: CCEConfig | None = None,

@@ -4,12 +4,15 @@ Beyond-paper extension (DESIGN.md §3): the paper evaluates CCE on a single
 GPU with a replicated classifier. At pod scale the classifier C (|V|×D, up
 to 256k×4k ≈ 2 GB bf16) is sharded over the ``model`` mesh axis. Each shard
 computes a *local* (lse, pick) over its vocabulary slice with the CCE
-primitive; the global combine needs only two O(N) collectives:
+primitive; the global combine needs only O(N) collectives:
 
     pick  = psum_over_shards(local pick masked to the owning shard)
     lse   = m + log( psum_over_shards( exp(local_lse - m) ) ),
     m     = pmax_over_shards(local_lse)            (stop-gradient: LSE is
                                                     mathematically m-free)
+    sum_logits = psum_over_shards(local sum_logits)   (optional third output
+                                                       — plain sum, so the
+                                                       combine is one psum)
 
 Compare: a Megatron-style vocab-parallel CE materializes the (N, |V|/tp)
 logit shard in HBM; CCE never does. Wire bytes stay O(N) either way — CCE
@@ -19,7 +22,9 @@ Tokens are sharded over the data axes (sequence/data parallel): the loss is
 token-local, so composing the two costs nothing extra. Autodiff flows
 through psum/pmax, and the local primitive's custom VJP receives exactly the
 per-shard cotangents (softmax weights of the global LSE) — no bespoke
-backward is needed.
+backward is needed. Because the whole loss family in :mod:`repro.losses` is
+a function of the global ``(lse, pick[, sum_logits])``, every registry loss
+distributes through this module unchanged.
 """
 
 from __future__ import annotations
@@ -28,13 +33,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import cce as cce_api
 from repro.kernels.ops import CCEConfig
 from repro.kernels.ref import IGNORE_INDEX
 
 
 def _local_lse_pick(E_l, C_l, x_l, vocab_axis, token_axes, impl, cfg,
-                    use_vma):
+                    use_vma, with_sum):
     """Per-device body: local CCE over this device's vocab shard."""
     if use_vma:
         # E/x arrive replicated over the vocab axis and C replicated over the
@@ -44,14 +50,15 @@ def _local_lse_pick(E_l, C_l, x_l, vocab_axis, token_axes, impl, cfg,
         # vocab-slice) partial of dE and dC. Under check_vma=False (the
         # Pallas-interpret path) shard_map's pessimistic transpose inserts
         # the same psums itself.
-        E_l = jax.lax.pcast(E_l, (vocab_axis,), to="varying")
-        x_l = jax.lax.pcast(x_l, (vocab_axis,), to="varying")
-        C_l = jax.lax.pcast(C_l, tuple(token_axes), to="varying")
+        E_l = compat.pcast_varying(E_l, (vocab_axis,))
+        x_l = compat.pcast_varying(x_l, (vocab_axis,))
+        C_l = compat.pcast_varying(C_l, tuple(token_axes))
     idx = jax.lax.axis_index(vocab_axis)
     v_local = C_l.shape[0]
     lo = idx * v_local
     in_range = (x_l >= lo) & (x_l < lo + v_local)
     x_loc = jnp.where(in_range, x_l - lo, 0)
+    zsum_l = None
     if impl == "dense":
         # Megatron-style vocab-parallel CE baseline: the (N_loc, V_loc)
         # logit shard IS materialized (the O(N·|V|/tp) object CCE removes).
@@ -62,23 +69,33 @@ def _local_lse_pick(E_l, C_l, x_l, vocab_axis, token_axes, impl, cfg,
             a = cfg.softcap * jnp.tanh(a / cfg.softcap)
         lse_l = jax.scipy.special.logsumexp(a, axis=1)
         pick_l = jnp.take_along_axis(a, x_loc[:, None], axis=1)[:, 0]
+        if with_sum:
+            zsum_l = jnp.sum(a, axis=1)
     else:
-        lse_l, pick_l = cce_api.lse_and_pick(E_l, C_l, x_loc, impl=impl,
-                                             cfg=cfg)
+        out = cce_api.lse_and_pick(E_l, C_l, x_loc, impl=impl, cfg=cfg,
+                                   with_sum_logits=with_sum)
+        lse_l, pick_l = out[0], out[1]
+        if with_sum:
+            zsum_l = out[2]
 
     pick = jax.lax.psum(jnp.where(in_range, pick_l, 0.0), vocab_axis)
     # stop_gradient *before* pmax (no diff rule) — LSE is mathematically
     # independent of the max-shift m, so this is exact.
     m = jax.lax.pmax(jax.lax.stop_gradient(lse_l), vocab_axis)
     lse = m + jnp.log(jax.lax.psum(jnp.exp(lse_l - m), vocab_axis))
-    return lse, pick
+    if not with_sum:
+        return lse, pick
+    # sum of logits is linear over the vocab partition: one psum.
+    zsum = jax.lax.psum(zsum_l, vocab_axis)
+    return lse, pick, zsum
 
 
 def vocab_parallel_lse_pick(E, C, x, *, mesh, vocab_axis: str = "model",
                             token_axes=("data",), impl: str = "auto",
-                            cfg: CCEConfig | None = None):
-    """(lse, pick) with C sharded over ``vocab_axis`` and tokens sharded over
-    ``token_axes``. E: (N, D), C: (V, D), x: (N,).
+                            cfg: CCEConfig | None = None,
+                            with_sum_logits: bool = False):
+    """(lse, pick[, sum_logits]) with C sharded over ``vocab_axis`` and
+    tokens sharded over ``token_axes``. E: (N, D), C: (V, D), x: (N,).
     """
     cfg = cfg or CCEConfig()
     token_spec = P(tuple(token_axes))
@@ -91,12 +108,13 @@ def vocab_parallel_lse_pick(E, C, x, *, mesh, vocab_axis: str = "model",
 
     def f(E_l, C_l, x_l):
         return _local_lse_pick(E_l, C_l, x_l, vocab_axis, token_axes, impl,
-                               cfg, use_vma)
+                               cfg, use_vma, with_sum_logits)
 
-    return jax.shard_map(
+    n_out = 3 if with_sum_logits else 2
+    return compat.shard_map(
         f, mesh=mesh,
         in_specs=(P(tuple(token_axes), None), P(vocab_axis, None), token_spec),
-        out_specs=(token_spec, token_spec),
+        out_specs=(token_spec,) * n_out,
         check_vma=use_vma,
     )(E, C, x)
 

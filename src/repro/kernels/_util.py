@@ -4,6 +4,21 @@ from __future__ import annotations
 
 import jax
 
+# ``jax.typeof`` and avals with a ``vma`` field only exist on newer JAX
+# releases (the explicit varying-manual-axes machinery). On older JAX the
+# checker that needs the annotation does not exist either, so the empty
+# set is both the only expressible and the correct answer.
+_TYPEOF = getattr(jax, "typeof", None)
+
+
+def compiler_params(**kwargs):
+    """TPU compiler params across JAX versions (renamed TPUCompilerParams ->
+    CompilerParams upstream)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)
+
 
 def out_vma(*arrays) -> frozenset:
     """Union of the inputs' varying-manual-axes types.
@@ -14,12 +29,16 @@ def out_vma(*arrays) -> frozenset:
     set, which is equally valid.
     """
     vma: set = set()
-    for a in arrays:
-        t = jax.typeof(a)
-        vma |= set(getattr(t, "vma", ()) or ())
+    if _TYPEOF is not None:
+        for a in arrays:
+            t = _TYPEOF(a)
+            vma |= set(getattr(t, "vma", ()) or ())
     return frozenset(vma)
 
 
 def sds(shape, dtype, *arrays) -> jax.ShapeDtypeStruct:
     """ShapeDtypeStruct carrying the vma union of ``arrays``."""
-    return jax.ShapeDtypeStruct(shape, dtype, vma=out_vma(*arrays))
+    vma = out_vma(*arrays)
+    if not vma:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype, vma=vma)

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _util
 from repro.kernels._util import sds
 
 DEFAULT_FILTER_EPS = 2.0 ** -12
@@ -57,17 +58,21 @@ def _zero_padded_rows(tile, start, limit):
 
 
 def _grad_tile(e, c, labels, lse, g_lse, g_pick, *, softcap, vocab, v_start,
-               n_start, n_tokens):
+               n_start, n_tokens, g_sum=None):
     """Recompute the logit tile and return (dz, block_live).
 
-    The forward primitive is ``(lse_i, pick_i)``; this tile computes the
-    gradient w.r.t. the raw logits for arbitrary upstream cotangents:
+    The forward primitive is ``(lse_i, pick_i[, sum_logits_i])``; this tile
+    computes the gradient w.r.t. the raw logits for arbitrary upstream
+    cotangents:
 
-        dz[i, j] = g_lse_i * S[i, j] + g_pick_i * 1[j == x_i]      (* dcap)
+        dz[i, j] = g_lse_i * S[i, j] + g_pick_i * 1[j == x_i]
+                   (+ g_sum_i)                                     (* dcap)
 
     For the NLL loss (nll = lse - pick) autodiff supplies g_lse = g and
     g_pick = -g, recovering the paper's ``(S - onehot) * g``. The block-skip
-    statistic stays the upstream-independent ``max |S - onehot|`` (Alg. 4).
+    statistic stays the upstream-independent ``max |S - onehot|`` (Alg. 4);
+    a non-None ``g_sum`` contributes a *dense* gradient that the statistic
+    cannot see, so the caller must disable filtering when passing it.
 
     Padded rows of e/c (ragged N or V edges) must be zeroed by the caller:
     Pallas pads out-of-bounds tiles with undefined values, and 0*NaN would
@@ -98,6 +103,9 @@ def _grad_tile(e, c, labels, lse, g_lse, g_pick, *, softcap, vocab, v_start,
     g_lse = jnp.where(g_rows < n_tokens, g_lse, 0.0)
     g_pick = jnp.where(g_rows < n_tokens, g_pick, 0.0)
     dz = g_lse * s + g_pick * onehot      # (block_n, 1) cotangents broadcast
+    if g_sum is not None:
+        g_sum = jnp.where(g_rows < n_tokens, g_sum, 0.0)
+        dz = dz + g_sum * jnp.where(valid, 1.0, 0.0)
     if dcap is not None:
         dz = dz * dcap
     return dz, live
@@ -121,9 +129,14 @@ def _accum(acc_ref, comp_ref, contrib, accum_mode):
         raise ValueError(accum_mode)
 
 
-def _de_kernel(x_ref, gl_ref, gp_ref, lse_ref, e_ref, c_ref, de_ref, acc, comp,
-               *, softcap, vocab, n_tokens, block_n, block_v, filter_eps,
-               accum_mode):
+def _de_kernel(x_ref, gl_ref, gp_ref, *refs,
+               softcap, vocab, n_tokens, block_n, block_v, filter_eps,
+               accum_mode, with_sum=False):
+    if with_sum:
+        gs_ref, lse_ref, e_ref, c_ref, de_ref, acc, comp = refs
+    else:
+        lse_ref, e_ref, c_ref, de_ref, acc, comp = refs
+        gs_ref = None
     v = pl.program_id(1)
     nv = pl.num_programs(1)
     n = pl.program_id(0)
@@ -139,7 +152,8 @@ def _de_kernel(x_ref, gl_ref, gp_ref, lse_ref, e_ref, c_ref, de_ref, acc, comp,
     dz, live = _grad_tile(
         e, c, x_ref[...], lse_ref[...], gl_ref[...], gp_ref[...],
         softcap=softcap, vocab=vocab,
-        v_start=v * block_v, n_start=n * block_n, n_tokens=n_tokens)
+        v_start=v * block_v, n_start=n * block_n, n_tokens=n_tokens,
+        g_sum=gs_ref[...] if with_sum else None)
 
     if filter_eps is not None:
         @pl.when(live >= filter_eps)
@@ -155,9 +169,14 @@ def _de_kernel(x_ref, gl_ref, gp_ref, lse_ref, e_ref, c_ref, de_ref, acc, comp,
         de_ref[...] = acc[...].astype(de_ref.dtype)
 
 
-def _dc_kernel(x_ref, gl_ref, gp_ref, lse_ref, e_ref, c_ref, dc_ref, acc, comp,
-               *, softcap, vocab, n_tokens, block_n, block_v, filter_eps,
-               accum_mode):
+def _dc_kernel(x_ref, gl_ref, gp_ref, *refs,
+               softcap, vocab, n_tokens, block_n, block_v, filter_eps,
+               accum_mode, with_sum=False):
+    if with_sum:
+        gs_ref, lse_ref, e_ref, c_ref, dc_ref, acc, comp = refs
+    else:
+        lse_ref, e_ref, c_ref, dc_ref, acc, comp = refs
+        gs_ref = None
     n = pl.program_id(1)
     nn = pl.num_programs(1)
     v = pl.program_id(0)
@@ -173,7 +192,8 @@ def _dc_kernel(x_ref, gl_ref, gp_ref, lse_ref, e_ref, c_ref, dc_ref, acc, comp,
     dz, live = _grad_tile(
         e, c, x_ref[...], lse_ref[...], gl_ref[...], gp_ref[...],
         softcap=softcap, vocab=vocab,
-        v_start=v * block_v, n_start=n * block_n, n_tokens=n_tokens)
+        v_start=v * block_v, n_start=n * block_n, n_tokens=n_tokens,
+        g_sum=gs_ref[...] if with_sum else None)
 
     contrib = lambda: jax.lax.dot_general(  # (block_v, block_n) @ (block_n, D)
         dz, e, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
@@ -190,92 +210,111 @@ def _dc_kernel(x_ref, gl_ref, gp_ref, lse_ref, e_ref, c_ref, dc_ref, acc, comp,
         dc_ref[...] = acc[...].astype(dc_ref.dtype)
 
 
-def _prep(E, C, x, lse, g_lse, g_pick):
+def _prep(E, C, x, lse, g_lse, g_pick, g_sum=None):
     n_tokens = E.shape[0]
     x2 = x.astype(jnp.int32).reshape(n_tokens, 1)
     gl2 = g_lse.astype(jnp.float32).reshape(n_tokens, 1)
     gp2 = g_pick.astype(jnp.float32).reshape(n_tokens, 1)
     lse2 = lse.astype(jnp.float32).reshape(n_tokens, 1)
-    return x2, gl2, gp2, lse2
+    gs2 = (None if g_sum is None
+           else g_sum.astype(jnp.float32).reshape(n_tokens, 1))
+    return x2, gl2, gp2, gs2, lse2
 
 
 def cce_backward_dE_pallas(E, C, x, lse, g_lse, g_pick, *, softcap=None,
                            block_n=128, block_v=256,
                            filter_eps=DEFAULT_FILTER_EPS,
-                           accum="f32", interpret=False):
-    """dE (N, D) for cotangents (g_lse, g_pick) of the (lse, pick) primitive.
-    filter_eps=None disables gradient filtering (the -FullE variant)."""
+                           accum="f32", g_sum=None, interpret=False):
+    """dE (N, D) for cotangents (g_lse, g_pick[, g_sum]) of the
+    (lse, pick[, sum_logits]) primitive. filter_eps=None disables gradient
+    filtering (the -FullE variant); a non-None g_sum contributes a dense
+    gradient that the filter statistic cannot see, so it forces
+    filter_eps=None."""
     n_tokens, d = E.shape
     vocab = C.shape[0]
-    x2, gl2, gp2, lse2 = _prep(E, C, x, lse, g_lse, g_pick)
+    with_sum = g_sum is not None
+    if with_sum:
+        filter_eps = None
+    x2, gl2, gp2, gs2, lse2 = _prep(E, C, x, lse, g_lse, g_pick, g_sum)
     grid = (pl.cdiv(n_tokens, block_n), pl.cdiv(vocab, block_v))
     kernel = functools.partial(
         _de_kernel, softcap=softcap, vocab=vocab, n_tokens=n_tokens,
         block_n=block_n, block_v=block_v, filter_eps=filter_eps,
-        accum_mode=accum)
+        accum_mode=accum, with_sum=with_sum)
     scratch = [pltpu.VMEM((block_n, d), jnp.float32)]
     if accum == "bf16_kahan":
         scratch.append(pltpu.VMEM((block_n, d), jnp.float32))
     else:
         kernel = functools.partial(_wrap_no_comp, kernel)
+    tok_spec = lambda: pl.BlockSpec((block_n, 1), lambda nn, vv: (nn, 0))
+    in_specs = [
+        tok_spec(),                                          # labels
+        tok_spec(),                                          # g_lse
+        tok_spec(),                                          # g_pick
+        *([tok_spec()] if with_sum else []),                 # g_sum
+        tok_spec(),                                          # lse
+        pl.BlockSpec((block_n, d), lambda nn, vv: (nn, 0)),  # E
+        pl.BlockSpec((block_v, d), lambda nn, vv: (vv, 0)),  # C
+    ]
+    inputs = [x2, gl2, gp2, *([gs2] if with_sum else []), lse2, E, C]
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_n, 1), lambda nn, vv: (nn, 0)),  # labels
-            pl.BlockSpec((block_n, 1), lambda nn, vv: (nn, 0)),  # g_lse
-            pl.BlockSpec((block_n, 1), lambda nn, vv: (nn, 0)),  # g_pick
-            pl.BlockSpec((block_n, 1), lambda nn, vv: (nn, 0)),  # lse
-            pl.BlockSpec((block_n, d), lambda nn, vv: (nn, 0)),  # E
-            pl.BlockSpec((block_v, d), lambda nn, vv: (vv, 0)),  # C
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_n, d), lambda nn, vv: (nn, 0)),
-        out_shape=sds((n_tokens, d), E.dtype, x2, gl2, gp2, lse2, E, C),
+        out_shape=sds((n_tokens, d), E.dtype, *inputs),
         scratch_shapes=scratch,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_util.compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(x2, gl2, gp2, lse2, E, C)
+    )(*inputs)
 
 
 def cce_backward_dC_pallas(E, C, x, lse, g_lse, g_pick, *, softcap=None,
                            block_n=128, block_v=256,
                            filter_eps=DEFAULT_FILTER_EPS,
-                           accum="f32", interpret=False):
-    """dC (V, D) for cotangents (g_lse, g_pick). filter_eps=None disables
-    filtering (the -FullC variant, the paper's recommended pretraining
-    setting)."""
+                           accum="f32", g_sum=None, interpret=False):
+    """dC (V, D) for cotangents (g_lse, g_pick[, g_sum]). filter_eps=None
+    disables filtering (the -FullC variant, the paper's recommended
+    pretraining setting); non-None g_sum forces it off (dense gradient)."""
     n_tokens, d = E.shape
     vocab = C.shape[0]
-    x2, gl2, gp2, lse2 = _prep(E, C, x, lse, g_lse, g_pick)
+    with_sum = g_sum is not None
+    if with_sum:
+        filter_eps = None
+    x2, gl2, gp2, gs2, lse2 = _prep(E, C, x, lse, g_lse, g_pick, g_sum)
     grid = (pl.cdiv(vocab, block_v), pl.cdiv(n_tokens, block_n))
     kernel = functools.partial(
         _dc_kernel, softcap=softcap, vocab=vocab, n_tokens=n_tokens,
         block_n=block_n, block_v=block_v, filter_eps=filter_eps,
-        accum_mode=accum)
+        accum_mode=accum, with_sum=with_sum)
     scratch = [pltpu.VMEM((block_v, d), jnp.float32)]
     if accum == "bf16_kahan":
         scratch.append(pltpu.VMEM((block_v, d), jnp.float32))
     else:
         kernel = functools.partial(_wrap_no_comp, kernel)
+    tok_spec = lambda: pl.BlockSpec((block_n, 1), lambda vv, nn: (nn, 0))
+    in_specs = [
+        tok_spec(),                                          # labels
+        tok_spec(),                                          # g_lse
+        tok_spec(),                                          # g_pick
+        *([tok_spec()] if with_sum else []),                 # g_sum
+        tok_spec(),                                          # lse
+        pl.BlockSpec((block_n, d), lambda vv, nn: (nn, 0)),  # E
+        pl.BlockSpec((block_v, d), lambda vv, nn: (vv, 0)),  # C
+    ]
+    inputs = [x2, gl2, gp2, *([gs2] if with_sum else []), lse2, E, C]
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_n, 1), lambda vv, nn: (nn, 0)),  # labels
-            pl.BlockSpec((block_n, 1), lambda vv, nn: (nn, 0)),  # g_lse
-            pl.BlockSpec((block_n, 1), lambda vv, nn: (nn, 0)),  # g_pick
-            pl.BlockSpec((block_n, 1), lambda vv, nn: (nn, 0)),  # lse
-            pl.BlockSpec((block_n, d), lambda vv, nn: (nn, 0)),  # E
-            pl.BlockSpec((block_v, d), lambda vv, nn: (vv, 0)),  # C
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_v, d), lambda vv, nn: (vv, 0)),
-        out_shape=sds((vocab, d), C.dtype, x2, gl2, gp2, lse2, E, C),
+        out_shape=sds((vocab, d), C.dtype, *inputs),
         scratch_shapes=scratch,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_util.compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(x2, gl2, gp2, lse2, E, C)
+    )(*inputs)
 
 
 def _wrap_no_comp(kernel, *refs):

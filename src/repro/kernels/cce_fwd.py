@@ -3,6 +3,9 @@
 One kernel computes, for every token i:
   * ``lse_i  = log sum_v exp(softcap(C_v . E_i))``   (linear-log-sum-exp)
   * ``pick_i = softcap(C[x_i] . E_i)``               (indexed matmul)
+  * ``sum_i  = sum_v softcap(C_v . E_i)``            (optional, with_sum —
+                                                      feeds label smoothing
+                                                      in repro.losses)
 
 so that ``nll_i = lse_i - pick_i``. The ``(N, V)`` logit matrix only ever
 exists one ``(block_n, block_v)`` tile at a time, in VMEM.
@@ -26,11 +29,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _util
 from repro.kernels._util import sds
 
 
-def _fwd_kernel(x_ref, e_ref, c_ref, lse_ref, pick_ref, m_acc, s_acc, p_acc,
-                *, softcap, n_tokens, vocab, block_n, block_v):
+def _fwd_kernel(x_ref, e_ref, c_ref, *refs,
+                softcap, n_tokens, vocab, block_n, block_v, with_sum):
+    if with_sum:
+        lse_ref, pick_ref, sum_ref, m_acc, s_acc, p_acc, z_acc = refs
+    else:
+        lse_ref, pick_ref, m_acc, s_acc, p_acc = refs
+        sum_ref = z_acc = None
     v = pl.program_id(1)
     nv = pl.num_programs(1)
 
@@ -39,6 +48,8 @@ def _fwd_kernel(x_ref, e_ref, c_ref, lse_ref, pick_ref, m_acc, s_acc, p_acc,
         m_acc[...] = jnp.full_like(m_acc, -jnp.inf)
         s_acc[...] = jnp.zeros_like(s_acc)
         p_acc[...] = jnp.zeros_like(p_acc)
+        if with_sum:
+            z_acc[...] = jnp.zeros_like(z_acc)
 
     e = e_ref[...].astype(jnp.float32)  # (block_n, D)
     c = c_ref[...].astype(jnp.float32)  # (block_v, D)
@@ -49,6 +60,12 @@ def _fwd_kernel(x_ref, e_ref, c_ref, lse_ref, pick_ref, m_acc, s_acc, p_acc,
         a = softcap * jnp.tanh(a / softcap)
 
     col = v * block_v + jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+    if with_sum:
+        # sum of (capped) logits over the real vocabulary — third output,
+        # e.g. the label-smoothing uniform term. Padded columns add 0 (the
+        # -inf mask below would poison the sum).
+        z_acc[...] += jnp.sum(jnp.where(col < vocab, a, 0.0),
+                              axis=1, keepdims=True)
     a = jnp.where(col < vocab, a, -jnp.inf)  # mask padded vocab columns
 
     labels = x_ref[...]  # (block_n, 1) int32
@@ -67,17 +84,24 @@ def _fwd_kernel(x_ref, e_ref, c_ref, lse_ref, pick_ref, m_acc, s_acc, p_acc,
     def _finalize():
         lse_ref[...] = m_acc[...] + jnp.log(s_acc[...])
         pick_ref[...] = p_acc[...]
+        if with_sum:
+            sum_ref[...] = z_acc[...]
 
 
 def cce_forward_pallas(E: jax.Array, C: jax.Array, x: jax.Array, *,
                        softcap: float | None = None,
                        block_n: int = 128, block_v: int = 256,
+                       with_sum: bool = False,
                        interpret: bool = False):
-    """Returns ``(lse, pick)`` as f32 ``(N,)`` vectors.
+    """Returns ``(lse, pick)`` — or ``(lse, pick, sum_logits)`` when
+    ``with_sum`` — as f32 ``(N,)`` vectors.
 
     E: (N, D), C: (V, D), x: (N,) int32 with labels already clamped to
     [0, V) (ignored positions are handled by the caller via the upstream
     gradient / loss mask — the kernel itself is label-agnostic).
+
+    ``with_sum`` is static: when False the sum accumulator and its output
+    are not part of the kernel at all (no dead compute).
     """
     n_tokens, d = E.shape
     vocab, d2 = C.shape
@@ -89,9 +113,13 @@ def cce_forward_pallas(E: jax.Array, C: jax.Array, x: jax.Array, *,
 
     kernel = functools.partial(
         _fwd_kernel, softcap=softcap, n_tokens=n_tokens, vocab=vocab,
-        block_n=block_n, block_v=block_v)
+        block_n=block_n, block_v=block_v, with_sum=with_sum)
 
-    lse, pick = pl.pallas_call(
+    n_out = 3 if with_sum else 2
+    out_spec = pl.BlockSpec((block_n, 1), lambda n, v: (n, 0))
+    scratch = [pltpu.VMEM((block_n, 1), jnp.float32)  # max / sum-exp /
+               for _ in range(n_out + 1)]             # pick / (sum-logits)
+    outs = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -99,21 +127,11 @@ def cce_forward_pallas(E: jax.Array, C: jax.Array, x: jax.Array, *,
             pl.BlockSpec((block_n, d), lambda n, v: (n, 0)),   # E
             pl.BlockSpec((block_v, d), lambda n, v: (v, 0)),   # C
         ],
-        out_specs=[
-            pl.BlockSpec((block_n, 1), lambda n, v: (n, 0)),   # lse
-            pl.BlockSpec((block_n, 1), lambda n, v: (n, 0)),   # pick
-        ],
-        out_shape=[
-            sds((n_tokens, 1), jnp.float32, x2, E, C),
-            sds((n_tokens, 1), jnp.float32, x2, E, C),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_n, 1), jnp.float32),  # running max
-            pltpu.VMEM((block_n, 1), jnp.float32),  # running sum-exp
-            pltpu.VMEM((block_n, 1), jnp.float32),  # label-logit accumulator
-        ],
-        compiler_params=pltpu.CompilerParams(
+        out_specs=[out_spec] * n_out,
+        out_shape=[sds((n_tokens, 1), jnp.float32, x2, E, C)] * n_out,
+        scratch_shapes=scratch,
+        compiler_params=_util.compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x2, E, C)
-    return lse[:, 0], pick[:, 0]
+    return tuple(o[:, 0] for o in outs)

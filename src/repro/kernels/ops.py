@@ -97,33 +97,38 @@ def _resolve_blocks(cfg: CCEConfig, n_tokens, vocab, d, itemsize,
 
 
 # ----------------------------------------------------------------------------
-# The differentiable (lse, pick) primitive.
+# The differentiable (lse, pick[, sum_logits]) primitive.
+#
+# ``want_sum`` is a *static* argument: the False path compiles exactly the
+# two-output kernels (no dead sum accumulator), the True path adds the
+# per-token sum of (softcapped) logits as a third differentiable output —
+# the ingredient label smoothing needs (mean logit = sum_logits / V).
 # ----------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _lse_pick(cfg: CCEConfig, E, C, x):
-    lse, pick = _lse_pick_fwd_impl(cfg, E, C, x)
-    return lse, pick
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _lse_pick(cfg: CCEConfig, want_sum: bool, E, C, x):
+    return _lse_pick_fwd_impl(cfg, want_sum, E, C, x)
 
 
-def _lse_pick_fwd_impl(cfg, E, C, x):
+def _lse_pick_fwd_impl(cfg, want_sum, E, C, x):
     n_tokens, d = E.shape
     vocab = C.shape[0]
     bn, bv = _resolve_blocks(cfg, n_tokens, vocab, d, E.dtype.itemsize)
     safe_x = jnp.where(x == IGNORE_INDEX, 0, x)
     return cce_fwd.cce_forward_pallas(
         E, C, safe_x, softcap=cfg.softcap, block_n=bn, block_v=bv,
-        interpret=cfg.resolved_interpret())
+        with_sum=want_sum, interpret=cfg.resolved_interpret())
 
 
-def _lse_pick_vjp_fwd(cfg, E, C, x):
-    lse, pick = _lse_pick_fwd_impl(cfg, E, C, x)
-    return (lse, pick), (E, C, x, lse)
+def _lse_pick_vjp_fwd(cfg, want_sum, E, C, x):
+    outs = _lse_pick_fwd_impl(cfg, want_sum, E, C, x)
+    return outs, (E, C, x, outs[0])
 
 
-def _lse_pick_vjp_bwd(cfg, residuals, cotangents):
+def _lse_pick_vjp_bwd(cfg, want_sum, residuals, cotangents):
     E, C, x, lse = residuals
-    g_lse, g_pick = cotangents
+    g_lse, g_pick = cotangents[0], cotangents[1]
+    g_sum = cotangents[2].astype(jnp.float32) if want_sum else None
     n_tokens, d = E.shape
     vocab = C.shape[0]
     bn, bv = _resolve_blocks(cfg, n_tokens, vocab, d, E.dtype.itemsize)
@@ -132,8 +137,13 @@ def _lse_pick_vjp_bwd(cfg, residuals, cotangents):
     g_pick = g_pick.astype(jnp.float32)
     safe_x = jnp.where(x == IGNORE_INDEX, 0, x)
 
-    eps_e = cfg.filter_eps if cfg.filter_mode_e == "filtered" else None
-    eps_c = cfg.filter_eps if cfg.filter_mode_c == "filtered" else None
+    # The sum_logits cotangent is dense over the vocabulary (d sum / d a = 1
+    # everywhere), so the |S - onehot| block-skip statistic cannot see it —
+    # gradient filtering must be off whenever the third output is in use.
+    eps_e = (cfg.filter_eps
+             if cfg.filter_mode_e == "filtered" and not want_sum else None)
+    eps_c = (cfg.filter_eps
+             if cfg.filter_mode_c == "filtered" and not want_sum else None)
 
     if cfg.sort_vocab:
         # Vocabulary sorting (paper §4.3): order vocab by average logit so
@@ -149,7 +159,7 @@ def _lse_pick_vjp_bwd(cfg, residuals, cotangents):
         C_s, x_s = C, safe_x
 
     kw = dict(softcap=cfg.softcap, block_n=bn, block_v=bv,
-              accum=cfg.accum, interpret=interpret)
+              accum=cfg.accum, interpret=interpret, g_sum=g_sum)
     dE = cce_bwd.cce_backward_dE_pallas(E, C_s, x_s, lse, g_lse, g_pick,
                                         filter_eps=eps_e, **kw)
     dC_s = cce_bwd.cce_backward_dC_pallas(E, C_s, x_s, lse, g_lse, g_pick,
@@ -161,6 +171,15 @@ def _lse_pick_vjp_bwd(cfg, residuals, cotangents):
 _lse_pick.defvjp(_lse_pick_vjp_fwd, _lse_pick_vjp_bwd)
 
 
+def _flatten_call(E, C, x, cfg, want_sum):
+    orig_shape = x.shape
+    if E.ndim == 3:  # (B, S, D) convenience
+        E = E.reshape(-1, E.shape[-1])
+        x = x.reshape(-1)
+    outs = _lse_pick(cfg, want_sum, E, C, x)
+    return tuple(o.reshape(orig_shape) for o in outs)
+
+
 def lse_and_pick_pallas(E, C, x, cfg: CCEConfig | None = None, **overrides):
     """(lse, pick) f32 vectors of shape x.shape; differentiable in E and C.
 
@@ -168,12 +187,17 @@ def lse_and_pick_pallas(E, C, x, cfg: CCEConfig | None = None, **overrides):
     callers mask the loss, which zeroes the gradient automatically.
     """
     cfg = dataclasses.replace(cfg or CCEConfig(), **overrides)
-    orig_shape = x.shape
-    if E.ndim == 3:  # (B, S, D) convenience
-        E = E.reshape(-1, E.shape[-1])
-        x = x.reshape(-1)
-    lse, pick = _lse_pick(cfg, E, C, x)
-    return lse.reshape(orig_shape), pick.reshape(orig_shape)
+    return _flatten_call(E, C, x, cfg, False)
+
+
+def lse_pick_sum_pallas(E, C, x, cfg: CCEConfig | None = None, **overrides):
+    """(lse, pick, sum_logits) — the three-output primitive. sum_logits_i is
+    the sum of (softcapped) logits of token i over the whole vocabulary;
+    with it, losses over the *uniform* target distribution (label smoothing)
+    stay in CCE's O(N) memory class. Gradient filtering is disabled in the
+    backward (the sum cotangent is dense — see _lse_pick_vjp_bwd)."""
+    cfg = dataclasses.replace(cfg or CCEConfig(), **overrides)
+    return _flatten_call(E, C, x, cfg, True)
 
 
 def linear_cross_entropy_pallas(E, C, x, cfg: CCEConfig | None = None,

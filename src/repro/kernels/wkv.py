@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _util
 from repro.kernels._util import sds
 
 
@@ -132,7 +133,7 @@ def wkv_forward_pallas(r, k, v, w_log, u, state0, *, chunk_len: int = 128,
         scratch_shapes=[
             pltpu.VMEM((g, hd, hd), jnp.float32),   # carried WKV state
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_util.compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(rf, kf, vf, wf, u_bh, s0)

@@ -161,6 +161,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # old JAX: one dict per device
+            cost = cost[0] if cost else {}
         analysis = hlo_an.analyze(compiled.as_text())
         rf = roofline(analysis, chips, cfg, shape, mem)
 

@@ -10,7 +10,8 @@ from __future__ import annotations
 import numpy as np
 
 import jax
-from jax.sharding import AxisType, Mesh
+
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,11 +22,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     n = int(np.prod(shape))
     devices = jax.devices()
     if len(devices) == n:
-        return jax.make_mesh(shape, axes,
-                             axis_types=(AxisType.Auto,) * len(axes))
+        return compat.make_mesh(shape, axes)
     if len(devices) > n:   # e.g. 512 forced devices, single-pod mesh
-        dev = np.asarray(devices[:n]).reshape(shape)
-        return Mesh(dev, axes, axis_types=(AxisType.Auto,) * len(axes))
+        return compat.mesh_from_devices(devices[:n], shape, axes)
     raise RuntimeError(
         f"need {n} devices for mesh {dict(zip(axes, shape))}, have "
         f"{len(devices)} — the dry-run must set "
@@ -35,8 +34,7 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for CI-scale sharding tests (8 forced host devices)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def data_axes_of(mesh) -> tuple:

@@ -1,11 +1,12 @@
 """Serving CLI: batched greedy generation with a reduced-config model.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --reduced \
-      --prompts "1,2,3;4,5" --max-new 8
+      --prompts "1,2,3;4,5" --max-new 8 [--batch-size 8]
 """
 
 import argparse
 import dataclasses
+import sys
 
 import jax
 
@@ -21,16 +22,26 @@ def main():
     ap.add_argument("--prompts", default="1,2,3;4,5,6,7")
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--batch-size", type=int, default=8,
+                    help="engine batch capacity (rows per decode step)")
     args = ap.parse_args()
+
+    prompts = [[int(t) for t in p.split(",")]
+               for p in args.prompts.split(";") if p.strip()]
+    if not prompts:
+        sys.exit("--prompts is empty: pass ';'-separated comma token lists, "
+                 "e.g. --prompts '1,2,3;4,5'")
+    if len(prompts) > args.batch_size:
+        sys.exit(f"{len(prompts)} prompts exceed --batch-size "
+                 f"{args.batch_size}: raise --batch-size (one engine row "
+                 f"per prompt) or pass fewer prompts")
 
     cfg = (configs.get_reduced_config(args.arch) if args.reduced
            else configs.get_config(args.arch))
     cfg = dataclasses.replace(cfg, dtype="float32")
     params = T.init_lm(jax.random.PRNGKey(0), cfg)
     eng = Engine(cfg, params, max_len=args.max_len,
-                 batch_size=8)
-    prompts = [[int(t) for t in p.split(",")]
-               for p in args.prompts.split(";")]
+                 batch_size=args.batch_size)
     out = eng.generate(prompts, max_new_tokens=args.max_new)
     for p, o in zip(prompts, out):
         print(f"prompt {p} -> {o}")

@@ -2,7 +2,13 @@
 
   PYTHONPATH=src python -m repro.launch.train --arch gemma-2b \
       --steps 200 --batch 8 --seq 512 [--reduced] [--ckpt DIR] \
-      [--loss-impl cce|cce_jax|dense|chunked]
+      [--loss-impl cce|cce_jax|dense|chunked] \
+      [--loss nll|z_loss|focal|weighted|label_smoothing] \
+      [--loss-kwargs '{"eps": 0.1}']
+
+The training loss comes from the ``repro.losses`` registry — every entry
+lowers onto the CCE (lse, pick[, sum]) primitive, so switching losses never
+re-introduces the N×V logit matrix.
 
 Runs on whatever devices are available; for the production mesh this is
 driven by the cluster launcher with one process per host (jax.distributed),
@@ -14,6 +20,7 @@ import dataclasses
 
 import repro.configs as configs
 from repro.configs.base import TrainConfig
+from repro.losses import LossConfig, list_losses
 from repro.train import Trainer
 
 
@@ -29,6 +36,11 @@ def main():
                     help="use the smoke-test-sized config")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--loss-impl", default=None)
+    ap.add_argument("--loss", default="nll",
+                    help=f"registry loss; one of {list_losses()}")
+    ap.add_argument("--loss-kwargs", default="{}",
+                    help='JSON hyper-parameters for --loss, e.g. '
+                         '\'{"z_weight": 1e-4}\'')
     ap.add_argument("--dtype", default=None)
     args = ap.parse_args()
 
@@ -38,9 +50,11 @@ def main():
         cfg = dataclasses.replace(cfg, loss_impl=args.loss_impl)
     if args.dtype:
         cfg = dataclasses.replace(cfg, dtype=args.dtype)
+    loss_cfg = LossConfig.from_json(args.loss, args.loss_kwargs)
     tcfg = TrainConfig(total_steps=args.steps, learning_rate=args.lr,
                        warmup_steps=max(args.steps // 20, 1),
-                       microbatch=args.microbatch)
+                       microbatch=args.microbatch,
+                       loss=loss_cfg.name, loss_kwargs=loss_cfg.kwargs)
     tr = Trainer(cfg, tcfg, checkpoint_dir=args.ckpt, seq_len=args.seq,
                  global_batch=args.batch)
     tr.install_signal_handlers()

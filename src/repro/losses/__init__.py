@@ -1,0 +1,30 @@
+"""repro.losses — memory-efficient vocabulary losses on the CCE primitive.
+
+    from repro.losses import get_loss
+    loss = get_loss("label_smoothing", eps=0.1)
+    per_token = loss(E, C, x, impl="cce")          # O(N·D + V·D) memory
+    scalar    = loss(E, C, x, reduction="mean")
+
+Registered losses (see ``repro/losses/zoo.py``): nll, z_loss, focal,
+weighted, label_smoothing, seq_logprob. All lower onto
+``repro.core.lse_and_pick`` and therefore never materialize the N×V logit
+matrix under ``impl in ("cce", "cce_jax")``; ``impl="dense"`` is the
+materialized reference twin used by the tests.
+"""
+
+from repro.losses.base import (  # noqa: F401
+    LossConfig,
+    VocabLoss,
+    get_loss,
+    list_losses,
+    register,
+)
+from repro.losses import zoo as _zoo  # noqa: F401  (populates the registry)
+from repro.losses.zoo import (  # noqa: F401
+    NLL,
+    FocalCE,
+    LabelSmoothingCE,
+    SequenceLogProb,
+    WeightedCE,
+    ZLoss,
+)

@@ -1,0 +1,158 @@
+"""Loss-family substrate: every vocabulary loss as a function of the CCE
+``(lse, pick[, sum_logits])`` primitive.
+
+The paper's real contribution is not one loss but a primitive: per-token
+``lse`` and ``pick`` computed without materializing the N×V logit matrix,
+with a custom VJP that accepts *arbitrary* cotangents. Any scalar-per-token
+loss expressible through
+
+    lse_i         = logsumexp_v softcap(C_v . E_i)
+    pick_i        = softcap(C[x_i] . E_i)
+    sum_logits_i  = sum_v softcap(C_v . E_i)          (optional 3rd output)
+
+therefore inherits CCE's O(N·D + V·D) memory class for free — the backward
+recomputes logit tiles in VMEM/registers exactly as for plain NLL.
+:class:`VocabLoss` packages that recipe; concrete losses only implement
+:meth:`VocabLoss.per_token` on the primitive's outputs.
+
+Registry: losses register under a string name (``@register("z_loss")``);
+``get_loss(name, **kwargs)`` instantiates a configured loss, and
+:class:`LossConfig` is the hashable config-file/CLI carrier of the same
+information.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax.numpy as jnp
+
+from repro.core import cce as cce_api
+from repro.kernels.ops import CCEConfig
+from repro.kernels.ref import IGNORE_INDEX
+
+_REGISTRY: Dict[str, type] = {}
+
+
+def register(name: str) -> Callable[[type], type]:
+    """Class decorator: add a :class:`VocabLoss` subclass to the registry."""
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get_loss(name: str, **kwargs):
+    """Instantiate the registered loss ``name`` with its hyper-parameters.
+
+    >>> loss = get_loss("z_loss", z_weight=1e-4)
+    >>> per_token = loss(E, C, x, impl="cce_jax")
+    """
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown loss {name!r}; registered: {', '.join(list_losses())}")
+    return cls(**kwargs)
+
+
+def list_losses() -> list:
+    """Registered loss names, sorted."""
+    return sorted(_REGISTRY)
+
+
+@dataclasses.dataclass(frozen=True)
+class LossConfig:
+    """Hashable (name, kwargs) carrier for configs/CLIs.
+
+    ``kwargs`` is a sorted tuple of (key, value) pairs so the config can be
+    a static jit argument; ``build()`` turns it into the live loss object.
+    """
+    name: str = "nll"
+    kwargs: tuple = ()
+
+    @classmethod
+    def create(cls, name: str, **kwargs) -> "LossConfig":
+        return cls(name=name, kwargs=tuple(sorted(kwargs.items())))
+
+    @classmethod
+    def from_json(cls, name: str, json_kwargs: str) -> "LossConfig":
+        """CLI entry point: parse '{"eps": 0.1}'-style hyper-parameters
+        with errors a user can act on (both CLIs share this path)."""
+        import json
+        try:
+            kwargs = json.loads(json_kwargs or "{}")
+        except json.JSONDecodeError as e:
+            raise SystemExit(
+                f"--loss-kwargs must be a JSON object, e.g. "
+                f"'{{\"eps\": 0.1}}'; got {json_kwargs!r} ({e})")
+        if not isinstance(kwargs, dict):
+            raise SystemExit(
+                f"--loss-kwargs must be a JSON *object*, got "
+                f"{type(kwargs).__name__}: {json_kwargs!r}")
+        return cls.create(name, **kwargs)
+
+    def build(self):
+        return get_loss(self.name, **dict(self.kwargs))
+
+
+def reduce_loss(per_token, x, reduction: str, weights=None):
+    """"none" | "sum" | "mean". Mean is over non-ignored tokens; with
+    ``weights`` it is weight-normalized (sum w·l / sum w over valid tokens —
+    the completion-only fine-tuning convention)."""
+    if reduction == "none":
+        return per_token
+    valid = x != IGNORE_INDEX
+    total = jnp.sum(per_token)
+    if reduction == "sum":
+        return total
+    if reduction == "mean":
+        if weights is not None:
+            denom = jnp.sum(jnp.where(valid, weights, 0.0))
+        else:
+            denom = jnp.sum(valid)
+        return total / jnp.maximum(denom, 1e-8).astype(per_token.dtype)
+    raise ValueError(f"unknown reduction {reduction!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class VocabLoss:
+    """Base class: a per-token vocabulary loss lowered onto the CCE
+    primitive.
+
+    Subclasses set ``needs_sum_logits`` when they use the third output and
+    implement :meth:`per_token`. ``__call__`` handles primitive dispatch
+    (``impl`` in "cce" / "cce_jax" / "dense" / "auto"), IGNORE_INDEX
+    masking, optional per-token ``weights``, and the reduction.
+    """
+    needs_sum_logits = False   # class attribute, overridden by subclasses
+    trainable = True
+
+    def per_token(self, lse, pick, sum_logits, vocab: int):
+        raise NotImplementedError
+
+    def __call__(self, E, C, x, *, impl: str = "auto",
+                 softcap: float | None = None,
+                 cfg: CCEConfig | None = None,
+                 reduction: str = "none",
+                 weights=None):
+        cfg = self._resolve_cfg(cfg, softcap)
+        outs = cce_api.lse_and_pick(E, C, x, impl=impl, cfg=cfg,
+                                    with_sum_logits=self.needs_sum_logits)
+        lse, pick = outs[0], outs[1]
+        sum_logits = outs[2] if self.needs_sum_logits else None
+        per_tok = self.per_token(lse, pick, sum_logits, C.shape[0])
+        if weights is not None:
+            per_tok = per_tok * weights
+        per_tok = jnp.where(x == IGNORE_INDEX, 0.0, per_tok)
+        return reduce_loss(per_tok, x, reduction, weights)
+
+    @staticmethod
+    def _resolve_cfg(cfg, softcap):
+        if cfg is None:
+            return CCEConfig(softcap=softcap)
+        if softcap is not None and cfg.softcap != softcap:
+            return dataclasses.replace(cfg, softcap=softcap)
+        return cfg

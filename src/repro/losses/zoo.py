@@ -1,0 +1,147 @@
+"""The loss zoo: every registered vocabulary loss.
+
+Each entry is a frozen dataclass over its hyper-parameters; per-token math
+is a closed-form function of the CCE primitive's ``(lse, pick[, sum])``
+outputs, so every loss here runs in the O(N·D + V·D) memory class under
+``impl in ("cce", "cce_jax")`` — verified per entry by
+``benchmarks/loss_zoo_memory.py`` and gradchecked against the dense
+materialized-logits twin in ``tests/test_losses.py``.
+
+Useful identities (p_i = softmax probability of the label):
+
+    nll_i    = lse_i - pick_i
+    log p_i  = pick_i - lse_i          =>  p_i = exp(pick_i - lse_i)
+    mean_z_i = sum_logits_i / V
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cce as cce_api
+from repro.kernels.ref import IGNORE_INDEX
+from repro.losses.base import VocabLoss, reduce_loss, register
+
+
+@register("nll")
+@dataclasses.dataclass(frozen=True)
+class NLL(VocabLoss):
+    """Plain next-token cross-entropy: ``lse - pick`` (the paper's loss)."""
+
+    def per_token(self, lse, pick, sum_logits, vocab):
+        return lse - pick
+
+
+@register("z_loss")
+@dataclasses.dataclass(frozen=True)
+class ZLoss(VocabLoss):
+    """NLL + ``z_weight * lse**2`` (PaLM/Chronicals-style logit-norm
+    regularizer). Purely cotangent-level: autodiff feeds the extra
+    ``2*z_weight*lse`` cotangent into the primitive's custom VJP — no new
+    kernel outputs, memory class unchanged."""
+    z_weight: float = 1e-4
+
+    def per_token(self, lse, pick, sum_logits, vocab):
+        return (lse - pick) + self.z_weight * lse * lse
+
+
+@register("focal")
+@dataclasses.dataclass(frozen=True)
+class FocalCE(VocabLoss):
+    """Focal / confidence-weighted CE: ``(1 - p)**gamma * nll`` with
+    ``p = exp(pick - lse)``. Down-weights already-confident tokens.
+
+    ``detach_weight=True`` stops gradient through the ``(1-p)**gamma``
+    factor (pure reweighting); False is the full focal-loss gradient.
+    """
+    gamma: float = 2.0
+    detach_weight: bool = False
+
+    def per_token(self, lse, pick, sum_logits, vocab):
+        # clamp log p to <= 0: lse is computed by a separate (online)
+        # reduction and can round one ulp below pick, and a fractional
+        # gamma would turn the resulting negative 1-p into NaN.
+        p = jnp.exp(jnp.minimum(pick - lse, 0.0))
+        w = (1.0 - p) ** self.gamma
+        if self.detach_weight:
+            w = jax.lax.stop_gradient(w)
+        return w * (lse - pick)
+
+
+@register("weighted")
+@dataclasses.dataclass(frozen=True)
+class WeightedCE(VocabLoss):
+    """Per-token weighted CE — e.g. completion-only fine-tuning masks or
+    curriculum weights, passed as ``weights=`` at call time (shape of x).
+    ``reduction="mean"`` normalizes by the weight sum, so a 0/1 completion
+    mask yields the mean NLL over completion tokens only."""
+
+    def per_token(self, lse, pick, sum_logits, vocab):
+        # weighting itself is applied uniformly by VocabLoss.__call__;
+        # the entry exists so the pattern is discoverable by name.
+        return lse - pick
+
+
+@register("label_smoothing")
+@dataclasses.dataclass(frozen=True)
+class LabelSmoothingCE(VocabLoss):
+    """CE against the ε-smoothed target ``(1-ε)·onehot + ε·uniform``:
+
+        L = (1-ε)·(lse - pick) + ε·(lse - sum_logits / V)
+
+    The uniform term needs the mean logit — the primitive's third output —
+    so this is the loss that exercises ``sum_logits`` end-to-end (and the
+    reason gradient filtering is off in its backward: the uniform-target
+    gradient is dense over the vocabulary).
+    """
+    eps: float = 0.1
+    needs_sum_logits = True
+
+    def per_token(self, lse, pick, sum_logits, vocab):
+        smooth = lse - sum_logits / vocab
+        return (1.0 - self.eps) * (lse - pick) + self.eps * smooth
+
+
+@register("seq_logprob")
+@dataclasses.dataclass(frozen=True)
+class SequenceLogProb(VocabLoss):
+    """Sequence log-probability scoring (eval/serve, not a training loss):
+    ``log p(sequence) = sum_t (pick_t - lse_t)`` over non-ignored tokens.
+
+    ``x`` of shape (B, S) yields one score per sequence; a 1-D ``x`` is one
+    sequence. ``normalize="tokens"`` returns per-token average log-prob
+    (length-normalized rescoring); "sum" the raw log-prob. ``reduction``
+    then applies over *sequences*.
+    """
+    normalize: str = "sum"            # "sum" | "tokens"
+    trainable = False
+
+    def per_token(self, lse, pick, sum_logits, vocab):
+        return pick - lse             # per-token log-prob
+
+    def __call__(self, E, C, x, *, impl: str = "auto",
+                 softcap: float | None = None, cfg=None,
+                 reduction: str = "none", weights=None):
+        cfg = self._resolve_cfg(cfg, softcap)
+        lse, pick = cce_api.lse_and_pick(E, C, x, impl=impl, cfg=cfg)
+        logp = pick - lse
+        if weights is not None:
+            logp = logp * weights
+        valid = x != IGNORE_INDEX
+        logp = jnp.where(valid, logp, 0.0)
+        tok_axis = tuple(range(1, logp.ndim)) or (0,)
+        score = jnp.sum(logp, axis=tok_axis)
+        if self.normalize == "tokens":
+            n = jnp.maximum(jnp.sum(valid, axis=tok_axis), 1)
+            score = score / n
+        elif self.normalize != "sum":
+            raise ValueError(f"normalize must be 'sum'|'tokens', "
+                             f"got {self.normalize!r}")
+        if reduction == "none":
+            return score
+        # reduce over sequences; scores have no IGNORE semantics of their own
+        dummy = jnp.zeros(score.shape, jnp.int32)
+        return reduce_loss(score, dummy, reduction)

@@ -19,6 +19,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.sharding.constraints import current_rules as _current_rules
 
 # Sequence length above which self-attention switches to the chunked scan.
@@ -581,7 +582,7 @@ def _routed_experts_sharded(params, x, cfg, rules):
         aux = jax.lax.pmean(aux, dp + (M,))
         return out, aux
 
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(dp, M, None), P(None, None),
                   P(None, "data", M), P(None, "data", M),

@@ -10,9 +10,10 @@ cross-attention.
 Layers are applied with ``lax.scan`` over *pattern groups* (stacked params),
 optionally wrapped in ``jax.checkpoint`` (cfg.remat="block"): HLO stays
 small and activation memory is one residual per group — the production
-configuration the dry-run lowers. The LM head is CCE
-(``repro.core.linear_cross_entropy``): the full (N, |V|) logit matrix never
-exists in the train step.
+configuration the dry-run lowers. The LM head resolves its loss from the
+``repro.losses`` registry (plain NLL by default); every registry loss is
+built on the CCE primitive, so the full (N, |V|) logit matrix never exists
+in the train step regardless of which loss is configured.
 
 Sharding is injected via ``repro.sharding.constraints.constrain`` tags; the
 model code itself is mesh-agnostic.
@@ -26,6 +27,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro import losses as losses_api
 from repro.core import cce as cce_api
 from repro.kernels.ref import IGNORE_INDEX
 from repro.models import layers as L
@@ -326,11 +328,18 @@ def classifier_matrix(params, cfg):
     return params["embed"] if cfg.tie_embeddings else params["head"]
 
 
-def train_loss(params, cfg, batch, loss_impl=None, loss_fn=None):
-    """Mean NLL over non-ignored tokens (+ MoE aux). batch needs "labels".
+def train_loss(params, cfg, batch, loss_impl=None, loss_fn=None,
+               loss: str = "nll", loss_kwargs=None):
+    """Scalar training loss (+ MoE aux). batch needs "labels".
 
-    loss_fn: optional override (E, C, labels) -> per-token nll; used by the
-    distributed train step to swap in vocab-parallel CCE.
+    loss / loss_kwargs: a ``repro.losses`` registry name and its
+    hyper-parameters — every registry loss lowers onto the CCE primitive,
+    so swapping losses never changes the head's memory class. A
+    ``loss_weights`` entry in the batch (shape of labels) feeds per-token
+    weighting (e.g. completion-only fine-tuning with loss="weighted").
+
+    loss_fn: optional low-level override (E, C, labels) -> per-token loss;
+    used by the distributed train step to swap in vocab-parallel CCE.
     """
     enc_out = encode(params, cfg, batch) if cfg.is_encdec else None
     hidden, _, aux = lm_hidden(params, cfg, batch, enc_out=enc_out)
@@ -340,16 +349,43 @@ def train_loss(params, cfg, batch, loss_impl=None, loss_fn=None):
     e_flat = hidden.reshape(-1, cfg.d_model)
     l_flat = labels.reshape(-1)
     if loss_fn is not None:
+        if loss != "nll" or loss_kwargs or "loss_weights" in batch:
+            raise ValueError(
+                "loss_fn overrides the loss head entirely: it cannot be "
+                f"combined with loss={loss!r} / loss_kwargs / "
+                "batch['loss_weights'] — fold those into loss_fn itself")
         nll = loss_fn(e_flat, C, l_flat)
+        loss_val = losses_api.base.reduce_loss(nll, l_flat, "mean")
     else:
-        nll = cce_api.linear_cross_entropy(
-            e_flat, C, l_flat, impl=loss_impl or cfg.loss_impl,
-            softcap=cfg.logit_softcap)
-    valid = (l_flat != IGNORE_INDEX)
-    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+        loss_obj = losses_api.get_loss(loss, **(loss_kwargs or {}))
+        if not loss_obj.trainable:
+            raise ValueError(
+                f"loss {loss!r} is a scoring objective, not a training "
+                f"loss; pick one of "
+                f"{[n for n in losses_api.list_losses() if n != loss]}")
+        weights = batch.get("loss_weights")
+        if weights is not None:
+            weights = weights.reshape(-1)
+        impl = loss_impl or cfg.loss_impl
+        if impl in ("chunked", "liger"):
+            # Paper-baseline impls only define plain NLL (liger owns its
+            # reduction and computes grads in the forward — the very
+            # composability restriction the registry losses avoid).
+            if loss != "nll" or weights is not None:
+                raise ValueError(
+                    f"impl {impl!r} is an NLL-only baseline; registry "
+                    f"losses/weights need impl in ('cce', 'cce_jax', "
+                    f"'dense')")
+            loss_val = cce_api.linear_cross_entropy(
+                e_flat, C, l_flat, impl=impl, softcap=cfg.logit_softcap,
+                reduction="mean")
+        else:
+            loss_val = loss_obj(
+                e_flat, C, l_flat, impl=impl, softcap=cfg.logit_softcap,
+                reduction="mean", weights=weights)
     if cfg.moe is not None:
-        loss = loss + cfg.moe.router_aux_loss * aux
-    return loss
+        loss_val = loss_val + cfg.moe.router_aux_loss * aux
+    return loss_val
 
 
 def init_cache(cfg, batch_size, max_len, dtype=None):

@@ -29,7 +29,8 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, loss_fn=None):
     substrate pipeline parallelism would reuse)."""
 
     def loss_of(params, batch):
-        return T.train_loss(params, cfg, batch, loss_fn=loss_fn)
+        return T.train_loss(params, cfg, batch, loss_fn=loss_fn,
+                            loss=tcfg.loss, loss_kwargs=tcfg.loss_options())
 
     def step(params, opt_state, batch, step_idx):
         b = batch["labels"].shape[0]

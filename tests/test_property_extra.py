@@ -6,6 +6,10 @@ scan, and the distributed log-sum-exp combine used by vocab-parallel CCE.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import MoEConfig, SSMConfig

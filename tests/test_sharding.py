@@ -27,8 +27,8 @@ def test_vocab_parallel_cce_matches_oracle():
 import jax, jax.numpy as jnp
 from repro.core import vocab_parallel_cross_entropy
 from repro.kernels import ref
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh((2, 4), ("data", "model"))
 ks = jax.random.split(jax.random.PRNGKey(0), 3)
 E = jax.random.normal(ks[0], (64, 32)) * 0.7
 C = jax.random.normal(ks[1], (512, 32)) * 0.5
@@ -42,6 +42,46 @@ for impl in ("cce_jax", "cce"):
     dE, dC = jax.grad(loss, argnums=(0, 1))(E, C)
     dEr, dCr = ref.ref_grads(E, C, x, g=g)
     assert float(jnp.max(jnp.abs(nll - ref.ref_linear_cross_entropy(E, C, x)))) < 1e-4
+    assert float(jnp.max(jnp.abs(dE - dEr))) < 1e-4
+    assert float(jnp.max(jnp.abs(dC - dCr))) < 1e-4
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_vocab_parallel_lse_pick_sum_matches_dense():
+    """The third (sum_logits) output distributes as one psum; registry
+    losses built on it (label smoothing) match the single-device dense
+    reference under the vocab-parallel combine."""
+    out = _run("""
+import jax, jax.numpy as jnp
+from repro.core import lse_and_pick
+from repro.core.vocab_parallel import vocab_parallel_lse_pick
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh((2, 4), ("data", "model"))
+ks = jax.random.split(jax.random.PRNGKey(0), 3)
+E = jax.random.normal(ks[0], (64, 32)) * 0.7
+C = jax.random.normal(ks[1], (512, 32)) * 0.5
+x = jax.random.randint(ks[2], (64,), 0, 512)
+ref = lse_and_pick(E, C, x, impl="dense", with_sum_logits=True)
+for impl in ("cce_jax", "cce"):
+    outs = vocab_parallel_lse_pick(E, C, x, mesh=mesh, impl=impl,
+                                   with_sum_logits=True)
+    for name, a, b in zip(("lse", "pick", "sum"), outs, ref):
+        err = float(jnp.max(jnp.abs(a - b)))
+        assert err < 1e-4, (impl, name, err)
+    # gradients of a label-smoothing-style functional of all three outputs
+    def loss(e, c, impl=impl):
+        lse, pick, zs = vocab_parallel_lse_pick(e, c, x, mesh=mesh,
+                                                impl=impl,
+                                                with_sum_logits=True)
+        return jnp.sum(0.9 * (lse - pick) + 0.1 * (lse - zs / 512))
+    def loss_ref(e, c):
+        lse, pick, zs = lse_and_pick(e, c, x, impl="dense",
+                                     with_sum_logits=True)
+        return jnp.sum(0.9 * (lse - pick) + 0.1 * (lse - zs / 512))
+    dE, dC = jax.grad(loss, argnums=(0, 1))(E, C)
+    dEr, dCr = jax.grad(loss_ref, argnums=(0, 1))(E, C)
     assert float(jnp.max(jnp.abs(dE - dEr))) < 1e-4
     assert float(jnp.max(jnp.abs(dC - dCr))) < 1e-4
 print("OK")
@@ -64,8 +104,8 @@ from repro.sharding import make_rules, use_sharding_rules
 cfg = dataclasses.replace(configs.get_reduced_config("llama3_2_3b"),
                           dtype="float32", loss_impl="cce_jax")
 tcfg = TrainConfig()
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh((2, 4), ("data", "model"))
 params = T.init_lm(jax.random.PRNGKey(0), cfg)
 opt = adamw.adamw_init(params)
 ks = jax.random.split(jax.random.PRNGKey(1), 2)
@@ -103,8 +143,8 @@ import repro.configs.base as base
 def small_mesh(*, multi_pod=False):
     shape = (2, 2, 2) if multi_pod else (2, 4)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    from repro.launch.mesh import make_test_mesh
+    return make_test_mesh(shape, axes)
 mesh_mod.make_production_mesh = small_mesh
 dr.make_production_mesh = small_mesh
 configs.get_config = configs.get_reduced_config
@@ -138,10 +178,9 @@ from repro.train.checkpoint import CheckpointManager
 cfg = configs.get_reduced_config("llama3_2_3b")
 params = T.init_lm(jax.random.PRNGKey(0), cfg)
 
-mesh_a = jax.make_mesh((2, 4), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
-mesh_b = jax.make_mesh((4, 2), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_test_mesh
+mesh_a = make_test_mesh((2, 4), ("data", "model"))
+mesh_b = make_test_mesh((4, 2), ("data", "model"))
 
 sharded_a = jax.device_put(params, named(mesh_a, param_specs(cfg, params, mesh_a)))
 with tempfile.TemporaryDirectory() as d:

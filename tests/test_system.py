@@ -14,11 +14,15 @@ from repro.train import Trainer
 
 
 def test_training_decreases_loss_cce_head():
+    # 120 steps: the reduced gemma cell (tied embeddings + sqrt(d) embed
+    # scaling) needs ~100 steps before the Markov structure shows up in the
+    # loss; all loss impls (cce/cce_jax/dense) track each other exactly, so
+    # the horizon only buys signal-to-noise, not numerics slack.
     cfg = dataclasses.replace(configs.get_reduced_config("gemma_2b"),
                               dtype="float32", loss_impl="cce")
-    tcfg = TrainConfig(total_steps=60, warmup_steps=5, learning_rate=1e-3)
+    tcfg = TrainConfig(total_steps=120, warmup_steps=5, learning_rate=1e-3)
     tr = Trainer(cfg, tcfg, seq_len=32, global_batch=4)
-    hist = tr.run(num_steps=60, log_every=10, log_fn=None)
+    hist = tr.run(num_steps=120, log_every=10, log_fn=None)
     assert hist[-1]["loss"] < hist[0]["loss"] - 0.1
 
 
