@@ -1,14 +1,19 @@
-"""Memory class of every ``repro.losses`` registry entry vs the dense head.
+"""Memory-regression gate: every ``repro.losses`` entry through the
+``cross_entropy`` dispatch layer must stay out of the N×V memory class.
 
 For each registered loss this lowers (AOT, no execution) the value-and-grad
-computation at a large-vocabulary size and checks, via
+computation at a large-vocabulary size — *through the public
+``repro.core.cross_entropy`` entry point, so the backend-registry dispatch
+itself is under test* — and checks, via
 ``repro.analysis.hlo.array_shape_census`` on the optimized HLO, that **no
 N×V-element buffer exists anywhere in the module** — i.e. the loss lives in
 CCE's O(N·D + V·D) memory class. The dense baseline is lowered at the same
 size as the control: its census is dominated by exactly that N×V buffer.
 
 Also reports XLA's compiled temp+output allocation for the same
-computations (from the one AOT compile per loss).
+computations (from the one AOT compile per loss). Exits 1 on any
+violation — CI runs this as the memory-regression gate, so a change to the
+dispatch layer cannot silently reintroduce dense logits.
 
 Run: PYTHONPATH=src python -m benchmarks.loss_zoo_memory [--paper]
   default size: N=4096, D=512, V=65536    (fast CI lowering;
@@ -23,6 +28,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import row
 from repro.analysis import hlo as hlo_an
+from repro.core import cross_entropy
 from repro.losses import get_loss, list_losses
 
 # per-loss hyper-parameters exercised by the benchmark (defaults otherwise)
@@ -35,11 +41,13 @@ def _value_and_grad_fn(loss_name, impl, n, d, v):
 
     if loss_name == "seq_logprob":
         def f(E, C, x):  # scoring: grad of the summed sequence scores
-            return jnp.sum(loss(E.reshape(8, n // 8, d), C,
-                                x.reshape(8, n // 8), impl=impl))
+            return jnp.sum(cross_entropy(
+                E.reshape(8, n // 8, d), C, x.reshape(8, n // 8),
+                loss=loss, impl=impl))
     else:
         def f(E, C, x):
-            return loss(E, C, x, impl=impl, reduction="mean")
+            return cross_entropy(E, C, x, loss=loss, impl=impl,
+                                 reduction="mean")
 
     return jax.value_and_grad(f, argnums=(0, 1))
 
@@ -59,7 +67,8 @@ def run(n=4096, d=512, v=65536):
     # dC (again V·D). 4x headroom still sits orders of magnitude below N·V.
     budget = 4 * max(n * d, v * d)
     print(f"# loss_zoo_memory: N={n} D={d} V={v}  "
-          f"NxV={nv:.3g} elems  budget={budget:.3g} elems")
+          f"NxV={nv:.3g} elems  budget={budget:.3g} elems  "
+          f"(via repro.core.cross_entropy)")
 
     ok = True
     for name in list_losses():

@@ -8,46 +8,58 @@ buffer assignment for the same computation).
 
 Time column: wall-clock at a reduced size (N=2048, D=512, |V|=16384, CPU)
 for the pure-jnp implementations; relative ordering is what transfers.
-CCE rows use the analyzable scan twin (cce_jax) — the Pallas kernels are
-validated by tests and their VMEM working set is reported analytically.
-"""
 
-import functools
+The method list is the ``repro.backends`` registry itself — a backend
+registered tomorrow shows up as a row here with no edit — filtered by
+platform preference (the Pallas ``cce`` row is measured analytically below
+on CPU, where interpret-mode AOT at paper size is meaningless; on TPU it
+joins the table).
+"""
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import problem, row, static_mem_bytes, wall_us
-from repro.core import linear_cross_entropy
-from repro.kernels.ops import CCEConfig, choose_blocks
+from repro import backends
+from repro.core import cross_entropy
+from repro.kernels.ops import choose_blocks
 
 PAPER_N, PAPER_D, PAPER_V = 8192, 2304, 256000
 SMALL_N, SMALL_D, SMALL_V = 2048, 512, 16384
 
-METHODS = ["cce_jax", "liger", "chunked", "dense"]
-LABEL = {"cce_jax": "CCE (ours, scan twin)",
+LABEL = {"cce": "CCE (ours, Pallas kernels)",
+         "cce_jax": "CCE (ours, scan twin)",
          "liger": "Liger-style (fwd grads)",
          "chunked": "TorchTune-style (8 chunks)",
          "dense": "Baseline (materialized logits)"}
 
 
-def _loss_fn(impl):
-    red = "mean" if impl == "liger" else "none"
+def _methods():
+    platform = jax.default_backend()
+    return [b for b in backends.all_backends()
+            if not b.preferred_platforms
+            or platform in b.preferred_platforms]
+
+
+def _loss_fn(be):
+    # reduction-owning backends (liger) return the scalar themselves
+    red = "mean" if be.owns_reduction else "none"
 
     def f(E, C, x):
-        out = linear_cross_entropy(E, C, x, impl=impl, reduction=red)
+        out = cross_entropy(E, C, x, impl=be.name, reduction=red)
         return jnp.sum(out) if red == "none" else out
     return f
 
 
-def _grad_fn(impl):
-    f = _loss_fn(impl)
+def _grad_fn(be):
+    f = _loss_fn(be)
     return jax.grad(f, argnums=(0, 1))
 
 
 def run():
     print("# table1: memory at paper size (N=8192, D=2304, V=256000), "
-          "bf16; time at reduced size (CPU wall)")
+          "bf16; time at reduced size (CPU wall); methods = "
+          "repro.backends registry")
     sds = lambda *s: jax.ShapeDtypeStruct(s, jnp.bfloat16)
     xi = jax.ShapeDtypeStruct((PAPER_N,), jnp.int32)
     E, C, x = problem(SMALL_N, SMALL_D, SMALL_V, jnp.bfloat16)
@@ -55,20 +67,21 @@ def run():
     lower = 2 * (PAPER_N * PAPER_D + PAPER_V * PAPER_D)  # dE+dC bf16
     row("table1/lower_bound_grad_buffers_MB", 0, f"{lower/1e6:.0f}MB")
 
-    for impl in METHODS:
-        mem_l = static_mem_bytes(_loss_fn(impl),
+    for be in _methods():
+        mem_l = static_mem_bytes(_loss_fn(be),
                                  sds(PAPER_N, PAPER_D),
                                  sds(PAPER_V, PAPER_D), xi)
-        mem_g = static_mem_bytes(_grad_fn(impl),
+        mem_g = static_mem_bytes(_grad_fn(be),
                                  sds(PAPER_N, PAPER_D),
                                  sds(PAPER_V, PAPER_D), xi)
-        t_l = wall_us(_loss_fn(impl), E, C, x)
-        t_g = wall_us(_grad_fn(impl), E, C, x)
-        row(f"table1/{impl}/loss", t_l,
+        t_l = wall_us(_loss_fn(be), E, C, x)
+        t_g = wall_us(_grad_fn(be), E, C, x)
+        row(f"table1/{be.name}/loss", t_l,
             f"live={mem_l['total_live']/1e6:.0f}MB")
-        row(f"table1/{impl}/loss+grad", t_g,
+        row(f"table1/{be.name}/loss+grad", t_g,
             f"live={mem_g['total_live']/1e6:.0f}MB "
-            f"({LABEL[impl]})")
+            f"({LABEL.get(be.name, be.description)}; "
+            f"declared {be.memory_class})")
 
     # CCE Pallas kernel VMEM working set at paper size (analytic, DESIGN §2)
     bn, bv = choose_blocks(PAPER_N, PAPER_V, PAPER_D, 2)

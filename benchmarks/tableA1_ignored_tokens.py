@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import problem, row, wall_us
-from repro.core import linear_cross_entropy
+from repro.core import cross_entropy
 from repro.core.compaction import compact_valid_tokens
 from repro.kernels.ref import IGNORE_INDEX
 
@@ -21,11 +21,11 @@ def run():
     capacity = int(N * (1 - IGNORE_FRAC) * 1.15)  # static headroom
 
     def loss_masked(E, C, x):
-        return jnp.sum(linear_cross_entropy(E, C, x, impl="cce_jax"))
+        return jnp.sum(cross_entropy(E, C, x, impl="cce_jax"))
 
     def loss_compact(E, C, x):
         E2, x2 = compact_valid_tokens(E, x, capacity)
-        return jnp.sum(linear_cross_entropy(E2, C, x2, impl="cce_jax"))
+        return jnp.sum(cross_entropy(E2, C, x2, impl="cce_jax"))
 
     # exactness (paper: "no change to the loss/gradient")
     l1 = jax.jit(loss_masked)(E, C, x)

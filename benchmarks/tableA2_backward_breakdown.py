@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import row
 from repro.analysis import hlo as hlo_an
-from repro.core import linear_cross_entropy
+from repro.core import cross_entropy
 
 N, D, V = 4096, 2304, 32768  # paper geometry, vocab scaled to CPU compile
 
@@ -27,8 +27,8 @@ def run():
     sds_x = jax.ShapeDtypeStruct((N,), jnp.int32)
 
     def fwd(E, C, x):
-        return jnp.sum(linear_cross_entropy(E, C, x, impl="cce_jax",
-                                            softcap=30.0))
+        return jnp.sum(cross_entropy(E, C, x, impl="cce_jax",
+                                     softcap=30.0))
 
     def fwd_bwd(E, C, x):
         return jax.grad(fwd, argnums=(0, 1))(E, C, x)

@@ -3,10 +3,16 @@
 The beyond-paper extension (DESIGN.md §3): the classifier C is sharded over
 the ``model`` mesh axis and tokens over the ``data`` axis; the global
 (lse, pick) combine costs two O(N) psums — no O(N·|V|) logits and no
-all-gather of C. This example builds a small host mesh (8 CPU devices via
-XLA_FLAGS, set BEFORE jax import), checks the sharded loss and gradients
-against the single-device dense oracle, and prints the collective schedule
-actually lowered.
+all-gather of C. Since the backend-registry redesign, distribution is a
+*property of the call*: the same ``cross_entropy`` entry point takes
+``mesh=`` and routes whatever backend it resolved through the shard_map
+combine — and because every ``repro.losses`` entry is a function of the
+global (lse, pick[, sum_logits]), registry losses distribute too.
+
+This example builds a small host mesh (8 CPU devices via XLA_FLAGS, set
+BEFORE jax import), checks the sharded loss and gradients against the
+single-device dense oracle — for plain NLL *and* a registry loss — and
+prints the collective schedule actually lowered.
 
 Run:  PYTHONPATH=src python examples/distributed_cce.py
 """
@@ -18,9 +24,7 @@ import jax                                                  # noqa: E402
 import jax.numpy as jnp                                     # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.core.cce import linear_cross_entropy            # noqa: E402
-from repro.core.vocab_parallel import (                    # noqa: E402
-    vocab_parallel_cross_entropy)
+from repro.core import cross_entropy                        # noqa: E402
 
 
 def main():
@@ -43,13 +47,13 @@ def main():
 
     @jax.jit
     def dist_loss(E, C, x):
-        nll = vocab_parallel_cross_entropy(
-            E, C, x, mesh=mesh, vocab_axis="model", token_axes=("data",),
-            impl="cce_jax", reduction="none")
-        return jnp.mean(nll)
+        # the SAME entry point as single-device — just add mesh=
+        return cross_entropy(E, C, x, impl="cce_jax", mesh=mesh,
+                             vocab_axis="model", token_axes=("data",),
+                             reduction="mean")
 
     loss_dist = dist_loss(E_s, C_s, x_s)
-    loss_ref = jnp.mean(linear_cross_entropy(E, C, x, impl="dense"))
+    loss_ref = cross_entropy(E, C, x, impl="dense", reduction="mean")
     print(f"\nvocab-parallel CCE loss : {float(loss_dist):.6f}")
     print(f"single-device dense ref : {float(loss_ref):.6f}")
     assert abs(float(loss_dist) - float(loss_ref)) < 1e-4
@@ -57,13 +61,25 @@ def main():
     # gradients flow through the two psums + local custom VJP
     g_dist = jax.jit(jax.grad(dist_loss, argnums=(0, 1)))(E_s, C_s, x_s)
     g_ref = jax.grad(
-        lambda E, C: jnp.mean(linear_cross_entropy(E, C, x, impl="dense")),
+        lambda E, C: cross_entropy(E, C, x, impl="dense",
+                                   reduction="mean"),
         argnums=(0, 1))(E, C)
     for name, a, b in (("dE", g_dist[0], g_ref[0]),
                        ("dC", g_dist[1], g_ref[1])):
         err = float(jnp.abs(jnp.asarray(a) - b).max())
         print(f"max|{name}_dist - {name}_ref| = {err:.2e}")
         assert err < 1e-4, name
+
+    # registry losses distribute through the same call: label smoothing's
+    # third (sum_logits) output is one extra O(N) psum.
+    ls_dist = jax.jit(lambda E, C, x: cross_entropy(
+        E, C, x, loss="label_smoothing", impl="cce_jax", mesh=mesh,
+        reduction="mean"))(E_s, C_s, x_s)
+    ls_ref = cross_entropy(E, C, x, loss="label_smoothing", impl="dense",
+                           reduction="mean")
+    print(f"\nlabel_smoothing sharded : {float(ls_dist):.6f}  "
+          f"(local dense ref {float(ls_ref):.6f})")
+    assert abs(float(ls_dist) - float(ls_ref)) < 1e-4
 
     # show the wire cost: the only collectives are O(N) psums (+ the psums
     # of the shard_map transpose for dE/dC replication) — never O(N*V).

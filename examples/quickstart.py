@@ -2,11 +2,16 @@
 
 Shows the core contribution of the paper as a drop-in JAX op:
 
-  1. ``linear_cross_entropy(E, C, x, impl=...)`` — identical numerics across
-     the dense baseline, the chunked baseline, and CCE.
+  1. ``cross_entropy(E, C, x, impl=...)`` — identical numerics across every
+     registered backend (Pallas CCE, the scan twin, and the paper's
+     dense/chunked/liger baseline rows), discovered from the
+     ``repro.backends`` registry instead of a hardcoded list.
   2. Gradients match, including through the custom VJP with gradient
      filtering (the paper's 3.5x backward speedup trick).
-  3. The memory story: what each impl materializes.
+  3. The memory story: what each backend materializes (its declared
+     ``memory_class``).
+  4. One extra keyword — ``loss=`` — swaps in any registry loss;
+     ``mesh=`` (see examples/distributed_cce.py) shards the same call.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,7 +19,8 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro.core.cce import linear_cross_entropy
+from repro import backends
+from repro.core import cross_entropy
 from repro.kernels.ops import CCEConfig
 
 
@@ -33,21 +39,21 @@ def main():
     print(f"logit matrix would be N*V = {N*V:,} floats "
           f"({N*V*4/1e6:.1f} MB) — CCE never materializes it\n")
 
-    # -- 1. the loss, three ways -------------------------------------------
-    impls = ["dense", "chunked", "cce_jax", "cce"]
+    # -- 1. the loss, once per registered backend --------------------------
     losses = {}
-    for impl in impls:
-        nll = linear_cross_entropy(E, C, x, impl=impl, reduction="mean")
-        losses[impl] = float(nll)
-        print(f"  loss[{impl:8s}] = {losses[impl]:.6f}")
-    for impl in impls[1:]:
-        assert abs(losses[impl] - losses["dense"]) < 1e-4, impl
-    print("  all implementations agree.\n")
+    for be in backends.all_backends():
+        val = cross_entropy(E, C, x, impl=be.name, reduction="mean")
+        losses[be.name] = float(val)
+        print(f"  loss[{be.name:8s}] = {losses[be.name]:.6f}   "
+              f"memory {be.memory_class}")
+    for name, val in losses.items():
+        assert abs(val - losses["dense"]) < 1e-4, name
+    print("  all registered backends agree.\n")
 
     # -- 2. gradients match too (incl. the Pallas kernel custom VJP) -------
     def loss_fn(impl):
         def f(E, C):
-            return linear_cross_entropy(E, C, x, impl=impl, reduction="mean")
+            return cross_entropy(E, C, x, impl=impl, reduction="mean")
         return f
 
     dE_ref, dC_ref = jax.grad(loss_fn("dense"), argnums=(0, 1))(E, C)
@@ -64,9 +70,14 @@ def main():
         "CCE + vocab sorting": CCEConfig(sort_vocab=True),
     }
     for name, cfg in variants.items():
-        val = linear_cross_entropy(E, C, x, impl="cce", cfg=cfg,
-                                   reduction="mean")
+        val = cross_entropy(E, C, x, impl="cce", cfg=cfg, reduction="mean")
         print(f"    {name:28s} loss = {float(val):.6f}")
+
+    # -- 4. the same call takes any registry loss --------------------------
+    print("\n  registry losses through the same entry point:")
+    for loss_name in ("nll", "z_loss", "label_smoothing"):
+        val = cross_entropy(E, C, x, loss=loss_name, reduction="mean")
+        print(f"    loss={loss_name:16s} -> {float(val):.6f}")
 
     print("\nquickstart OK")
 

@@ -11,8 +11,10 @@ Faster:  PYTHONPATH=src python examples/train_lm.py --steps 50 --tiny
 Resume:  re-run the same command; it restores from --ckpt automatically.
 
 The training loss is any entry of the ``repro.losses`` registry — all of
-them ride the CCE (lse, pick[, sum]) primitive, so none re-introduce the
-N×V logit matrix:
+them ride the CCE (lse, pick[, sum]) primitive through the one
+``repro.core.cross_entropy`` head, so none re-introduce the N×V logit
+matrix; ``--loss-impl`` picks the ``repro.backends`` realization
+(capability-checked against the chosen loss):
 
   z-loss (PaLM-style logit-norm regularizer):
     PYTHONPATH=src python examples/train_lm.py --tiny --steps 50 \\
@@ -25,6 +27,7 @@ N×V logit matrix:
 import argparse
 import dataclasses
 
+from repro import backends
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.losses import LossConfig, list_losses
 from repro.train import Trainer
@@ -60,9 +63,14 @@ def main():
                          f"{list_losses()}")
     ap.add_argument("--loss-kwargs", default="{}",
                     help='JSON hyper-parameters for --loss')
+    ap.add_argument("--loss-impl", default=None,
+                    choices=["auto"] + backends.list_backends(),
+                    help="repro.backends entry for the loss head")
     args = ap.parse_args()
 
     cfg = model_tiny() if args.tiny else model_100m()
+    if args.loss_impl:
+        cfg = dataclasses.replace(cfg, loss_impl=args.loss_impl)
     print(f"model: {cfg.name}  params ~= {cfg.param_count()/1e6:.0f}M  "
           f"|V|={cfg.vocab_size}  loss_impl={cfg.loss_impl}  "
           f"loss={args.loss}")

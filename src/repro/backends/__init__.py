@@ -1,0 +1,34 @@
+"""repro.backends — registry of CCE-primitive realizations.
+
+    from repro import backends
+    be = backends.resolve("auto", requirements=backends.Requirements(
+        custom_cotangents=True, sum_logits=True))
+    lse, pick, zsum = be.lse_pick(E, C, x, cfg, with_sum_logits=True)
+
+Every impl the repo knows (Pallas ``cce``, scan ``cce_jax``, paper
+baselines ``dense``/``chunked``/``liger``) is a registered
+:class:`Backend` declaring its capabilities; :func:`resolve` replaces the
+string if/elif chains that used to live at every call site, and
+``python -m repro.backends`` prints the capability matrix.
+"""
+
+from repro.backends.base import (  # noqa: F401
+    Backend,
+    BackendResolutionError,
+    Requirements,
+    all_backends,
+    capability_matrix,
+    get,
+    list_backends,
+    register,
+    resolve,
+    resolve_config,
+)
+from repro.backends import entries as _entries  # noqa: F401  (populates)
+from repro.backends.entries import (  # noqa: F401
+    ChunkedBaseline,
+    DenseBaseline,
+    LigerBaseline,
+    PallasCCE,
+    ScanCCE,
+)

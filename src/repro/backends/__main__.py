@@ -1,0 +1,22 @@
+"""Print the backend capability matrix: ``python -m repro.backends``."""
+
+from repro import backends
+
+
+def main():
+    cols = ("memory_class", "sum_logits", "custom_cotangents",
+            "owns_reduction", "mesh", "preferred_platforms")
+    rows = [(name, caps) for name, caps in backends.capability_matrix()]
+    print(f"{'backend':10s} " + " ".join(f"{c:18s}" for c in cols))
+    for name, caps in rows:
+        cells = []
+        for c in cols:
+            v = caps[c]
+            if isinstance(v, tuple):
+                v = ",".join(v) or "-"
+            cells.append(f"{str(v):18s}")
+        print(f"{name:10s} " + " ".join(cells))
+
+
+if __name__ == "__main__":
+    main()

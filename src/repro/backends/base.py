@@ -1,0 +1,232 @@
+"""Backend substrate: every realization of the CCE primitive as a
+capability-declaring registered class.
+
+The paper's contribution is a *primitive* — per-token ``(lse, pick
+[, sum_logits])`` — with many interchangeable realizations: the Pallas TPU
+kernels, the portable ``lax.scan`` twin, the dense/chunked/liger paper
+baselines, and (through :mod:`repro.core.vocab_parallel`) the sharded
+combine of any of them. What each realization *can* do differs:
+
+  * only some expose the differentiable ``lse_pick`` primitive with
+    arbitrary cotangents (what every :mod:`repro.losses` entry needs);
+  * only some produce the third ``sum_logits`` output (label smoothing);
+  * one (liger) computes gradients in its forward and therefore owns the
+    loss reduction — the paper's composability caveat (§2);
+  * only primitive-capable backends can run under the vocab-parallel
+    shard_map combine.
+
+Instead of every call site re-encoding those quirks as string ``if/elif``
+chains, each backend declares them as class attributes and
+:func:`resolve` picks (or validates) a backend against a
+:class:`Requirements` — raising errors that enumerate which registered
+backends *do* satisfy the request.
+
+Registry pattern mirrors :mod:`repro.losses`: ``@register("name")`` on a
+:class:`Backend` subclass; singletons, looked up by :func:`get` /
+:func:`resolve`; ``python -m repro.backends`` prints the capability matrix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import CCEConfig
+from repro.kernels.ref import IGNORE_INDEX
+
+_REGISTRY: Dict[str, "Backend"] = {}
+
+
+def register(name: str) -> Callable[[type], type]:
+    """Class decorator: instantiate a :class:`Backend` subclass into the
+    registry under ``name``."""
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls()
+        return cls
+    return deco
+
+
+class BackendResolutionError(ValueError):
+    """A backend (or ``impl="auto"``) cannot satisfy the call's
+    requirements. The message enumerates the backends that can."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Requirements:
+    """What a call site needs from a backend.
+
+    custom_cotangents — the differentiable ``lse_pick`` primitive accepting
+        arbitrary cotangents (every registry loss, and any weighted or
+        vocab-parallel call).
+    sum_logits — the third per-token output (losses with
+        ``needs_sum_logits``, e.g. label smoothing).
+    mesh — the backend must run inside the vocab-parallel shard_map body.
+    reduction — the reduction the caller will apply; reduction-owning
+        backends (liger) only admit "mean". ``None`` skips the check.
+    """
+    custom_cotangents: bool = False
+    sum_logits: bool = False
+    mesh: bool = False
+    reduction: Optional[str] = None
+
+
+class Backend:
+    """One realization of the CCE primitive, with declared capabilities.
+
+    Class attributes are the capability matrix (see README); subclasses
+    implement :meth:`lse_pick` (primitive-capable backends) and/or
+    :meth:`nll` / :meth:`reduced_loss` (NLL-only baselines).
+    """
+    name: str = ""
+    description: str = ""
+    memory_class: str = "?"
+    # the differentiable (lse, pick[, sum]) primitive with arbitrary
+    # cotangents — prerequisite for every repro.losses entry
+    supports_custom_cotangents: bool = False
+    # third per-token output: sum of softcapped logits over the vocabulary
+    supports_sum_logits: bool = False
+    # gradients computed in the forward => the op owns the loss reduction
+    owns_reduction: bool = False
+    # usable as the per-shard body of the vocab-parallel shard_map combine
+    supports_mesh: bool = False
+    # platforms where impl="auto" prefers this backend
+    preferred_platforms: tuple = ()
+    # tie-break among platform-matching candidates (higher wins)
+    priority: int = 0
+    # shard_map varying-manual-axes checking (False for the Pallas
+    # interpret path, whose kernel-internal iotas trip the checker; the
+    # pessimistic transpose then inserts the replication psums itself)
+    shard_map_check_vma: bool = True
+
+    # -- uniform interface -------------------------------------------------
+
+    def lse_pick(self, E, C, x, cfg: CCEConfig, *,
+                 with_sum_logits: bool = False):
+        """(lse, pick[, sum_logits]) per token, shapes like ``x``."""
+        raise BackendResolutionError(self._cannot(
+            Requirements(custom_cotangents=True,
+                         sum_logits=with_sum_logits)))
+
+    def nll(self, E, C, x, cfg: CCEConfig, *, num_chunks: int = 8):
+        """Per-token NLL (IGNORE_INDEX positions get 0). Default lowers
+        onto :meth:`lse_pick`; NLL-only baselines override."""
+        lse, pick = self.lse_pick(E, C, x, cfg)
+        return jnp.where(x == IGNORE_INDEX, 0.0, lse - pick)
+
+    def reduced_loss(self, E, C, x, cfg: CCEConfig, *, num_chunks: int = 8):
+        """Scalar mean NLL for reduction-owning backends (liger)."""
+        raise BackendResolutionError(
+            f"backend {self.name!r} does not own its reduction; "
+            f"use nll()/lse_pick() and reduce explicitly")
+
+    # -- capability checking ----------------------------------------------
+
+    def unsupported(self, req: Requirements) -> list:
+        """Human-readable reasons this backend cannot serve ``req``
+        (empty list == satisfies)."""
+        reasons = []
+        if req.custom_cotangents and not self.supports_custom_cotangents:
+            reasons.append("no differentiable lse_pick primitive with "
+                           "custom cotangents (required by registry "
+                           "losses, per-token weights, and the "
+                           "vocab-parallel combine)")
+        if req.sum_logits and not self.supports_sum_logits:
+            reasons.append("no sum_logits third output")
+        if req.mesh and not self.supports_mesh:
+            reasons.append("cannot run under the vocab-parallel shard_map "
+                           "combine")
+        if (self.owns_reduction and req.reduction is not None
+                and req.reduction != "mean"):
+            reasons.append("computes grads in the forward and owns the "
+                           "reduction, so only reduction='mean' is "
+                           "expressible (the paper's composability "
+                           "caveat, §2)")
+        return reasons
+
+    def satisfies(self, req: Requirements) -> bool:
+        return not self.unsupported(req)
+
+    def capabilities(self) -> dict:
+        return {
+            "memory_class": self.memory_class,
+            "sum_logits": self.supports_sum_logits,
+            "custom_cotangents": self.supports_custom_cotangents,
+            "owns_reduction": self.owns_reduction,
+            "mesh": self.supports_mesh,
+            "preferred_platforms": self.preferred_platforms,
+        }
+
+    def _cannot(self, req: Requirements) -> str:
+        able = [b.name for b in all_backends() if b.satisfies(req)]
+        reasons = "; ".join(self.unsupported(req)) or "unknown requirement"
+        return (f"backend {self.name!r} cannot satisfy this call: {reasons}."
+                f" Backends that can: {', '.join(able) or '(none)'}")
+
+
+# ---------------------------------------------------------------------------
+# Lookup / resolution.
+# ---------------------------------------------------------------------------
+
+def list_backends() -> list:
+    """Registered backend names, sorted."""
+    return sorted(_REGISTRY)
+
+
+def all_backends() -> list:
+    """Registered backend singletons, sorted by name."""
+    return [_REGISTRY[n] for n in list_backends()]
+
+
+def get(name: str) -> Backend:
+    """The registered backend singleton ``name`` (no capability check)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise BackendResolutionError(
+            f"unknown backend {name!r}; registered: "
+            f"{', '.join(list_backends())}") from None
+
+
+def resolve(impl: str = "auto", *,
+            requirements: Requirements = Requirements()) -> Backend:
+    """The single dispatch point: name (or "auto") -> :class:`Backend`.
+
+    A named ``impl`` is validated against ``requirements``; ``"auto"``
+    picks the highest-priority satisfying backend that prefers the current
+    platform (falling back to any satisfying backend). Errors enumerate
+    the registered backends that *do* satisfy the requirements.
+    """
+    if impl != "auto":
+        be = get(impl)
+        if not be.satisfies(requirements):
+            raise BackendResolutionError(be._cannot(requirements))
+        return be
+
+    candidates = [b for b in all_backends() if b.satisfies(requirements)]
+    if not candidates:
+        detail = "; ".join(
+            f"{b.name}: {', '.join(b.unsupported(requirements))}"
+            for b in all_backends())
+        raise BackendResolutionError(
+            f"no registered backend satisfies {requirements} ({detail})")
+    platform = jax.default_backend()
+    preferred = [b for b in candidates if platform in b.preferred_platforms]
+    return max(preferred or candidates, key=lambda b: b.priority)
+
+
+def resolve_config(cfg: Optional[CCEConfig], softcap=None) -> CCEConfig:
+    """Canonical (cfg, softcap) merge shared by every entry point."""
+    if cfg is None:
+        return CCEConfig(softcap=softcap)
+    if softcap is not None and cfg.softcap != softcap:
+        return dataclasses.replace(cfg, softcap=softcap)
+    return cfg
+
+
+def capability_matrix() -> list:
+    """[(name, capabilities dict)] for docs/benchmarks/tests."""
+    return [(b.name, b.capabilities()) for b in all_backends()]

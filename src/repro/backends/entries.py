@@ -1,0 +1,109 @@
+"""The registered backends — one class per realization of the primitive.
+
+Each mirrors a row of the paper's Table 1 (plus the scan twin); the class
+attributes ARE the capability matrix rendered in the README. New backends
+(e.g. a GPU Triton port, a ragged/paged variant) register here and every
+caller of :func:`repro.backends.resolve` can use them immediately.
+"""
+
+from __future__ import annotations
+
+from repro.backends.base import Backend, register
+from repro.core import baselines, cce_jax
+from repro.kernels import ops as kernel_ops
+
+
+@register("cce")
+class PallasCCE(Backend):
+    """The paper's method: fused Pallas TPU kernels (interpret mode on
+    CPU), gradient filtering + vocab sorting, custom VJP over arbitrary
+    cotangents."""
+    description = "Pallas TPU kernels (paper's CCE; interpret on CPU)"
+    memory_class = "O(N·D + V·D)"
+    supports_custom_cotangents = True
+    supports_sum_logits = True
+    supports_mesh = True
+    preferred_platforms = ("tpu",)
+    priority = 100
+    shard_map_check_vma = False
+
+    def lse_pick(self, E, C, x, cfg, *, with_sum_logits=False):
+        if with_sum_logits:
+            return kernel_ops.lse_pick_sum_pallas(E, C, x, cfg)
+        return kernel_ops.lse_and_pick_pallas(E, C, x, cfg)
+
+    def nll(self, E, C, x, cfg, *, num_chunks=8):
+        return kernel_ops.linear_cross_entropy_pallas(E, C, x, cfg)
+
+
+@register("cce_jax")
+class ScanCCE(Backend):
+    """Portable ``lax.scan`` twin — same algorithm and memory class,
+    analyzable HLO; what the distributed train step lowers on the
+    dry-run."""
+    description = "portable lax.scan twin of the CCE kernels"
+    memory_class = "O(N·D + V·D)"
+    supports_custom_cotangents = True
+    supports_sum_logits = True
+    supports_mesh = True
+    preferred_platforms = ("cpu", "gpu", "tpu")
+    priority = 90
+
+    def lse_pick(self, E, C, x, cfg, *, with_sum_logits=False):
+        if with_sum_logits:
+            return cce_jax.lse_pick_sum_jax(E, C, x, cfg)
+        return cce_jax.lse_and_pick_jax(E, C, x, cfg)
+
+    def nll(self, E, C, x, cfg, *, num_chunks=8):
+        return cce_jax.linear_cross_entropy_jax(E, C, x, cfg)
+
+
+@register("dense")
+class DenseBaseline(Backend):
+    """Paper "Baseline"/"torch.compile" row: the (N, V) logit matrix is
+    materialized; plain autodiff provides the custom-cotangent primitive,
+    making this the O(N·V) reference twin the tests gradcheck against."""
+    description = "materialized-logits baseline (reference twin)"
+    memory_class = "O(N·V)"
+    supports_custom_cotangents = True
+    supports_sum_logits = True
+    supports_mesh = True   # Megatron-style vocab-parallel CE per shard
+    preferred_platforms = ()
+    priority = 10
+
+    def lse_pick(self, E, C, x, cfg, *, with_sum_logits=False):
+        return baselines.dense_lse_pick(E, C, x, cfg.softcap,
+                                        with_sum=with_sum_logits)
+
+    def nll(self, E, C, x, cfg, *, num_chunks=8):
+        return baselines.dense_linear_cross_entropy(E, C, x, cfg.softcap)
+
+
+@register("chunked")
+class ChunkedBaseline(Backend):
+    """Paper "Torch Tune (8 chunks)" row: token-chunked dense loss under
+    ``jax.checkpoint``. Plain-NLL only — no primitive outputs."""
+    description = "Torch-Tune-style N-chunked dense loss"
+    memory_class = "O(N/K·V)"
+    preferred_platforms = ()
+    priority = 5
+
+    def nll(self, E, C, x, cfg, *, num_chunks=8):
+        return baselines.chunked_linear_cross_entropy(
+            E, C, x, cfg.softcap, num_chunks)
+
+
+@register("liger")
+class LigerBaseline(Backend):
+    """Paper "Liger Kernels" row: gradients computed during the forward
+    and stored, so the op owns the (mean) reduction — the composability
+    restriction the registry losses avoid."""
+    description = "Liger-style forward-computed grads, scalar mean loss"
+    memory_class = "O(N·D + V·D)"
+    owns_reduction = True
+    preferred_platforms = ()
+    priority = 1
+
+    def reduced_loss(self, E, C, x, cfg, *, num_chunks=8):
+        return baselines.liger_style_cross_entropy(
+            E, C, x, cfg.softcap, num_chunks)

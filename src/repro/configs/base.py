@@ -64,7 +64,7 @@ class ModelConfig:
     encoder_layers: int = 0             # >0 => encoder-decoder (seamless)
     input_mode: str = "tokens"          # tokens | embeds (vlm/audio stubs)
     dtype: str = "bfloat16"
-    loss_impl: str = "cce_jax"          # repro.core impl for the head
+    loss_impl: str = "cce_jax"          # repro.backends entry for the head
     remat: str = "block"                # none | block (checkpoint each group)
     # Megatron-style vocab padding: embed/head rows are padded to a multiple
     # of this so the classifier shards evenly over any TP degree dividing it
@@ -169,3 +169,9 @@ class TrainConfig:
 
     def loss_options(self) -> dict:
         return dict(self.loss_kwargs)
+
+    def loss_config(self):
+        """The same information as a ``repro.losses.LossConfig`` — the
+        carrier ``repro.core.cross_entropy(loss=...)`` accepts directly."""
+        from repro.losses import LossConfig
+        return LossConfig(name=self.loss, kwargs=self.loss_kwargs)

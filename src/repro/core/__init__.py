@@ -1,10 +1,13 @@
 """Core CCE API — the paper's primary contribution as composable JAX ops.
 
-The loss *family* built on these ops lives in :mod:`repro.losses`."""
+One entry point: :func:`cross_entropy` (any :mod:`repro.losses` entry, any
+:mod:`repro.backends` realization, local or vocab-parallel via ``mesh=``).
+``linear_cross_entropy`` / ``vocab_parallel_cross_entropy`` are deprecated
+shims kept for older callers."""
 
+from repro.core.api import cross_entropy  # noqa: F401
 from repro.core.cce import (  # noqa: F401
     CCEConfig,
-    IMPLS,
     linear_cross_entropy,
     lse_and_pick,
 )
@@ -13,3 +16,10 @@ from repro.core.vocab_parallel import (  # noqa: F401
     vocab_parallel_lse_pick,
 )
 from repro.kernels.ref import IGNORE_INDEX  # noqa: F401
+
+
+def __getattr__(name):
+    if name == "IMPLS":   # legacy alias; derived from the backend registry
+        from repro.core import cce
+        return cce.IMPLS
+    raise AttributeError(name)

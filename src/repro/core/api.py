@@ -1,0 +1,93 @@
+"""One loss entry point: ``cross_entropy(E, C, x, ..., mesh=...)``.
+
+The public surface of the whole repo's loss stack. One call expresses:
+
+  * *which loss* — ``loss=`` takes a :mod:`repro.losses` registry name, a
+    :class:`~repro.losses.LossConfig`, or a live
+    :class:`~repro.losses.VocabLoss` (default: plain NLL, the paper's
+    loss);
+  * *which realization* — ``impl=`` names a :mod:`repro.backends` entry or
+    ``"auto"``; resolution is capability-driven, so asking an NLL-only
+    baseline for a registry loss (or liger for a per-token reduction)
+    raises an error that lists the backends which *can* do it;
+  * *where it runs* — ``mesh=None`` is single-device; passing a mesh
+    routes the *same resolved backend* through the vocab-parallel
+    shard_map combine (classifier sharded over ``vocab_axis``, tokens
+    over ``token_axes``), so distribution is a property of the call, not
+    a different function. Every registry loss works sharded or local
+    through this one path.
+
+``linear_cross_entropy`` and ``vocab_parallel_cross_entropy`` remain as
+thin deprecated shims over this function.
+"""
+
+from __future__ import annotations
+
+from repro.kernels.ops import CCEConfig
+
+
+def _resolve_loss(loss):
+    # lazy: repro.losses imports repro.backends, which imports repro.core
+    from repro.losses import base as losses_base
+    if loss is None:
+        return losses_base.get_loss("nll")
+    if isinstance(loss, str):
+        return losses_base.get_loss(loss)
+    if isinstance(loss, losses_base.LossConfig):
+        return loss.build()
+    if isinstance(loss, losses_base.VocabLoss):
+        return loss
+    raise TypeError(
+        f"loss must be a registry name, LossConfig, or VocabLoss; got "
+        f"{type(loss).__name__}")
+
+
+def cross_entropy(E, C, x, *, loss=None, impl: str = "auto",
+                  mesh=None, vocab_axis: str = "model",
+                  token_axes=("data",),
+                  reduction: str = "none", weights=None,
+                  softcap: float | None = None,
+                  cfg: CCEConfig | None = None, num_chunks: int = 8):
+    """Cross-entropy-family loss of logits ``softcap(E @ C.T)`` vs labels.
+
+    E: (..., D) embeddings; C: (V, D) classifier; x: (...) int labels
+    (``IGNORE_INDEX`` positions get loss 0 / no gradient).
+
+    loss: registry name / LossConfig / VocabLoss instance (default "nll").
+    impl: backend name from ``repro.backends.list_backends()`` or "auto".
+    mesh: optional ``jax.sharding.Mesh``; when given, C is expected
+        sharded over ``vocab_axis`` and tokens over ``token_axes``, and
+        the resolved backend runs per-shard under the O(N)-wire
+        vocab-parallel combine.
+    reduction: "none" (per-token) | "mean" (over non-ignored tokens,
+        weight-normalized when ``weights`` is given) | "sum".
+    weights: optional per-token weights (shape of x).
+    num_chunks: chunk count for the chunked/liger baselines.
+    """
+    from repro import backends
+    from repro.losses.base import reduce_loss
+    from repro.losses.zoo import NLL
+
+    loss_obj = _resolve_loss(loss)
+    cfg = backends.resolve_config(cfg, softcap)
+
+    # Plain unweighted local NLL is the one case the NLL-only baselines
+    # (chunked, liger) can serve; everything else needs the differentiable
+    # lse_pick primitive.
+    needs_primitive = (not isinstance(loss_obj, NLL)
+                       or weights is not None or mesh is not None)
+    req = backends.Requirements(
+        custom_cotangents=needs_primitive,
+        sum_logits=loss_obj.needs_sum_logits,
+        mesh=mesh is not None,
+        reduction=reduction)
+    be = backends.resolve(impl, requirements=req)
+
+    if be.owns_reduction:                       # liger: scalar mean NLL
+        return be.reduced_loss(E, C, x, cfg, num_chunks=num_chunks)
+    if not be.supports_custom_cotangents:       # chunked: per-token NLL
+        return reduce_loss(be.nll(E, C, x, cfg, num_chunks=num_chunks),
+                           x, reduction)
+    return loss_obj(E, C, x, backend=be, cfg=cfg, reduction=reduction,
+                    weights=weights, mesh=mesh, vocab_axis=vocab_axis,
+                    token_axes=token_axes)

@@ -1,49 +1,44 @@
-"""Public CCE API — the paper's contribution as one composable JAX op.
+"""Legacy CCE API — thin deprecated shims over :func:`repro.core.cross_entropy`.
 
-``linear_cross_entropy(E, C, x, impl=...)`` dispatches between:
-
-  impl="cce"        Pallas TPU kernels (interpret-mode on CPU) — the paper's
-                    method, with gradient filtering + vocab sorting.
-  impl="cce_jax"    portable lax.scan twin (same algorithm & memory class;
-                    what the distributed train step lowers on the dry-run).
-  impl="dense"      paper "Baseline"/"torch.compile" row (O(N·V) memory).
-  impl="chunked"    paper "Torch Tune" row (O(N/K·V)).
-  impl="liger"      paper "Liger Kernels" row (scalar loss, fwd-computed
-                    grads, O(N·D + V·D)).
-  impl="auto"       "cce" on TPU, "cce_jax" elsewhere.
+``linear_cross_entropy(E, C, x, impl=...)`` predates the backend registry;
+new code should call :func:`repro.core.cross_entropy` (one entry point for
+every loss, backend, and — via ``mesh=`` — the vocab-parallel combine) and
+:func:`repro.backends.resolve` for dispatch. Backends are registered in
+:mod:`repro.backends` (``cce``, ``cce_jax``, ``dense``, ``chunked``,
+``liger``; see ``python -m repro.backends`` for the capability matrix).
 
 Reductions: "none" (per-token), "mean" (over non-ignored tokens), "sum".
 
 NLL is only one member of the loss family built on the ``lse_and_pick``
 primitive: see :mod:`repro.losses` for the registry of memory-efficient
 vocabulary losses (z-loss, focal, label smoothing, per-token weighting,
-sequence scoring) — ``repro.losses.get_loss(name, **kw)`` — all of which
-inherit CCE's O(N·D + V·D) memory class through this module.
+sequence scoring) — all of which inherit CCE's O(N·D + V·D) memory class.
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
+import warnings
 
-from repro.core import baselines, cce_jax
 from repro.kernels import ops as kernel_ops
-from repro.kernels.ref import IGNORE_INDEX
 
 CCEConfig = kernel_ops.CCEConfig
 
-IMPLS = ("auto", "cce", "cce_jax", "dense", "chunked", "liger")
+
+def _impls():
+    from repro import backends
+    return ("auto",) + tuple(backends.list_backends())
+
+
+def __getattr__(name):
+    if name == "IMPLS":   # registry-derived, computed lazily
+        return _impls()
+    raise AttributeError(name)
 
 
 def _reduce(nll, x, reduction):
-    if reduction == "none":
-        return nll
-    valid = (x != IGNORE_INDEX)
-    total = jnp.sum(nll)
-    if reduction == "sum":
-        return total
-    if reduction == "mean":
-        return total / jnp.maximum(jnp.sum(valid), 1).astype(nll.dtype)
-    raise ValueError(f"unknown reduction {reduction!r}")
+    """Deprecated alias of the canonical :func:`repro.losses.reduce_loss`."""
+    from repro.losses.base import reduce_loss
+    return reduce_loss(nll, x, reduction)
 
 
 def linear_cross_entropy(E, C, x, *, impl: str = "auto",
@@ -51,40 +46,20 @@ def linear_cross_entropy(E, C, x, *, impl: str = "auto",
                          reduction: str = "none",
                          cfg: CCEConfig | None = None,
                          num_chunks: int = 8):
-    """Cross-entropy of next-token logits ``softcap(E @ C.T)`` vs labels x.
+    """Deprecated shim: plain-NLL ``cross_entropy``.
 
     E: (..., D) embeddings, C: (V, D) classifier, x: (...) int labels
-    (IGNORE_INDEX positions get loss 0 / no gradient).
+    (IGNORE_INDEX positions get loss 0 / no gradient). Use
+    ``repro.core.cross_entropy`` — same semantics, plus ``loss=`` and
+    ``mesh=``.
     """
-    if impl == "auto":
-        import jax
-        impl = "cce" if jax.default_backend() == "tpu" else "cce_jax"
-    if cfg is None:
-        cfg = CCEConfig(softcap=softcap)
-    elif softcap is not None and cfg.softcap != softcap:
-        import dataclasses
-        cfg = dataclasses.replace(cfg, softcap=softcap)
-
-    if impl == "cce":
-        nll = kernel_ops.linear_cross_entropy_pallas(E, C, x, cfg)
-    elif impl == "cce_jax":
-        nll = cce_jax.linear_cross_entropy_jax(E, C, x, cfg)
-    elif impl == "dense":
-        nll = baselines.dense_linear_cross_entropy(E, C, x, cfg.softcap)
-    elif impl == "chunked":
-        nll = baselines.chunked_linear_cross_entropy(
-            E, C, x, cfg.softcap, num_chunks)
-    elif impl == "liger":
-        if reduction != "mean":
-            raise ValueError("liger-style computes grads in the forward and "
-                             "therefore owns the reduction; use "
-                             "reduction='mean' (the paper's composability "
-                             "caveat, §2).")
-        return baselines.liger_style_cross_entropy(
-            E, C, x, cfg.softcap, num_chunks)
-    else:
-        raise ValueError(f"unknown impl {impl!r}; one of {IMPLS}")
-    return _reduce(nll, x, reduction)
+    warnings.warn("linear_cross_entropy is deprecated; use "
+                  "repro.core.cross_entropy(E, C, x, impl=..., ...)",
+                  DeprecationWarning, stacklevel=2)
+    from repro.core.api import cross_entropy
+    return cross_entropy(E, C, x, impl=impl, softcap=softcap,
+                         reduction=reduction, cfg=cfg,
+                         num_chunks=num_chunks)
 
 
 def lse_and_pick(E, C, x, *, impl: str = "auto",
@@ -98,21 +73,11 @@ def lse_and_pick(E, C, x, *, impl: str = "auto",
     a static flag, so the two-output path compiles no dead sum compute.
     ``impl="dense"`` materializes the (N, V) logit matrix — the O(N·V)
     reference twin the loss tests gradcheck against.
+
+    Thin wrapper over ``repro.backends.resolve(impl).lse_pick(...)``.
     """
-    if impl == "auto":
-        import jax
-        impl = "cce" if jax.default_backend() == "tpu" else "cce_jax"
-    cfg = cfg or CCEConfig()
-    if impl == "cce":
-        if with_sum_logits:
-            return kernel_ops.lse_pick_sum_pallas(E, C, x, cfg)
-        return kernel_ops.lse_and_pick_pallas(E, C, x, cfg)
-    if impl == "cce_jax":
-        if with_sum_logits:
-            return cce_jax.lse_pick_sum_jax(E, C, x, cfg)
-        return cce_jax.lse_and_pick_jax(E, C, x, cfg)
-    if impl == "dense":
-        return baselines.dense_lse_pick(E, C, x, cfg.softcap,
-                                        with_sum=with_sum_logits)
-    raise ValueError(f"lse_and_pick supports impl in ('cce', 'cce_jax', "
-                     f"'dense'), got {impl!r}")
+    from repro import backends
+    be = backends.resolve(impl, requirements=backends.Requirements(
+        custom_cotangents=True, sum_logits=with_sum_logits))
+    return be.lse_pick(E, C, x, backends.resolve_config(cfg),
+                       with_sum_logits=with_sum_logits)

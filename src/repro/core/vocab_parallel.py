@@ -17,6 +17,8 @@ primitive; the global combine needs only O(N) collectives:
 Compare: a Megatron-style vocab-parallel CE materializes the (N, |V|/tp)
 logit shard in HBM; CCE never does. Wire bytes stay O(N) either way — CCE
 removes the O(N·|V|/tp) *memory* term, which is what limits batch size.
+(The Megatron baseline is still expressible: ``backend="dense"`` runs the
+materialized per-shard lse_pick under the same combine.)
 
 Tokens are sharded over the data axes (sequence/data parallel): the loss is
 token-local, so composing the two costs nothing extra. Autodiff flows
@@ -24,7 +26,9 @@ through psum/pmax, and the local primitive's custom VJP receives exactly the
 per-shard cotangents (softmax weights of the global LSE) — no bespoke
 backward is needed. Because the whole loss family in :mod:`repro.losses` is
 a function of the global ``(lse, pick[, sum_logits])``, every registry loss
-distributes through this module unchanged.
+distributes through this module unchanged — callers reach it through
+``repro.core.cross_entropy(..., mesh=...)``, which routes whichever
+:mod:`repro.backends` entry it resolved into this combine.
 """
 
 from __future__ import annotations
@@ -34,15 +38,14 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core import cce as cce_api
 from repro.kernels.ops import CCEConfig
-from repro.kernels.ref import IGNORE_INDEX
 
 
-def _local_lse_pick(E_l, C_l, x_l, vocab_axis, token_axes, impl, cfg,
-                    use_vma, with_sum):
-    """Per-device body: local CCE over this device's vocab shard."""
-    if use_vma:
+def _local_lse_pick(E_l, C_l, x_l, vocab_axis, token_axes, backend, cfg,
+                    with_sum):
+    """Per-device body: local CCE over this device's vocab shard, computed
+    by whichever registered backend the caller resolved."""
+    if backend.shard_map_check_vma:
         # E/x arrive replicated over the vocab axis and C replicated over the
         # token axes; mark them device-varying so the transpose of these
         # casts (a psum over the corresponding shards) yields the correct
@@ -58,25 +61,8 @@ def _local_lse_pick(E_l, C_l, x_l, vocab_axis, token_axes, impl, cfg,
     lo = idx * v_local
     in_range = (x_l >= lo) & (x_l < lo + v_local)
     x_loc = jnp.where(in_range, x_l - lo, 0)
-    zsum_l = None
-    if impl == "dense":
-        # Megatron-style vocab-parallel CE baseline: the (N_loc, V_loc)
-        # logit shard IS materialized (the O(N·|V|/tp) object CCE removes).
-        # Kept for the paper-baseline comparison at pod scale.
-        a = jax.lax.dot_general(E_l, C_l, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)
-        if cfg is not None and cfg.softcap is not None:
-            a = cfg.softcap * jnp.tanh(a / cfg.softcap)
-        lse_l = jax.scipy.special.logsumexp(a, axis=1)
-        pick_l = jnp.take_along_axis(a, x_loc[:, None], axis=1)[:, 0]
-        if with_sum:
-            zsum_l = jnp.sum(a, axis=1)
-    else:
-        out = cce_api.lse_and_pick(E_l, C_l, x_loc, impl=impl, cfg=cfg,
-                                   with_sum_logits=with_sum)
-        lse_l, pick_l = out[0], out[1]
-        if with_sum:
-            zsum_l = out[2]
+    out = backend.lse_pick(E_l, C_l, x_loc, cfg, with_sum_logits=with_sum)
+    lse_l, pick_l = out[0], out[1]
 
     pick = jax.lax.psum(jnp.where(in_range, pick_l, 0.0), vocab_axis)
     # stop_gradient *before* pmax (no diff rule) — LSE is mathematically
@@ -86,36 +72,45 @@ def _local_lse_pick(E_l, C_l, x_l, vocab_axis, token_axes, impl, cfg,
     if not with_sum:
         return lse, pick
     # sum of logits is linear over the vocab partition: one psum.
-    zsum = jax.lax.psum(zsum_l, vocab_axis)
+    zsum = jax.lax.psum(out[2], vocab_axis)
     return lse, pick, zsum
 
 
 def vocab_parallel_lse_pick(E, C, x, *, mesh, vocab_axis: str = "model",
                             token_axes=("data",), impl: str = "auto",
-                            cfg: CCEConfig | None = None,
+                            backend=None, cfg: CCEConfig | None = None,
                             with_sum_logits: bool = False):
     """(lse, pick[, sum_logits]) with C sharded over ``vocab_axis`` and
     tokens sharded over ``token_axes``. E: (N, D), C: (V, D), x: (N,).
+
+    ``backend`` is a resolved :class:`repro.backends.Backend` (or pass
+    ``impl`` to resolve one here); the same backend that would run locally
+    runs per-shard.
     """
-    cfg = cfg or CCEConfig()
+    from repro import backends as backends_mod
+    if backend is None:
+        backend = backends_mod.resolve(
+            impl, requirements=backends_mod.Requirements(
+                custom_cotangents=True, sum_logits=with_sum_logits,
+                mesh=True))
+    cfg = backends_mod.resolve_config(cfg)
     token_spec = P(tuple(token_axes))
 
-    # check_vma must be off for the Pallas path: in interpret mode (CPU) the
-    # kernel body is evaluated as JAX ops whose internal iotas/constants are
-    # unvarying, which trips the checker; shard_map then inserts the
-    # replication-transpose psums pessimistically, so gradients match.
-    use_vma = impl != "cce"
-
+    # check_vma must be off for the Pallas path (backend attribute): in
+    # interpret mode (CPU) the kernel body is evaluated as JAX ops whose
+    # internal iotas/constants are unvarying, which trips the checker;
+    # shard_map then inserts the replication-transpose psums pessimistically,
+    # so gradients match.
     def f(E_l, C_l, x_l):
-        return _local_lse_pick(E_l, C_l, x_l, vocab_axis, token_axes, impl,
-                               cfg, use_vma, with_sum_logits)
+        return _local_lse_pick(E_l, C_l, x_l, vocab_axis, token_axes,
+                               backend, cfg, with_sum_logits)
 
     n_out = 3 if with_sum_logits else 2
     return compat.shard_map(
         f, mesh=mesh,
         in_specs=(P(tuple(token_axes), None), P(vocab_axis, None), token_spec),
         out_specs=(token_spec,) * n_out,
-        check_vma=use_vma,
+        check_vma=backend.shard_map_check_vma,
     )(E, C, x)
 
 
@@ -123,10 +118,13 @@ def vocab_parallel_cross_entropy(E, C, x, *, mesh, vocab_axis: str = "model",
                                  token_axes=("data",), impl: str = "auto",
                                  cfg: CCEConfig | None = None,
                                  reduction: str = "none"):
-    """Vocab-parallel CCE loss. IGNORE_INDEX handled as in the local API."""
-    safe_x = jnp.where(x == IGNORE_INDEX, 0, x).astype(jnp.int32)
-    lse, pick = vocab_parallel_lse_pick(
-        E, C, safe_x, mesh=mesh, vocab_axis=vocab_axis,
-        token_axes=token_axes, impl=impl, cfg=cfg)
-    nll = jnp.where(x == IGNORE_INDEX, 0.0, lse - pick)
-    return cce_api._reduce(nll, x, reduction)
+    """Deprecated shim: ``cross_entropy(..., mesh=mesh)`` — distribution is
+    now a property of the call, not a different function."""
+    import warnings
+    warnings.warn("vocab_parallel_cross_entropy is deprecated; use "
+                  "repro.core.cross_entropy(E, C, x, mesh=mesh, ...)",
+                  DeprecationWarning, stacklevel=2)
+    from repro.core.api import cross_entropy
+    return cross_entropy(E, C, x, impl=impl, mesh=mesh,
+                         vocab_axis=vocab_axis, token_axes=token_axes,
+                         cfg=cfg, reduction=reduction)

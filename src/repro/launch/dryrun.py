@@ -27,10 +27,10 @@ import jax
 import jax.numpy as jnp
 
 import repro.configs as configs
+from repro import backends
 from repro.analysis import hlo as hlo_an
 from repro.analysis.roofline import roofline
 from repro.configs.base import SHAPES, TrainConfig
-from repro.core.vocab_parallel import vocab_parallel_cross_entropy
 from repro.launch.inputs import serve_specs, supports_shape, train_specs
 from repro.launch.mesh import data_axes_of, make_production_mesh
 from repro.models import transformer as T
@@ -45,18 +45,19 @@ def _train_fn(cfg, mesh):
     vocab-parallel CCE head over the model axis."""
     dp = data_axes_of(mesh)
 
-    # cfg.loss_impl selects the head: "cce_jax" (production), "dense" (the
-    # paper's baseline as a Megatron vocab-parallel CE), or "cce" (Pallas).
-    impl = cfg.loss_impl if cfg.loss_impl in ("dense", "cce") else "cce_jax"
-
-    def loss_fn(e_flat, c, labels):
-        return vocab_parallel_cross_entropy(
-            e_flat, c, labels, mesh=mesh, vocab_axis="model",
-            token_axes=dp, impl=impl,
-            cfg=None, reduction="none")
+    # cfg.loss_impl selects the head by capability, not by name: any
+    # mesh-capable backend (cce_jax production twin, dense as the Megatron
+    # vocab-parallel CE baseline, cce Pallas) runs under the combine;
+    # anything else falls back to auto-resolution among those that can.
+    req = backends.Requirements(custom_cotangents=True, mesh=True)
+    try:
+        be = backends.resolve(cfg.loss_impl, requirements=req)
+    except backends.BackendResolutionError:
+        be = backends.resolve("auto", requirements=req)
 
     tcfg = TrainConfig(microbatch=cfg.train_microbatch)
-    return make_train_step(cfg, tcfg, loss_fn=loss_fn)
+    return make_train_step(cfg, tcfg, loss_impl=be.name, mesh=mesh,
+                           vocab_axis="model", token_axes=dp)
 
 
 def _serve_fn(cfg):

@@ -2,13 +2,16 @@
 
   PYTHONPATH=src python -m repro.launch.train --arch gemma-2b \
       --steps 200 --batch 8 --seq 512 [--reduced] [--ckpt DIR] \
-      [--loss-impl cce|cce_jax|dense|chunked] \
+      [--loss-impl auto|cce|cce_jax|dense|chunked|liger] \
       [--loss nll|z_loss|focal|weighted|label_smoothing] \
       [--loss-kwargs '{"eps": 0.1}']
 
 The training loss comes from the ``repro.losses`` registry — every entry
 lowers onto the CCE (lse, pick[, sum]) primitive, so switching losses never
-re-introduces the N×V logit matrix.
+re-introduces the N×V logit matrix. ``--loss-impl`` names a
+``repro.backends`` entry; (loss, backend) compatibility is checked by
+capability at resolution time, with errors listing the backends that do
+support the requested loss.
 
 Runs on whatever devices are available; for the production mesh this is
 driven by the cluster launcher with one process per host (jax.distributed),
@@ -19,6 +22,7 @@ import argparse
 import dataclasses
 
 import repro.configs as configs
+from repro import backends
 from repro.configs.base import TrainConfig
 from repro.losses import LossConfig, list_losses
 from repro.train import Trainer
@@ -35,7 +39,9 @@ def main():
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-test-sized config")
     ap.add_argument("--ckpt", default=None)
-    ap.add_argument("--loss-impl", default=None)
+    ap.add_argument("--loss-impl", default=None,
+                    choices=["auto"] + backends.list_backends(),
+                    help="repro.backends entry for the loss head")
     ap.add_argument("--loss", default="nll",
                     help=f"registry loss; one of {list_losses()}")
     ap.add_argument("--loss-kwargs", default="{}",

@@ -4,12 +4,19 @@
     loss = get_loss("label_smoothing", eps=0.1)
     per_token = loss(E, C, x, impl="cce")          # O(N·D + V·D) memory
     scalar    = loss(E, C, x, reduction="mean")
+    sharded   = loss(E, C, x, mesh=mesh)           # vocab-parallel combine
+
+or, equivalently, through the one public entry point:
+
+    from repro.core import cross_entropy
+    cross_entropy(E, C, x, loss="label_smoothing", impl="auto", mesh=None)
 
 Registered losses (see ``repro/losses/zoo.py``): nll, z_loss, focal,
-weighted, label_smoothing, seq_logprob. All lower onto
-``repro.core.lse_and_pick`` and therefore never materialize the N×V logit
-matrix under ``impl in ("cce", "cce_jax")``; ``impl="dense"`` is the
-materialized reference twin used by the tests.
+weighted, label_smoothing, seq_logprob. All lower onto the ``lse_pick``
+primitive of a :mod:`repro.backends` entry (resolved by capability) and
+therefore never materialize the N×V logit matrix under the CCE-class
+backends; ``impl="dense"`` is the materialized reference twin used by the
+tests.
 """
 
 from repro.losses.base import (  # noqa: F401
@@ -17,6 +24,7 @@ from repro.losses.base import (  # noqa: F401
     VocabLoss,
     get_loss,
     list_losses,
+    reduce_loss,
     register,
 )
 from repro.losses import zoo as _zoo  # noqa: F401  (populates the registry)

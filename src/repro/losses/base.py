@@ -15,6 +15,11 @@ recomputes logit tiles in VMEM/registers exactly as for plain NLL.
 :class:`VocabLoss` packages that recipe; concrete losses only implement
 :meth:`VocabLoss.per_token` on the primitive's outputs.
 
+Which *realization* computes the primitive is a :mod:`repro.backends`
+entry (resolved by capability, never by string chains here), and passing
+``mesh=`` routes the same backend through the vocab-parallel shard_map
+combine — so every registry loss runs sharded or local through one path.
+
 Registry: losses register under a string name (``@register("z_loss")``);
 ``get_loss(name, **kwargs)`` instantiates a configured loss, and
 :class:`LossConfig` is the hashable config-file/CLI carrier of the same
@@ -28,7 +33,7 @@ from typing import Any, Callable, Dict
 
 import jax.numpy as jnp
 
-from repro.core import cce as cce_api
+from repro import backends
 from repro.kernels.ops import CCEConfig
 from repro.kernels.ref import IGNORE_INDEX
 
@@ -99,9 +104,15 @@ class LossConfig:
 
 
 def reduce_loss(per_token, x, reduction: str, weights=None):
-    """"none" | "sum" | "mean". Mean is over non-ignored tokens; with
-    ``weights`` it is weight-normalized (sum w·l / sum w over valid tokens —
-    the completion-only fine-tuning convention)."""
+    """The canonical reduction — "none" | "sum" | "mean" — shared by every
+    entry point (``repro.core`` used to carry a near-twin ``_reduce``).
+
+    Mean is over non-ignored tokens; with ``weights`` it is
+    weight-normalized (sum w·l / sum w over valid tokens — the
+    completion-only fine-tuning convention). One denominator semantics for
+    both cases: a small floor (1e-8) that only engages when *nothing* is
+    valid, in which case the numerator is already 0 and the mean is 0.
+    """
     if reduction == "none":
         return per_token
     valid = x != IGNORE_INDEX
@@ -117,15 +128,40 @@ def reduce_loss(per_token, x, reduction: str, weights=None):
     raise ValueError(f"unknown reduction {reduction!r}")
 
 
+def primitive_outputs(backend, E, C, x, cfg: CCEConfig, *,
+                      with_sum_logits: bool = False, mesh=None,
+                      vocab_axis: str = "model", token_axes=("data",)):
+    """(lse, pick[, sum_logits]) tuple from ``backend`` — locally, or under
+    the vocab-parallel shard_map combine when ``mesh`` is given. The one
+    junction where "distributed" becomes a property of the call."""
+    if mesh is None:
+        return backend.lse_pick(E, C, x, cfg,
+                                with_sum_logits=with_sum_logits)
+    # lazy: repro.core.vocab_parallel triggers repro.core.__init__
+    from repro.core import vocab_parallel as vp
+    orig_shape = x.shape
+    if E.ndim > 2:
+        E = E.reshape(-1, E.shape[-1])
+        x = x.reshape(-1)
+    safe_x = jnp.where(x == IGNORE_INDEX, 0, x).astype(jnp.int32)
+    outs = vp.vocab_parallel_lse_pick(
+        E, C, safe_x, mesh=mesh, vocab_axis=vocab_axis,
+        token_axes=token_axes, backend=backend, cfg=cfg,
+        with_sum_logits=with_sum_logits)
+    return tuple(o.reshape(orig_shape) for o in outs)
+
+
 @dataclasses.dataclass(frozen=True)
 class VocabLoss:
     """Base class: a per-token vocabulary loss lowered onto the CCE
     primitive.
 
     Subclasses set ``needs_sum_logits`` when they use the third output and
-    implement :meth:`per_token`. ``__call__`` handles primitive dispatch
-    (``impl`` in "cce" / "cce_jax" / "dense" / "auto"), IGNORE_INDEX
-    masking, optional per-token ``weights``, and the reduction.
+    implement :meth:`per_token`. ``__call__`` resolves a
+    :mod:`repro.backends` entry by capability (or takes a pre-resolved
+    ``backend=``), routes through the vocab-parallel combine when
+    ``mesh=`` is given, and handles IGNORE_INDEX masking, optional
+    per-token ``weights``, and the reduction.
     """
     needs_sum_logits = False   # class attribute, overridden by subclasses
     trainable = True
@@ -133,14 +169,20 @@ class VocabLoss:
     def per_token(self, lse, pick, sum_logits, vocab: int):
         raise NotImplementedError
 
-    def __call__(self, E, C, x, *, impl: str = "auto",
+    def __call__(self, E, C, x, *, impl: str = "auto", backend=None,
                  softcap: float | None = None,
                  cfg: CCEConfig | None = None,
                  reduction: str = "none",
-                 weights=None):
-        cfg = self._resolve_cfg(cfg, softcap)
-        outs = cce_api.lse_and_pick(E, C, x, impl=impl, cfg=cfg,
-                                    with_sum_logits=self.needs_sum_logits)
+                 weights=None, mesh=None, vocab_axis: str = "model",
+                 token_axes=("data",)):
+        cfg = backends.resolve_config(cfg, softcap)
+        be = backend if backend is not None else backends.resolve(
+            impl, requirements=self.requirements(mesh=mesh,
+                                                 reduction=reduction))
+        outs = primitive_outputs(be, E, C, x, cfg,
+                                 with_sum_logits=self.needs_sum_logits,
+                                 mesh=mesh, vocab_axis=vocab_axis,
+                                 token_axes=token_axes)
         lse, pick = outs[0], outs[1]
         sum_logits = outs[2] if self.needs_sum_logits else None
         per_tok = self.per_token(lse, pick, sum_logits, C.shape[0])
@@ -149,10 +191,15 @@ class VocabLoss:
         per_tok = jnp.where(x == IGNORE_INDEX, 0.0, per_tok)
         return reduce_loss(per_tok, x, reduction, weights)
 
+    def requirements(self, *, mesh=None,
+                     reduction: str = "none") -> backends.Requirements:
+        """What this loss needs from a backend (capability resolution)."""
+        return backends.Requirements(
+            custom_cotangents=True,
+            sum_logits=self.needs_sum_logits,
+            mesh=mesh is not None,
+            reduction=reduction)
+
     @staticmethod
     def _resolve_cfg(cfg, softcap):
-        if cfg is None:
-            return CCEConfig(softcap=softcap)
-        if softcap is not None and cfg.softcap != softcap:
-            return dataclasses.replace(cfg, softcap=softcap)
-        return cfg
+        return backends.resolve_config(cfg, softcap)

@@ -21,9 +21,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import cce as cce_api
+from repro import backends
 from repro.kernels.ref import IGNORE_INDEX
-from repro.losses.base import VocabLoss, reduce_loss, register
+from repro.losses.base import (VocabLoss, primitive_outputs, reduce_loss,
+                               register)
 
 
 @register("nll")
@@ -122,11 +123,17 @@ class SequenceLogProb(VocabLoss):
     def per_token(self, lse, pick, sum_logits, vocab):
         return pick - lse             # per-token log-prob
 
-    def __call__(self, E, C, x, *, impl: str = "auto",
+    def __call__(self, E, C, x, *, impl: str = "auto", backend=None,
                  softcap: float | None = None, cfg=None,
-                 reduction: str = "none", weights=None):
+                 reduction: str = "none", weights=None, mesh=None,
+                 vocab_axis: str = "model", token_axes=("data",)):
         cfg = self._resolve_cfg(cfg, softcap)
-        lse, pick = cce_api.lse_and_pick(E, C, x, impl=impl, cfg=cfg)
+        be = backend if backend is not None else backends.resolve(
+            impl, requirements=self.requirements(mesh=mesh,
+                                                 reduction=reduction))
+        lse, pick = primitive_outputs(be, E, C, x, cfg, mesh=mesh,
+                                      vocab_axis=vocab_axis,
+                                      token_axes=token_axes)
         logp = pick - lse
         if weights is not None:
             logp = logp * weights

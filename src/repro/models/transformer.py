@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import losses as losses_api
-from repro.core import cce as cce_api
+from repro.core.api import cross_entropy
 from repro.kernels.ref import IGNORE_INDEX
 from repro.models import layers as L
 from repro.models import recurrent as R
@@ -329,7 +329,8 @@ def classifier_matrix(params, cfg):
 
 
 def train_loss(params, cfg, batch, loss_impl=None, loss_fn=None,
-               loss: str = "nll", loss_kwargs=None):
+               loss: str = "nll", loss_kwargs=None, mesh=None,
+               vocab_axis: str = "model", token_axes=("data",)):
     """Scalar training loss (+ MoE aux). batch needs "labels".
 
     loss / loss_kwargs: a ``repro.losses`` registry name and its
@@ -338,8 +339,15 @@ def train_loss(params, cfg, batch, loss_impl=None, loss_fn=None,
     ``loss_weights`` entry in the batch (shape of labels) feeds per-token
     weighting (e.g. completion-only fine-tuning with loss="weighted").
 
-    loss_fn: optional low-level override (E, C, labels) -> per-token loss;
-    used by the distributed train step to swap in vocab-parallel CCE.
+    The head is one ``repro.core.cross_entropy`` call: ``loss_impl`` (or
+    ``cfg.loss_impl``) names a :mod:`repro.backends` entry, resolved by
+    capability — asking an NLL-only baseline for a registry loss raises an
+    error listing the backends that can serve it. Passing ``mesh`` routes
+    the same resolved backend through the vocab-parallel combine
+    (production train step; C sharded over ``vocab_axis``).
+
+    loss_fn: optional low-level override (E, C, labels) -> per-token loss
+    for bespoke heads the registry cannot express.
     """
     enc_out = encode(params, cfg, batch) if cfg.is_encdec else None
     hidden, _, aux = lm_hidden(params, cfg, batch, enc_out=enc_out)
@@ -366,23 +374,11 @@ def train_loss(params, cfg, batch, loss_impl=None, loss_fn=None,
         weights = batch.get("loss_weights")
         if weights is not None:
             weights = weights.reshape(-1)
-        impl = loss_impl or cfg.loss_impl
-        if impl in ("chunked", "liger"):
-            # Paper-baseline impls only define plain NLL (liger owns its
-            # reduction and computes grads in the forward — the very
-            # composability restriction the registry losses avoid).
-            if loss != "nll" or weights is not None:
-                raise ValueError(
-                    f"impl {impl!r} is an NLL-only baseline; registry "
-                    f"losses/weights need impl in ('cce', 'cce_jax', "
-                    f"'dense')")
-            loss_val = cce_api.linear_cross_entropy(
-                e_flat, C, l_flat, impl=impl, softcap=cfg.logit_softcap,
-                reduction="mean")
-        else:
-            loss_val = loss_obj(
-                e_flat, C, l_flat, impl=impl, softcap=cfg.logit_softcap,
-                reduction="mean", weights=weights)
+        loss_val = cross_entropy(
+            e_flat, C, l_flat, loss=loss_obj,
+            impl=loss_impl or cfg.loss_impl, softcap=cfg.logit_softcap,
+            reduction="mean", weights=weights, mesh=mesh,
+            vocab_axis=vocab_axis, token_axes=token_axes)
     if cfg.moe is not None:
         loss_val = loss_val + cfg.moe.router_aux_loss * aux
     return loss_val

@@ -22,15 +22,25 @@ from repro.optim import adamw
 from repro.train.checkpoint import CheckpointManager
 
 
-def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, loss_fn=None):
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, loss_fn=None,
+                    loss_impl=None, mesh=None, vocab_axis: str = "model",
+                    token_axes=("data",)):
     """Returns step(params, opt_state, batch, step_idx) -> (params, opt,
     metrics). Gradient accumulation: batch is split into microbatches along
     the batch axis and grads are averaged with a lax.scan (the scheduling
-    substrate pipeline parallelism would reuse)."""
+    substrate pipeline parallelism would reuse).
+
+    mesh/vocab_axis/token_axes: forwarded to the ``cross_entropy`` head —
+    the production launcher passes its mesh so the loss runs through the
+    vocab-parallel combine with whatever backend ``loss_impl`` (or
+    ``cfg.loss_impl``) resolves to."""
 
     def loss_of(params, batch):
         return T.train_loss(params, cfg, batch, loss_fn=loss_fn,
-                            loss=tcfg.loss, loss_kwargs=tcfg.loss_options())
+                            loss_impl=loss_impl,
+                            loss=tcfg.loss, loss_kwargs=tcfg.loss_options(),
+                            mesh=mesh, vocab_axis=vocab_axis,
+                            token_axes=token_axes)
 
     def step(params, opt_state, batch, step_idx):
         b = batch["labels"].shape[0]

@@ -1,0 +1,172 @@
+"""repro.backends: capability matrix, resolution (auto + named), helpful
+error text, and uniformity of the lse_pick primitive across backends —
+plus cross_entropy's capability-driven dispatch on top of it."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import backends
+from repro.backends import BackendResolutionError, Requirements
+from repro.core import cross_entropy
+from repro.kernels.ops import CCEConfig
+from repro.kernels.ref import IGNORE_INDEX
+
+
+def _problem(n=24, d=16, v=160, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    E = jax.random.normal(ks[0], (n, d)) * 0.6
+    C = jax.random.normal(ks[1], (v, d)) * 0.5
+    x = jax.random.randint(ks[2], (n,), 0, v)
+    return E, C, x.at[2].set(IGNORE_INDEX)
+
+
+# ---------------------------------------------------------------------------
+# Registry + capability matrix.
+# ---------------------------------------------------------------------------
+
+def test_registry_contains_all_impls():
+    assert backends.list_backends() == ["cce", "cce_jax", "chunked",
+                                        "dense", "liger"]
+
+
+def test_capability_matrix_flags():
+    caps = dict(backends.capability_matrix())
+    # the primitive-capable trio
+    for name in ("cce", "cce_jax", "dense"):
+        assert caps[name]["custom_cotangents"], name
+        assert caps[name]["sum_logits"], name
+        assert caps[name]["mesh"], name
+        assert not caps[name]["owns_reduction"], name
+    # NLL-only baselines
+    for name in ("chunked", "liger"):
+        assert not caps[name]["custom_cotangents"], name
+        assert not caps[name]["mesh"], name
+    assert caps["liger"]["owns_reduction"]
+    # memory classes distinguish the rows of the paper's Table 1
+    assert caps["dense"]["memory_class"] == "O(N·V)"
+    assert caps["cce"]["memory_class"] == caps["liger"]["memory_class"]
+
+
+def test_unknown_backend_error_lists_registered():
+    with pytest.raises(BackendResolutionError, match="unknown backend"):
+        backends.get("not_a_backend")
+    with pytest.raises(BackendResolutionError,
+                       match="cce, cce_jax, chunked, dense, liger"):
+        backends.resolve("not_a_backend")
+
+
+# ---------------------------------------------------------------------------
+# Resolution: auto picks by platform preference, named impls are validated
+# against requirements, and errors enumerate capable backends.
+# ---------------------------------------------------------------------------
+
+def test_auto_resolution_prefers_platform():
+    be = backends.resolve("auto")
+    platform = jax.default_backend()
+    assert platform in be.preferred_platforms
+    # CPU/GPU -> the scan twin; TPU -> the Pallas kernels
+    assert be.name == ("cce" if platform == "tpu" else "cce_jax")
+
+
+def test_auto_resolution_honors_requirements():
+    req = Requirements(custom_cotangents=True, sum_logits=True, mesh=True)
+    assert backends.resolve("auto", requirements=req).name in (
+        "cce", "cce_jax")
+
+
+def test_named_resolution_checks_capabilities():
+    # a satisfying named backend passes through
+    assert backends.resolve(
+        "dense", requirements=Requirements(sum_logits=True)).name == "dense"
+    # an unsatisfying one raises, and the error names the ones that work
+    with pytest.raises(BackendResolutionError) as ei:
+        backends.resolve("chunked",
+                         requirements=Requirements(custom_cotangents=True))
+    msg = str(ei.value)
+    assert "chunked" in msg and "Backends that can" in msg
+    for capable in ("cce", "cce_jax", "dense"):
+        assert capable in msg
+
+
+def test_owns_reduction_admits_only_mean():
+    with pytest.raises(BackendResolutionError, match="owns the reduction"):
+        backends.resolve("liger",
+                         requirements=Requirements(reduction="none"))
+    assert backends.resolve(
+        "liger", requirements=Requirements(reduction="mean")).name == "liger"
+
+
+# ---------------------------------------------------------------------------
+# The uniform lse_pick interface: every primitive-capable backend computes
+# the same (lse, pick[, sum_logits]).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["cce", "cce_jax"])
+def test_lse_pick_uniform_across_backends(name):
+    E, C, x = _problem()
+    cfg = CCEConfig(block_n=8, block_v=64)
+    ref = backends.get("dense").lse_pick(E, C, x, cfg,
+                                         with_sum_logits=True)
+    out = backends.get(name).lse_pick(E, C, x, cfg, with_sum_logits=True)
+    for label, a, b in zip(("lse", "pick", "sum_logits"), out, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5,
+                                   err_msg=f"{name}/{label}")
+
+
+def test_nll_only_backends_reject_lse_pick():
+    E, C, x = _problem()
+    for name in ("chunked", "liger"):
+        with pytest.raises(BackendResolutionError):
+            backends.get(name).lse_pick(E, C, x, CCEConfig())
+
+
+# ---------------------------------------------------------------------------
+# cross_entropy dispatch on top of the registry.
+# ---------------------------------------------------------------------------
+
+def test_cross_entropy_matches_across_all_backends():
+    E, C, x = _problem()
+    vals = {name: float(cross_entropy(E, C, x, impl=name,
+                                      reduction="mean"))
+            for name in backends.list_backends()}
+    ref = vals["dense"]
+    for name, v in vals.items():
+        assert abs(v - ref) < 1e-4, (name, v, ref)
+
+
+def test_cross_entropy_registry_loss_on_nll_only_backend_raises():
+    E, C, x = _problem()
+    with pytest.raises(BackendResolutionError, match="Backends that can"):
+        cross_entropy(E, C, x, loss="z_loss", impl="chunked",
+                      reduction="mean")
+    with pytest.raises(BackendResolutionError):
+        # per-token weights also need the primitive
+        cross_entropy(E, C, x, impl="liger", reduction="mean",
+                      weights=jnp.ones(x.shape))
+
+
+def test_cross_entropy_loss_argument_forms():
+    from repro.losses import LossConfig, get_loss
+    E, C, x = _problem()
+    # non-default z_weight, so dropped kwargs cannot masquerade as success
+    by_cfg = cross_entropy(E, C, x, loss=LossConfig.create(
+        "z_loss", z_weight=0.5), reduction="mean")
+    by_obj = cross_entropy(E, C, x, loss=get_loss("z_loss", z_weight=0.5),
+                           reduction="mean")
+    by_default = cross_entropy(E, C, x, loss="z_loss", reduction="mean")
+    assert float(by_cfg) == float(by_obj)
+    assert float(by_cfg) != float(by_default)
+    with pytest.raises(TypeError, match="registry name"):
+        cross_entropy(E, C, x, loss=3.14)
+
+
+def test_deprecated_shims_still_work():
+    E, C, x = _problem()
+    with pytest.warns(DeprecationWarning):
+        from repro.core import linear_cross_entropy
+        old = linear_cross_entropy(E, C, x, reduction="mean")
+    new = cross_entropy(E, C, x, reduction="mean")
+    assert float(old) == float(new)

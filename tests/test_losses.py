@@ -1,8 +1,13 @@
 """repro.losses: registry round-trip, gradchecks of every CCE-backed loss
-against independently-written dense formulas, and reduction parity across
-implementations (including IGNORE_INDEX tokens)."""
+against independently-written dense formulas, reduction parity across
+implementations (including IGNORE_INDEX tokens), and the same gradchecks
+routed through ``cross_entropy(..., mesh=...)`` — every registry loss must
+match values/grads sharded and local."""
 
 import dataclasses
+import os
+import subprocess
+import sys
 import zlib
 
 import jax
@@ -248,3 +253,97 @@ def test_train_loss_weighted_completion_mask():
     want = float(T.train_loss(
         params, cfg, {"tokens": tokens, "labels": masked_labels}))
     assert abs(got - want) < 1e-5, (got, want)
+
+
+# ---------------------------------------------------------------------------
+# Vocab-parallel execution: the SAME losses through cross_entropy(mesh=...)
+# must match the local dense reference in values and gradients. Runs in a
+# subprocess with 8 forced host devices (jax locks the device count at
+# first init; the main pytest process must keep seeing one device).
+# ---------------------------------------------------------------------------
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_sharded(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# z_loss: pure-cotangent extra term through the lse psum combine;
+# label_smoothing: exercises the sum_logits third output -> one extra psum
+# end-to-end (forward AND the dense uniform-target backward).
+@pytest.mark.parametrize("name,kwargs", [
+    ("z_loss", {"z_weight": 1e-3}),
+    ("label_smoothing", {"eps": 0.1}),
+])
+def test_registry_loss_vocab_parallel_matches_local(name, kwargs):
+    out = _run_sharded(f"""
+import jax, jax.numpy as jnp
+from repro.core import cross_entropy
+from repro.kernels.ref import IGNORE_INDEX
+from repro.launch.mesh import make_test_mesh
+from repro.losses import get_loss
+
+mesh = make_test_mesh((2, 4), ("data", "model"))
+ks = jax.random.split(jax.random.PRNGKey(3), 3)
+E = jax.random.normal(ks[0], (64, 32)) * 0.7
+C = jax.random.normal(ks[1], (512, 32)) * 0.5
+x = jax.random.randint(ks[2], (64,), 0, 512)
+x = jnp.where(jax.random.uniform(jax.random.PRNGKey(7), (64,)) < 0.25,
+              IGNORE_INDEX, x)
+assert bool(jnp.any(x == IGNORE_INDEX))
+
+loss = get_loss({name!r}, **{kwargs!r})
+per_sh = cross_entropy(E, C, x, loss=loss, impl="cce_jax", mesh=mesh)
+per_ref = cross_entropy(E, C, x, loss=loss, impl="dense")
+assert float(jnp.max(jnp.abs(per_sh - per_ref))) < 1e-4
+assert bool(jnp.all(jnp.where(x == IGNORE_INDEX, per_sh == 0.0, True)))
+
+def f(e, c):
+    return cross_entropy(e, c, x, loss=loss, impl="cce_jax",
+                         mesh=mesh, reduction="mean")
+def f_ref(e, c):
+    return cross_entropy(e, c, x, loss=loss, impl="dense",
+                         reduction="mean")
+assert abs(float(f(E, C)) - float(f_ref(E, C))) < 1e-5
+dE, dC = jax.grad(f, argnums=(0, 1))(E, C)
+dEr, dCr = jax.grad(f_ref, argnums=(0, 1))(E, C)
+assert float(jnp.max(jnp.abs(dE - dEr))) < 1e-4
+assert float(jnp.max(jnp.abs(dC - dCr))) < 1e-4
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_train_loss_routes_mesh_through_cross_entropy():
+    """train_loss(mesh=...) — the production head — matches the local head
+    for a registry loss (label smoothing, so the sum_logits psum rides the
+    full model fwd+bwd), with C sharded over the model axis."""
+    out = _run_sharded("""
+import dataclasses
+import jax, jax.numpy as jnp
+import repro.configs as configs
+from repro.models import transformer as T
+from repro.launch.mesh import make_test_mesh
+
+cfg = dataclasses.replace(configs.get_reduced_config("llama3_2_3b"),
+                          dtype="float32", loss_impl="cce_jax")
+mesh = make_test_mesh((2, 4), ("data", "model"))
+params = T.init_lm(jax.random.PRNGKey(0), cfg)
+ks = jax.random.split(jax.random.PRNGKey(1), 2)
+batch = {"tokens": jax.random.randint(ks[0], (2, 16), 0, cfg.vocab_size),
+         "labels": jax.random.randint(ks[1], (2, 16), 0, cfg.vocab_size)}
+kw = dict(loss="label_smoothing", loss_kwargs={"eps": 0.1})
+local = float(T.train_loss(params, cfg, batch, **kw))
+sharded = float(T.train_loss(params, cfg, batch, mesh=mesh,
+                             token_axes=("data",), **kw))
+assert abs(local - sharded) < 1e-5, (local, sharded)
+print("OK")
+""")
+    assert "OK" in out
