@@ -12,7 +12,8 @@ import traceback
 def main() -> None:
     from benchmarks import (fig1_model_memory, fig3_softmax_sparsity,
                             fig4_convergence, loss_zoo_memory,
-                            table1_loss_memory, tableA1_ignored_tokens,
+                            serve_throughput, table1_loss_memory,
+                            tableA1_ignored_tokens,
                             tableA2_backward_breakdown, tableA3_more_models)
     modules = [
         ("table1", table1_loss_memory),
@@ -23,6 +24,7 @@ def main() -> None:
         ("tableA1", tableA1_ignored_tokens),
         ("tableA2", tableA2_backward_breakdown),
         ("tableA3", tableA3_more_models),
+        ("serve", serve_throughput),
     ]
     print("name,us_per_call,derived")
     failed = []

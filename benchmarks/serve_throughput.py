@@ -1,0 +1,153 @@
+"""Serving benchmark: continuous batching vs. the legacy lockstep engine,
+plus the scoring path's memory-class gate.
+
+Decode: a mixed-prompt-length workload (short chats next to long
+documents, staggered arrivals) is served twice —
+
+  * **lockstep** (the pre-scheduler engine, reproduced below): all
+    prompts admitted up front, one shared timeline, a Python loop that
+    syncs ``int(nxt[i])`` PER ROW PER STEP, the whole batch retiring at
+    the speed of its slowest row;
+  * **continuous**: the slot scheduler — per-row ``cache_index``,
+    device-side sampling/stopping, one host sync per step, finished rows
+    replaced mid-flight from the queue.
+
+Reported: wall-clock tokens/s and mean time-to-first-token (TTFT).
+
+Scoring: ``repro.launch.serve.check_scoring_memory_class`` AOT-lowers the
+``cross_entropy(..., loss="seq_logprob")`` scorer at an enlarged
+vocabulary and verifies via ``analysis/hlo.array_shape_census`` that no
+N×V buffer exists — the O(N·D + V·D) class, same gate discipline as
+``loss_zoo_memory``. Exit 1 on violation (CI runs this).
+
+Run: PYTHONPATH=src python -m benchmarks.serve_throughput
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+import repro.configs as configs
+from repro.models import transformer as T
+from repro.serve import Engine
+
+
+class LockstepEngine:
+    """The pre-scheduler engine, kept verbatim as the baseline: greedy
+    only, all prompts up front, per-row host syncs, no slot reuse."""
+
+    def __init__(self, cfg, params, *, max_len=512, batch_size=8):
+        self.cfg, self.params = cfg, params
+        self.max_len, self.batch_size = max_len, batch_size
+        self._step = jax.jit(functools.partial(T.serve_step, cfg=cfg))
+
+    def generate(self, prompts, max_new_tokens=16):
+        assert len(prompts) <= self.batch_size
+        b = len(prompts)
+        cache = T.init_cache(self.cfg, b, self.max_len)
+        outputs = [[] for _ in range(b)]
+        tok = jnp.asarray([[p[0]] for p in prompts], jnp.int32)
+        t = 0
+        while min(len(o) for o in outputs) < max_new_tokens:
+            logits, cache = self._step(params=self.params, cache=cache,
+                                       tokens=tok, cache_index=t)
+            nxt = jnp.argmax(logits, axis=-1)
+            next_tok = []
+            for i, p in enumerate(prompts):
+                if t + 1 < len(p):
+                    next_tok.append(p[t + 1])
+                else:
+                    tok_i = int(nxt[i])        # the per-row host sync
+                    if len(outputs[i]) < max_new_tokens:
+                        outputs[i].append(tok_i)
+                    next_tok.append(tok_i)
+            tok = jnp.asarray(next_tok, jnp.int32)[:, None]
+            t += 1
+            if t >= self.max_len - 1:
+                break
+        return outputs
+
+
+def _workload(vocab, n_requests=8, max_prompt=48, seed=0):
+    """Mixed prompt lengths (3..max_prompt) with 4..14 new tokens each —
+    the skew that makes lockstep waves retire at their slowest row."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.integers(3, max_prompt + 1))
+        reqs.append((list(rng.integers(1, vocab, size=plen)),
+                     int(rng.integers(4, 15))))
+    return reqs
+
+
+def _bench_lockstep(cfg, params, reqs, max_len, slots):
+    eng = LockstepEngine(cfg, params, max_len=max_len, batch_size=slots)
+    eng.generate([[1, 2]] * min(slots, len(reqs)), 2)     # compile warmup
+    t0 = time.time()
+    total, ttfts = 0, []
+    # lockstep admits at most `slots` prompts at a time, waves of batches;
+    # within a wave everything decodes max(max_new) tokens (its semantics)
+    for i in range(0, len(reqs), slots):
+        wave = reqs[i:i + slots]
+        wave_new = max(m for _, m in wave)
+        outs = eng.generate([p for p, _ in wave], max_new_tokens=wave_new)
+        # the whole wave lands at once, and every request was submitted at
+        # t0: TTFT for a wave member is the time until its wave returns
+        ttfts += [time.time() - t0] * len(wave)
+        total += sum(min(len(o), m) for o, (_, m) in zip(outs, wave))
+    return total, time.time() - t0, float(np.mean(ttfts))
+
+
+def _bench_continuous(cfg, params, reqs, max_len, slots):
+    eng = Engine(cfg, params, max_len=max_len, batch_size=slots)
+    # warmup: same request count as the timed run, so the step jit AND the
+    # admission path's small host->device update ops are all compiled
+    eng.generate([[1, 2]] * len(reqs), 2)
+    rids = [eng.submit(p, max_new_tokens=m) for p, m in reqs]
+    t0 = time.time()
+    comps = eng.run()
+    dt = time.time() - t0
+    total = sum(len(comps[r].tokens) for r in rids)
+    ttfts = [comps[r].first_token_time - comps[r].submit_time
+             for r in rids if comps[r].first_token_time]
+    return total, dt, float(np.mean(ttfts))
+
+
+def run(arch="llama3_2_3b", n_requests=12, slots=4, max_len=80):
+    cfg = dataclasses.replace(configs.get_reduced_config(arch),
+                              dtype="float32")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    reqs = _workload(cfg.vocab_size, n_requests=n_requests)
+
+    tl, dl, fl = _bench_lockstep(cfg, params, reqs, max_len, slots)
+    tc, dc, fc = _bench_continuous(cfg, params, reqs, max_len, slots)
+    row(f"serve/{arch}/lockstep", dl / max(tl, 1) * 1e6,
+        f"{tl / dl:.1f} tok/s ttft={fl * 1e3:.0f}ms "
+        f"({n_requests} reqs, {slots} slots)")
+    row(f"serve/{arch}/continuous", dc / max(tc, 1) * 1e6,
+        f"{tc / dc:.1f} tok/s ttft={fc * 1e3:.0f}ms "
+        f"speedup={dl / dc:.2f}x")
+
+    # scoring-path memory gate (same discipline as loss_zoo_memory)
+    from repro.launch.serve import check_scoring_memory_class
+    ok = check_scoring_memory_class(cfg, impl="cce_jax", quiet=True)
+    row(f"serve/{arch}/scoring_memclass", 0,
+        "O(N.D+V.D) OK" if ok else "NxV MATERIALIZED!")
+    if not ok:
+        raise AssertionError(
+            "scoring path materialized an NxV buffer — the CCE lowering "
+            "of serve/scoring.py regressed")
+    return ok
+
+
+if __name__ == "__main__":
+    import sys
+    print("name,us_per_call,derived")
+    sys.exit(0 if run() else 1)

@@ -1,14 +1,16 @@
-"""Serve a small LM with batched requests through the decode engine.
+"""Serve a small LM through the continuous-batching engine.
 
-Demonstrates the inference side of the framework: ``init_cache`` +
-``serve_step`` (the function the decode_32k / long_500k dry-run cells
-lower) wrapped in the continuous-batching-lite ``Engine``. Requests with
-different prompt lengths share one batch; rows still in their prompt are
-teacher-forced while finished rows generate.
+Demonstrates the inference side of the framework:
 
-Also shows the paper's §3.2 point: inference needs the vocab distribution
-for ONE position per sequence, so serving memory is O(B·V), independent of
-sequence length — CCE is a training-time fix.
+  * slot-based continuous batching — requests with ragged prompt lengths
+    share the batch, a mid-flight request joins as soon as a slot frees
+    up, and each row decodes on its own timeline (per-row ``cache_index``);
+  * device-side sampling with *per-request* parameters (row 0 greedy next
+    to row 1 at temperature 0.8 / top-p 0.9), one host sync per step;
+  * CCE-backed scoring: ranking candidate completions by
+    ``log p(completion | prompt)`` through
+    ``cross_entropy(..., loss="seq_logprob")`` — the paper's primitive at
+    inference, no (B, S, V) logits.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -21,14 +23,15 @@ import numpy as np
 
 import repro.configs as configs
 from repro.models import transformer as T
-from repro.serve.engine import Engine
+from repro.serve import Engine, SamplingParams, scoring
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b",
                     help="any assigned arch id; the reduced config is used")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="engine slots (concurrent rows)")
     ap.add_argument("--max-new", type=int, default=24)
     args = ap.parse_args()
 
@@ -37,37 +40,62 @@ def main():
           f"|V|={cfg.vocab_size} pattern={cfg.layer_pattern}")
 
     params = T.init_lm(jax.random.PRNGKey(0), cfg)
-    engine = Engine(cfg, params, max_len=128, batch_size=args.batch)
 
-    # batched requests with ragged prompt lengths
+    # more requests than slots, with ragged prompt lengths and mixed
+    # sampling policies: the queue drains as rows finish
     rng = np.random.default_rng(0)
     prompts = [list(rng.integers(0, cfg.vocab_size, size=n))
-               for n in (3, 7, 5, 11)][: args.batch]
+               for n in (3, 7, 5, 11, 4, 9)]
 
     enc_out = None
-    if cfg.is_encdec:   # seamless: condition decoding on stub frame embeds
+    batch = args.batch
+    if cfg.is_encdec:   # seamless: condition decoding on stub frame embeds;
+        # slot i reads encoder row i, so the engine gets exactly one slot
+        # per request and enc_out one row per slot
+        prompts = prompts[: args.batch]
+        batch = len(prompts)
         enc_out = jax.random.normal(
-            jax.random.PRNGKey(1), (len(prompts), 16, cfg.d_model),
+            jax.random.PRNGKey(1), (batch, 16, cfg.d_model),
             dtype=cfg.dtype) * 0.02
+    engine = Engine(cfg, params, max_len=128, batch_size=batch,
+                    enc_out=enc_out)
+    policies = [SamplingParams(),                                  # greedy
+                SamplingParams(temperature=0.8, top_p=0.9, seed=1),
+                SamplingParams(temperature=1.0, top_k=40, seed=2)]
 
     t0 = time.time()
-    outs = engine.generate(prompts, max_new_tokens=args.max_new,
-                           enc_out=enc_out)
+    rids = [engine.submit(p, max_new_tokens=args.max_new,
+                          sampling=policies[i % len(policies)])
+            for i, p in enumerate(prompts)]
+    comps = engine.run()
     dt = time.time() - t0
 
-    total_new = sum(len(o) for o in outs)
-    for i, (p, o) in enumerate(zip(prompts, outs)):
-        print(f"  req[{i}] prompt_len={len(p):2d} -> "
-              f"{len(o)} tokens: {o[:10]}{'...' if len(o) > 10 else ''}")
+    total_new = sum(len(comps[r].tokens) for r in rids)
+    for i, r in enumerate(rids):
+        c = comps[r]
+        ttft = (c.first_token_time - c.submit_time) * 1e3 \
+            if c.first_token_time else float("nan")
+        print(f"  req[{i}] prompt_len={len(c.prompt):2d} "
+              f"ttft={ttft:6.1f}ms -> {len(c.tokens)} tokens: "
+              f"{c.tokens[:8]}{'...' if len(c.tokens) > 8 else ''}")
     print(f"\n{total_new} tokens in {dt:.2f}s "
-          f"({total_new/dt:.1f} tok/s batched greedy decode on "
-          f"{jax.default_backend()})")
+          f"({total_new / dt:.1f} tok/s, {args.batch} slots, "
+          f"{len(prompts)} requests on {jax.default_backend()})")
 
-    # sanity: deterministic greedy decode reproduces itself
-    outs2 = engine.generate(prompts, max_new_tokens=args.max_new,
-                            enc_out=enc_out)
-    assert outs == outs2, "greedy decode must be deterministic"
-    print("determinism check OK")
+    # CCE-backed scoring: rerank the model's own continuation against two
+    # random candidates (decoder-only; encdec scoring is a ROADMAP item)
+    if not cfg.is_encdec and comps[rids[0]].tokens:
+        prompt = prompts[0]
+        candidates = [
+            comps[rids[0]].tokens[:4],
+            [int(t) for t in rng.integers(0, cfg.vocab_size, size=4)],
+            [int(t) for t in rng.integers(0, cfg.vocab_size, size=4)]]
+        order, scores = scoring.rank(params, cfg, prompt, candidates)
+        print("\nscoring (log p per token, CCE-backed — no (B,S,V) "
+              "logits):")
+        for r, i in enumerate(order):
+            print(f"  #{r + 1} score={scores[i]:+.3f} "
+                  f"candidate {candidates[i]}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,66 @@
+"""Shared CLI surface for the kernel-level :class:`CCEConfig` knobs.
+
+``launch/train.py`` and ``launch/dryrun.py`` both expose the CCE kernel
+configuration (vocab sorting, gradient-filter modes, accumulator) that was
+previously only reachable by constructing a ``CCEConfig`` in code. Flag
+names and value choices are validated against the dataclass fields
+themselves, so a knob added to ``CCEConfig`` that is listed here but
+renamed/removed fails loudly at CLI-build time instead of silently
+drifting.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.kernels.ops import CCEConfig
+
+# flag -> (dataclass field, argparse kwargs). Value choices mirror the
+# semantics documented on CCEConfig itself.
+_FLAGS = {
+    "--cce-sort-vocab": ("sort_vocab", dict(
+        action="store_true", default=None,
+        help="permute C by descending average logit before the backward "
+             "(paper §4.3 vocabulary sorting)")),
+    "--cce-filter-mode-e": ("filter_mode_e", dict(
+        choices=["filtered", "full"], default=None,
+        help="gradient filtering for the embedding backward "
+             "(filtered = paper default, full = no filtering)")),
+    "--cce-filter-mode-c": ("filter_mode_c", dict(
+        choices=["filtered", "full"], default=None,
+        help="gradient filtering for the classifier backward "
+             "(full = the paper's CCE-*-FullC pretraining setting)")),
+    "--cce-accum": ("accum", dict(
+        choices=["f32", "bf16_kahan", "bf16"], default=None,
+        help="backward accumulator: f32 (TPU-native default), bf16_kahan "
+             "(paper CCE-Kahan parity), bf16 (ablation only)")),
+}
+
+
+def _validate_flags():
+    fields = {f.name for f in dataclasses.fields(CCEConfig)}
+    for flag, (field, _) in _FLAGS.items():
+        if field not in fields:
+            raise RuntimeError(
+                f"CLI flag {flag} names CCEConfig field {field!r} which "
+                f"does not exist; CCEConfig fields: {sorted(fields)}")
+
+
+def add_cce_args(ap: argparse.ArgumentParser) -> None:
+    """Install the ``--cce-*`` flags on ``ap`` (validated vs CCEConfig)."""
+    _validate_flags()
+    g = ap.add_argument_group("CCE kernel knobs (repro.kernels.ops)")
+    for flag, (field, kwargs) in _FLAGS.items():
+        g.add_argument(flag, dest=f"cce_{field}", **kwargs)
+
+
+def cce_config_from_args(args) -> CCEConfig | None:
+    """Build a CCEConfig from parsed args; None when no knob was set, so
+    call sites keep their default-config path untouched."""
+    overrides = {}
+    for field, _ in _FLAGS.values():
+        v = getattr(args, f"cce_{field}", None)
+        if v is not None:
+            overrides[field] = v
+    return CCEConfig(**overrides) if overrides else None

@@ -31,6 +31,7 @@ from repro import backends
 from repro.analysis import hlo as hlo_an
 from repro.analysis.roofline import roofline
 from repro.configs.base import SHAPES, TrainConfig
+from repro.launch.cce_flags import add_cce_args, cce_config_from_args
 from repro.launch.inputs import serve_specs, supports_shape, train_specs
 from repro.launch.mesh import data_axes_of, make_production_mesh
 from repro.models import transformer as T
@@ -40,7 +41,7 @@ from repro.sharding.specs import named, param_specs
 from repro.train.trainer import make_train_step
 
 
-def _train_fn(cfg, mesh):
+def _train_fn(cfg, mesh, cce_cfg=None):
     """Full production train step (fwd + bwd + AdamW) with the
     vocab-parallel CCE head over the model axis."""
     dp = data_axes_of(mesh)
@@ -57,7 +58,8 @@ def _train_fn(cfg, mesh):
 
     tcfg = TrainConfig(microbatch=cfg.train_microbatch)
     return make_train_step(cfg, tcfg, loss_impl=be.name, mesh=mesh,
-                           vocab_axis="model", token_axes=dp)
+                           vocab_axis="model", token_axes=dp,
+                           cce_cfg=cce_cfg)
 
 
 def _serve_fn(cfg):
@@ -67,7 +69,7 @@ def _serve_fn(cfg):
     return step
 
 
-def lower_cell(cfg, shape, mesh):
+def lower_cell(cfg, shape, mesh, cce_cfg=None):
     """Lower one (config x shape) cell on ``mesh``; returns ``lowered`` or
     None if the shape doesn't apply to this family (long-ctx dense attn)."""
     ok, _ = supports_shape(cfg, shape)
@@ -90,7 +92,7 @@ def lower_cell(cfg, shape, mesh):
                 opt_shard = {"m": o_specs["m"], "v": o_specs["v"],
                              "count": jax.sharding.NamedSharding(
                                  mesh, jax.sharding.PartitionSpec())}
-                step = _train_fn(cfg, mesh)
+                step = _train_fn(cfg, mesh, cce_cfg=cce_cfg)
                 return jax.jit(
                     step,
                     in_shardings=(p_specs, opt_shard, batch_shard, None),
@@ -133,7 +135,7 @@ def lower_cell_hlo(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
              force: bool = False, loss_impl: str | None = None,
-             tag: str = "") -> dict:
+             tag: str = "", cce_cfg=None) -> dict:
     mesh_name = "multi" if multi_pod else "single"
     path = os.path.join(out_dir,
                         f"{arch}__{shape_name}__{mesh_name}{tag}.json")
@@ -152,7 +154,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
               "chips": chips, "ok": False, "tag": tag}
     t0 = time.time()
     try:
-        lowered = lower_cell(cfg, shape, mesh)
+        lowered = lower_cell(cfg, shape, mesh, cce_cfg=cce_cfg)
         if lowered is None:
             record["skipped"] = supports_shape(cfg, shape)[1]
             record["ok"] = True
@@ -212,7 +214,9 @@ def main():
     ap.add_argument("--loss-impl", default=None,
                     help="override cfg.loss_impl (e.g. dense for baselines)")
     ap.add_argument("--tag", default="", help="suffix for result files")
+    add_cce_args(ap)
     args = ap.parse_args()
+    cce_cfg = cce_config_from_args(args)
 
     archs = list(configs.ASSIGNED) if args.arch == "all" \
         else args.arch.split(",")
@@ -225,7 +229,7 @@ def main():
             for mesh_name in meshes:
                 rec = run_cell(arch, shape, mesh_name == "multi", args.out,
                                force=args.force, loss_impl=args.loss_impl,
-                               tag=args.tag)
+                               tag=args.tag, cce_cfg=cce_cfg)
                 status = ("SKIP" if rec.get("skipped")
                           else "ok" if rec["ok"] else "FAIL")
                 msg = rec.get("error", "")[:120]

@@ -4,7 +4,9 @@
       --steps 200 --batch 8 --seq 512 [--reduced] [--ckpt DIR] \
       [--loss-impl auto|cce|cce_jax|dense|chunked|liger] \
       [--loss nll|z_loss|focal|weighted|label_smoothing] \
-      [--loss-kwargs '{"eps": 0.1}']
+      [--loss-kwargs '{"eps": 0.1}'] \
+      [--cce-sort-vocab] [--cce-filter-mode-e filtered|full] \
+      [--cce-filter-mode-c filtered|full] [--cce-accum f32|bf16_kahan|bf16]
 
 The training loss comes from the ``repro.losses`` registry — every entry
 lowers onto the CCE (lse, pick[, sum]) primitive, so switching losses never
@@ -24,6 +26,7 @@ import dataclasses
 import repro.configs as configs
 from repro import backends
 from repro.configs.base import TrainConfig
+from repro.launch.cce_flags import add_cce_args, cce_config_from_args
 from repro.losses import LossConfig, list_losses
 from repro.train import Trainer
 
@@ -48,6 +51,7 @@ def main():
                     help='JSON hyper-parameters for --loss, e.g. '
                          '\'{"z_weight": 1e-4}\'')
     ap.add_argument("--dtype", default=None)
+    add_cce_args(ap)
     args = ap.parse_args()
 
     cfg = (configs.get_reduced_config(args.arch) if args.reduced
@@ -62,7 +66,8 @@ def main():
                        microbatch=args.microbatch,
                        loss=loss_cfg.name, loss_kwargs=loss_cfg.kwargs)
     tr = Trainer(cfg, tcfg, checkpoint_dir=args.ckpt, seq_len=args.seq,
-                 global_batch=args.batch)
+                 global_batch=args.batch,
+                 cce_cfg=cce_config_from_args(args))
     tr.install_signal_handlers()
     tr.run(num_steps=args.steps)
     if args.ckpt:

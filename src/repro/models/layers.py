@@ -113,8 +113,10 @@ def _dense_attn(q, k, v, *, causal, window, softcap, q_offset=0,
                 kv_pos=None):
     """q (B,Sq,H,hd), k/v (B,Sk,H,hd) -> (B,Sq,H,hd). f32 softmax.
 
-    kv_pos: optional (Sk,) absolute key positions (ring caches); defaults to
-    arange(Sk). Unwritten ring slots carry pos = -1 and are masked off.
+    q_offset: scalar or per-row (B,) absolute query position (continuous
+    batching gives every row its own timeline). kv_pos: optional (Sk,) or
+    (B, Sk) absolute key positions (ring caches); defaults to arange(Sk).
+    Unwritten ring slots carry pos = -1 and are masked off.
     """
     scale = 1.0 / math.sqrt(q.shape[-1])
     scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
@@ -122,16 +124,19 @@ def _dense_attn(q, k, v, *, causal, window, softcap, q_offset=0,
     if softcap is not None:
         scores = softcap * jnp.tanh(scores / softcap)
     sq, sk = q.shape[1], k.shape[1]
-    qpos = q_offset + jnp.arange(sq)[:, None]
-    kpos = (jnp.arange(sk) if kv_pos is None else kv_pos)[None, :]
-    mask = jnp.ones((sq, sk), bool)
+    # normalize to (B|1, Sq) query / (B|1, Sk) key position grids so the
+    # mask broadcasts over heads as (B|1, 1, Sq, Sk)
+    qpos = jnp.asarray(q_offset).reshape(-1, 1) + jnp.arange(sq)
+    kpos = (jnp.arange(sk)[None] if kv_pos is None
+            else jnp.asarray(kv_pos).reshape(-1, sk))
+    mask = jnp.ones((max(qpos.shape[0], kpos.shape[0]), sq, sk), bool)
     if kv_pos is not None:
-        mask &= kpos >= 0
+        mask &= (kpos >= 0)[:, None, :]
     if causal:
-        mask &= kpos <= qpos
+        mask &= kpos[:, None, :] <= qpos[:, :, None]
     if window is not None:
-        mask &= kpos > qpos - window
-    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+        mask &= kpos[:, None, :] > qpos[:, :, None] - window
+    scores = jnp.where(mask[:, None], scores, -jnp.inf)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
     return out
@@ -191,6 +196,17 @@ def _chunked_attn(q, k, v, *, causal, window, softcap):
     return jnp.moveaxis(out, 1, 2).astype(v.dtype)  # (B, Sq, H, hd)
 
 
+def _row_update(buf, upd, idx):
+    """Write ``upd`` (B, Sq, ...) into ``buf`` (B, L, ...) at time index
+    ``idx`` — a shared scalar (lockstep decode) or per-row (B,) vector
+    (continuous batching, every row on its own timeline)."""
+    if jnp.ndim(idx) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, upd, idx, 1)
+    return jax.vmap(
+        lambda b, u, i: jax.lax.dynamic_update_slice_in_dim(b, u, i, 0)
+    )(buf, upd, idx)
+
+
 def multi_head_attention(params, x, *, num_heads, num_kv_heads, head_dim,
                          cos_sin=None, causal=True, window=None,
                          softcap=None, kv_x=None, cache=None,
@@ -198,7 +214,9 @@ def multi_head_attention(params, x, *, num_heads, num_kv_heads, head_dim,
     """Self- or cross-attention with optional KV cache (decode).
 
     cache: dict(k=(B, S_cache, Hkv, hd), v=...) updated at ``cache_index``
-    when decoding (x has Sq=1). Returns (out, new_cache).
+    when decoding (x has Sq=1). ``cache_index`` may be a scalar (all rows on
+    one timeline) or a (B,) vector of per-row positions. Returns
+    (out, new_cache).
     """
     b, sq, _ = x.shape
     kv_in = x if kv_x is None else kv_x
@@ -221,21 +239,25 @@ def multi_head_attention(params, x, *, num_heads, num_kv_heads, head_dim,
         if "pos" in cache:
             # Ring buffer (sliding-window cache, length W << context): write
             # at slot t mod W; the mask comes from the stored absolute
-            # positions, so RoPE'd keys stay valid. Single-token steps only.
+            # positions (B, W), so RoPE'd keys stay valid and each row can
+            # sit at a different absolute time. Single-token steps only.
             assert sq == 1, "ring caches support one-token decode steps"
             w_len = cache["k"].shape[1]
             slot = jax.lax.rem(cache_index, w_len)
-            k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1)
-            v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)
-            pos = jax.lax.dynamic_update_slice_in_dim(
-                cache["pos"], jnp.full((1,), cache_index, jnp.int32), slot, 0)
+            k = _row_update(cache["k"], k, slot)
+            v = _row_update(cache["v"], v, slot)
+            b_rows = cache["pos"].shape[0]
+            abs_pos = jnp.broadcast_to(
+                jnp.asarray(cache_index, jnp.int32).reshape(-1),
+                (b_rows,))[:, None]
+            slot_vec = jnp.broadcast_to(
+                jnp.asarray(slot, jnp.int32).reshape(-1), (b_rows,))
+            pos = _row_update(cache["pos"], abs_pos, slot_vec)
             new_cache = {"k": k, "v": v, "pos": pos}
             kv_pos = pos
         else:
-            k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k,
-                                                    cache_index, 1)
-            v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v,
-                                                    cache_index, 1)
+            k = _row_update(cache["k"], k, cache_index)
+            v = _row_update(cache["v"], v, cache_index)
             new_cache = {"k": k, "v": v}
     else:
         new_cache = None

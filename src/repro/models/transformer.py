@@ -213,7 +213,9 @@ def lm_hidden(params, cfg, batch, cache=None, cache_index=None,
     b, s, _ = x.shape
 
     if decode:
-        positions = jnp.full((b, s), cache_index, jnp.int32) + jnp.arange(s)
+        # cache_index: scalar (shared timeline) or (B,) per-row positions
+        ci = jnp.asarray(cache_index, jnp.int32).reshape(-1, 1)
+        positions = jnp.broadcast_to(ci + jnp.arange(s), (b, s))
         if cfg.rope_sections is not None:
             positions = jnp.broadcast_to(positions[None], (3, b, s))
     elif "positions" in batch:
@@ -330,7 +332,8 @@ def classifier_matrix(params, cfg):
 
 def train_loss(params, cfg, batch, loss_impl=None, loss_fn=None,
                loss: str = "nll", loss_kwargs=None, mesh=None,
-               vocab_axis: str = "model", token_axes=("data",)):
+               vocab_axis: str = "model", token_axes=("data",),
+               cce_cfg=None):
     """Scalar training loss (+ MoE aux). batch needs "labels".
 
     loss / loss_kwargs: a ``repro.losses`` registry name and its
@@ -348,6 +351,11 @@ def train_loss(params, cfg, batch, loss_impl=None, loss_fn=None,
 
     loss_fn: optional low-level override (E, C, labels) -> per-token loss
     for bespoke heads the registry cannot express.
+
+    cce_cfg: optional :class:`repro.kernels.ops.CCEConfig` carrying the
+    kernel-level knobs (sort_vocab, filter modes, accumulator) down to the
+    resolved backend — the CLI flags on launch/train and launch/dryrun end
+    up here.
     """
     enc_out = encode(params, cfg, batch) if cfg.is_encdec else None
     hidden, _, aux = lm_hidden(params, cfg, batch, enc_out=enc_out)
@@ -378,14 +386,20 @@ def train_loss(params, cfg, batch, loss_impl=None, loss_fn=None,
             e_flat, C, l_flat, loss=loss_obj,
             impl=loss_impl or cfg.loss_impl, softcap=cfg.logit_softcap,
             reduction="mean", weights=weights, mesh=mesh,
-            vocab_axis=vocab_axis, token_axes=token_axes)
+            vocab_axis=vocab_axis, token_axes=token_axes, cfg=cce_cfg)
     if cfg.moe is not None:
         loss_val = loss_val + cfg.moe.router_aux_loss * aux
     return loss_val
 
 
 def init_cache(cfg, batch_size, max_len, dtype=None):
-    """Decode cache pytree: stacked per group x pattern position."""
+    """Decode cache pytree: stacked per group x pattern position.
+
+    Every row's slot is independent: ring-buffer position metadata is kept
+    per row, so a continuous-batching scheduler can run each row on its own
+    timeline (per-row ``cache_index``) and recycle one row's slot without
+    touching the others (``reset_cache_rows``).
+    """
     dt = jnp.dtype(dtype or cfg.dtype)
     pattern, n_groups, tail = _pattern_split(cfg)
     hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
@@ -397,8 +411,8 @@ def init_cache(cfg, batch_size, max_len, dtype=None):
                 length = min(max_len, cfg.sliding_window)
             c = {"k": jnp.zeros((batch_size, length, hkv, hd), dt),
                  "v": jnp.zeros((batch_size, length, hkv, hd), dt)}
-            if length < max_len:  # ring buffer: track absolute positions
-                c["pos"] = jnp.full((length,), -1, jnp.int32)
+            if length < max_len:  # ring buffer: per-row absolute positions
+                c["pos"] = jnp.full((batch_size, length), -1, jnp.int32)
             return c
         if kind == "rglru":
             return R.rglru_init_state(batch_size, cfg.ssm, cfg.d_model, dt)
@@ -416,11 +430,49 @@ def init_cache(cfg, batch_size, max_len, dtype=None):
     return cache
 
 
+def reset_cache_rows(cache, rows):
+    """Reset the cache rows where ``rows`` (B,) bool is True to their
+    initial state (slot recycling for continuous batching).
+
+    Attention K/V and recurrent states re-init to zeros; ring-buffer
+    ``pos`` metadata to -1 (the "never written" sentinel). Pure ``where``
+    ops, so this jits and leaves the other rows' slots untouched.
+    """
+    def reset(leaf, batch_axis, fill):
+        shape = [1] * leaf.ndim
+        shape[batch_axis] = leaf.shape[batch_axis]
+        m = rows.reshape(shape)
+        return jnp.where(m, jnp.full_like(leaf, fill), leaf)
+
+    def walk(tree, batch_axis):
+        if isinstance(tree, dict):
+            return {k: (reset(v, batch_axis, -1) if k == "pos"
+                        else walk(v, batch_axis))
+                    for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v, batch_axis) for v in tree)
+        return reset(tree, batch_axis, 0)
+
+    # group caches are stacked (n_groups, B, ...); tail caches are (B, ...)
+    out = {"groups": walk(cache["groups"], 1)}
+    if "tail" in cache:
+        out["tail"] = walk(cache["tail"], 0)
+    return out
+
+
 def serve_step(params, cfg, cache, tokens, cache_index, enc_out=None):
     """One decode step: tokens (B, 1) -> (logits (B, V), new cache).
 
+    ``cache_index`` is a scalar (all rows share one timeline — the legacy
+    lockstep engine) or a (B,) int vector of per-row positions (continuous
+    batching: each row writes its KV slot and builds its causal mask at its
+    own absolute time).
+
     The full vocab distribution for a *single* position is O(B·V) — the
     memory-cheap case the paper notes is already fine at inference (§3.2).
+    For *scoring* candidate completions the (N, V) matrix reappears at
+    inference; that path goes through ``repro.serve.scoring`` instead,
+    which lowers it onto the CCE primitive.
     """
     batch = {"tokens": tokens}
     hidden, new_cache, _ = lm_hidden(params, cfg, batch, cache=cache,

@@ -1,2 +1,17 @@
-"""Serving: batched greedy decode engine over serve_step."""
+"""Serving subsystem: continuous-batching decode + CCE-backed scoring.
+
+  * :class:`~repro.serve.engine.Engine` — slot-based continuous batching;
+    one jitted step does model forward (per-row ``cache_index``),
+    device-side sampling, and EOS/length stopping; one host sync per step.
+  * :mod:`repro.serve.sampling` — greedy / temperature / top-k / top-p
+    with per-request parameters, all on device.
+  * :mod:`repro.serve.scheduler` — request queue, slot recycling,
+    the pure slot-state transition.
+  * :mod:`repro.serve.scoring` — ``score(prompt, completions)`` lowered
+    through ``cross_entropy(..., loss="seq_logprob")``: O(B·S·D + V·D)
+    memory, never (B, S, V) logits.
+"""
 from repro.serve.engine import Engine  # noqa: F401
+from repro.serve.sampling import GREEDY, SamplingParams  # noqa: F401
+from repro.serve.scheduler import Completion, Request, Scheduler  # noqa: F401
+from repro.serve.scoring import rank, score, token_logprobs  # noqa: F401

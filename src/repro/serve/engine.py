@@ -1,59 +1,198 @@
-"""Batched serving engine (greedy decode, continuous-batching-lite).
+"""Continuous-batching serving engine.
 
-Requests of different prompt lengths share one batch and one timeline: at
-step t a row still inside its prompt is teacher-forced with its next prompt
-token; rows past their prompt generate. Each row's KV cache only ever
-contains its own tokens, so no padding/masking gymnastics are needed and
-the step function stays a single ``serve_step`` jit.
+One jitted decode step serves the whole batch: model forward with per-row
+``cache_index`` (``serve_step``), device-side sampling with per-request
+parameters, prompt teacher-forcing and EOS/length stopping — all inside
+:func:`repro.serve.scheduler.advance_slots`. The host performs exactly one
+device sync per engine step (a single ``jax.device_get`` of the small
+status vectors), independent of batch size; finished rows are fetched and
+retired in one additional transfer only on the steps where something
+finished.
 
-Inference memory is O(B·V) for the one-position logits — the case the paper
-notes is already cheap (§3.2); CCE is a training-time fix.
+Requests are admitted from the scheduler's queue whenever a slot is free —
+mid-flight, without disturbing the other rows (their cache slots and
+timelines are row-local). A finished row's KV rows are recycled
+immediately (``reset_cache_rows``), so the batch never drains to the speed
+of its slowest request.
+
+``Engine.generate`` keeps the old lockstep API as a thin wrapper: submit
+everything greedy, run to completion, return outputs in submission order.
 """
 
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import transformer as T
+from repro.serve import scheduler as sched
+from repro.serve.sampling import GREEDY, SamplingParams
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_len"),
+                   donate_argnums=(1, 2))
+def _engine_step(params, cache, state, enc_out, *, cfg, max_len):
+    """serve_step + slot transition, fused into one jit.
+
+    Module-level jit keyed on the (hashable) config: every Engine instance
+    with the same cfg/shapes shares one compilation. cache/state are
+    donated (both are immediately replaced by the caller) so the per-step
+    KV dynamic-update-slices alias in place instead of copying the whole
+    cache every token.
+    """
+    logits, cache = T.serve_step(params, cfg, cache, state["tok"],
+                                 state["cache_index"], enc_out=enc_out)
+    state = sched.advance_slots(state, logits, max_len=max_len)
+    return cache, state
 
 
 class Engine:
+    """Slot-based continuous-batching engine over ``serve_step``.
+
+    max_len: KV-cache length (prompt + generated tokens per request).
+    batch_size: number of slots (concurrent requests per decode step).
+    max_prompt_len / max_new_cap: capacities of the device-side prompt and
+        output buffers (default: ``max_len``); they fix the jit signature.
+    enc_out: optional encoder output for encoder-decoder models, shared by
+        all rows (use a fresh engine per enc_out batch; rows map to slots
+        in submission order).
+    """
+
     def __init__(self, cfg, params, *, max_len: int = 512,
-                 batch_size: int = 8):
+                 batch_size: int = 8, max_prompt_len: int | None = None,
+                 max_new_cap: int | None = None, enc_out=None):
+        if enc_out is not None and enc_out.shape[0] != batch_size:
+            raise ValueError(
+                f"enc_out has {enc_out.shape[0]} rows but the engine has "
+                f"{batch_size} slots; slot i reads encoder row i, so they "
+                f"must match (size batch_size to the encoder batch)")
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.batch_size = batch_size
-        self._step = jax.jit(functools.partial(T.serve_step, cfg=cfg))
+        self.enc_out = enc_out
+        self.scheduler = sched.Scheduler(
+            batch_size, max_prompt_len or max_len, max_new_cap or max_len,
+            cfg.vocab_size)
+        self.state = sched.init_state(batch_size,
+                                      self.scheduler.max_prompt_len,
+                                      self.scheduler.max_new_cap)
+        self.cache = T.init_cache(cfg, batch_size, max_len)
+        self.step_count = 0
+        # with enc_out set, request i must land in slot i to meet its
+        # encoder row — only guaranteed while no slot has been recycled
+        self._enc_submits = 0
+
+    # -- request API ---------------------------------------------------
+
+    def submit(self, prompt, *, max_new_tokens: int = 16,
+               sampling: SamplingParams | None = None,
+               eos_token: int | None = None) -> int:
+        """Queue a request; returns its request id. The request starts
+        decoding at the next ``step()`` with a free slot."""
+        if len(prompt) + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens "
+                f"({max_new_tokens}) exceeds the cache length "
+                f"(max_len={self.max_len})")
+        slot = None
+        if self.enc_out is not None:
+            if self._enc_submits >= self.batch_size:
+                raise ValueError(
+                    "with enc_out set, at most batch_size requests can be "
+                    "submitted per engine: request i is pinned to slot i "
+                    "to meet encoder row i, and there are only batch_size "
+                    "encoder rows")
+            # pin request i to slot i so a recycled lower slot can never
+            # pair it with another request's encoder output
+            slot = self._enc_submits
+            self._enc_submits += 1
+        return self.scheduler.submit(sched.Request(
+            prompt=list(prompt), max_new_tokens=max_new_tokens,
+            sampling=sampling or GREEDY, eos_token=eos_token, slot=slot))
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    # -- decode loop ---------------------------------------------------
+
+    def step(self, substeps: int = 1):
+        """Admit, run ``substeps`` jitted decode steps, sync once.
+
+        Returns the list of :class:`~repro.serve.scheduler.Completion`
+        finished by this call. Host<->device traffic: the admission writes
+        (only when something was queued), ONE status ``device_get`` — and
+        one batched fetch of finished rows when there are completions.
+        """
+        if substeps < 1:
+            raise ValueError(f"substeps must be >= 1, got {substeps}")
+        self.state, self.cache, _ = self.scheduler.admit(
+            self.state, self.cache)
+        for _ in range(substeps):
+            self.cache, self.state = _engine_step(
+                self.params, self.cache, self.state, self.enc_out,
+                cfg=self.cfg, max_len=self.max_len)
+            self.step_count += 1
+        return self._sync()
+
+    def _sync(self):
+        """The single per-step host sync: pull the status vectors, record
+        first-token times, retire finished rows."""
+        done, active, n_out = jax.device_get(
+            (self.state["done"], self.state["active"],
+             self.state["n_out"]))
+        now = time.time()
+        for i, req in enumerate(self.scheduler.slots):
+            if (req is not None and req.first_token_time is None
+                    and n_out[i] > 0):
+                req.first_token_time = now
+        rows = self.scheduler.finished_rows(done, active)
+        if not rows:
+            return []
+        out_host, n_host, fin_host = jax.device_get(
+            (self.state["out_buf"], self.state["n_out"],
+             self.state["finish"]))
+        self.state, comps = self.scheduler.retire(
+            self.state, rows, out_host, n_host, fin_host)
+        return comps
+
+    def run(self, substeps: int = 1, max_steps: int | None = None):
+        """Drive ``step()`` until all submitted work is finished; returns
+        {rid: Completion}."""
+        out = {}
+        limit = max_steps if max_steps is not None else 10_000_000
+        while self.has_work() and limit > 0:
+            for c in self.step(substeps=substeps):
+                out[c.rid] = c
+            limit -= substeps
+        return out
+
+    # -- legacy API ----------------------------------------------------
 
     def generate(self, prompts: list, max_new_tokens: int = 16,
-                 enc_out=None) -> list:
-        assert len(prompts) <= self.batch_size
-        b = len(prompts)
-        cache = T.init_cache(self.cfg, b, self.max_len)
-        outputs: list[list[int]] = [[] for _ in range(b)]
-        tok = jnp.asarray([[p[0]] for p in prompts], jnp.int32)
-
-        t = 0
-        while min(len(o) for o in outputs) < max_new_tokens:
-            logits, cache = self._step(params=self.params, cache=cache,
-                                       tokens=tok, cache_index=t,
-                                       enc_out=enc_out)
-            nxt = jnp.argmax(logits, axis=-1)
-            next_tok = []
-            for i, p in enumerate(prompts):
-                if t + 1 < len(p):
-                    next_tok.append(p[t + 1])          # prefill continues
-                else:
-                    tok_i = int(nxt[i])
-                    if len(outputs[i]) < max_new_tokens:
-                        outputs[i].append(tok_i)
-                    next_tok.append(tok_i)
-            tok = jnp.asarray(next_tok, jnp.int32)[:, None]
-            t += 1
-            if t >= self.max_len - 1:
-                break
-        return outputs
+                 enc_out=None, sampling: SamplingParams | None = None,
+                 eos_token: int | None = None) -> list:
+        """Old lockstep-engine API: greedy-decode ``max_new_tokens`` for
+        each prompt, outputs in submission order. Now a thin wrapper over
+        the continuous-batching scheduler (prompt counts beyond
+        ``batch_size`` simply queue)."""
+        if enc_out is not None:
+            if self.scheduler.has_work():
+                raise ValueError("enc_out requires an idle engine "
+                                 "(rows map to slots in submission order)")
+            if enc_out.shape[0] != self.batch_size:
+                raise ValueError(
+                    f"enc_out has {enc_out.shape[0]} rows but the engine "
+                    f"has {self.batch_size} slots; slot i reads encoder "
+                    f"row i, so they must match")
+            if len(prompts) > self.batch_size:
+                raise ValueError("enc_out rows cannot exceed batch_size")
+            self.enc_out = enc_out
+            self._enc_submits = 0   # idle engine: slots refill from 0
+        rids = [self.submit(p, max_new_tokens=max_new_tokens,
+                            sampling=sampling, eos_token=eos_token)
+                for p in prompts]
+        comps = self.run()
+        return [comps[r].tokens for r in rids]

@@ -1,0 +1,110 @@
+"""Device-side token sampling with per-request parameters.
+
+Every knob is a *per-row vector* so one jitted call serves a heterogeneous
+batch: row 0 can decode greedily while row 1 runs temperature-0.8 top-k-40
+nucleus sampling. ``temperature == 0`` selects greedy for that row — the
+whole policy surface lives in arrays, never in Python control flow, so the
+engine's decode step stays one jit with no per-row host sync.
+
+One descending sort of the (B, V) logits serves both the top-k threshold
+(k-th largest value per row, with per-row k) and the top-p nucleus cutoff
+(first prefix whose probability mass reaches p). That is O(B·V log V)
+device work against the O(B·V) logits the step already holds — the serve
+path where the paper notes full logits are cheap (§3.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = jnp.finfo(jnp.float32).min
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling policy (host-side carrier).
+
+    temperature: 0.0 => greedy (argmax); > 0 => softmax sampling.
+    top_k: 0 => off; otherwise keep the k highest-logit tokens.
+    top_p: 1.0 => off; otherwise keep the smallest prefix of the sorted
+        distribution with cumulative probability >= top_p (the first token
+        is always kept).
+    seed: per-request PRNG seed — resubmitting the same request replays
+        the same tokens regardless of what else shares the batch.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def validate(self, vocab_size: int) -> "SamplingParams":
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, "
+                             f"got {self.temperature}")
+        if not 0 <= self.top_k <= vocab_size:
+            raise ValueError(f"top_k must be in [0, {vocab_size}], "
+                             f"got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        return self
+
+
+GREEDY = SamplingParams()
+
+
+def greedy(logits):
+    """(B, V) -> (B,) argmax tokens."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def _filter_top_k(sorted_desc, scaled, top_k):
+    """Mask logits below each row's k-th largest (per-row k; 0 = off)."""
+    v = scaled.shape[-1]
+    k_idx = jnp.clip(top_k - 1, 0, v - 1)[:, None]
+    kth = jnp.take_along_axis(sorted_desc, k_idx, axis=-1)
+    keep = (top_k[:, None] <= 0) | (scaled >= kth)
+    return jnp.where(keep, scaled, _NEG_INF)
+
+
+def _filter_top_p(sorted_desc, scaled, top_p):
+    """Nucleus cutoff: keep the shortest sorted prefix reaching mass p."""
+    probs = jax.nn.softmax(sorted_desc, axis=-1)
+    csum = jnp.cumsum(probs, axis=-1)
+    # a sorted position is kept while the mass *before* it is < p; the
+    # first position is always kept (csum - probs == 0 there)
+    in_nucleus = (csum - probs) < top_p[:, None]
+    thr = jnp.min(jnp.where(in_nucleus, sorted_desc, jnp.inf), axis=-1)
+    keep = (top_p[:, None] >= 1.0) | (scaled >= thr[:, None])
+    return jnp.where(keep, scaled, _NEG_INF)
+
+
+def sample_tokens(logits, keys, temperature, top_k, top_p):
+    """One sampled token per row, fully on device.
+
+    logits: (B, V) f32; keys: (B,) batch of PRNG keys (uint32 (B, 2));
+    temperature/top_p: (B,) f32; top_k: (B,) int32. Rows with
+    ``temperature == 0`` take the argmax (their PRNG key is ignored); an
+    all-greedy batch skips the sort/filter pipeline entirely via
+    ``lax.cond`` (only the taken branch runs), so the default decode path
+    stays a plain argmax.
+    Returns (B,) int32.
+    """
+    logits = logits.astype(jnp.float32)
+    arg = greedy(logits)
+
+    def drawn(_):
+        scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+        sorted_desc = -jnp.sort(-scaled, axis=-1)
+        filtered = _filter_top_k(sorted_desc, scaled, top_k)
+        # nucleus on the *already top-k-filtered* distribution would change
+        # the sorted prefix; following vLLM we apply both filters to the
+        # same temperature-scaled logits and intersect the keep sets.
+        filtered = _filter_top_p(sorted_desc, filtered, top_p)
+        d = jax.vmap(jax.random.categorical)(keys, filtered)
+        return jnp.where(temperature <= 0.0, arg, d.astype(jnp.int32))
+
+    return jax.lax.cond(jnp.any(temperature > 0.0), drawn,
+                        lambda _: arg, None)

@@ -1,0 +1,296 @@
+"""Slot-based continuous-batching scheduler.
+
+The engine's batch is ``B`` *slots*. A request occupies one slot from
+admission to completion; the moment a row finishes, the host retires it and
+the slot (and its KV-cache rows) is recycled for the next queued request —
+rows join and leave mid-flight, nothing waits for the slowest row.
+
+Split of responsibilities:
+
+  * all *per-token* state lives on device in one pytree of (B, ...) arrays
+    (``init_state``) and is advanced by the pure, jit-friendly
+    :func:`advance_slots` — per-row prompt teacher-forcing, sampling,
+    EOS/length/capacity stopping, per-row ``cache_index`` bookkeeping. No
+    Python branches over rows, so the engine's whole decode step is one jit
+    and the host syncs once per step regardless of batch size;
+  * the *request* lifecycle (queue, slot assignment, retirement) lives on
+    host in :class:`Scheduler`, which only touches the device on admission
+    and retirement — and always with batch-shaped masked updates, so those
+    jits compile once per engine shape, not once per admission count.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.serve import sampling as S
+
+NO_EOS = -1
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (host-side)."""
+    prompt: List[int]
+    max_new_tokens: int = 16
+    sampling: S.SamplingParams = S.GREEDY
+    eos_token: Optional[int] = None
+    slot: Optional[int] = None          # pin to one slot (enc_out rows)
+    rid: int = -1                       # assigned by the scheduler
+    submit_time: float = 0.0
+    first_token_time: Optional[float] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    """A finished request as handed back by ``Engine.step``."""
+    rid: int
+    tokens: List[int]
+    prompt: List[int]
+    finish_reason: str                  # "eos" | "length" | "cache_full"
+    submit_time: float = 0.0
+    first_token_time: Optional[float] = None
+    finish_time: float = 0.0
+
+
+def init_state(batch_size: int, max_prompt_len: int, max_new_cap: int):
+    """Fresh slot-state pytree: everything (B, ...), everything on device."""
+    b = batch_size
+    return {
+        "tok": jnp.zeros((b, 1), jnp.int32),
+        "cache_index": jnp.zeros((b,), jnp.int32),
+        "active": jnp.zeros((b,), bool),
+        "done": jnp.zeros((b,), bool),
+        "prompt_buf": jnp.zeros((b, max_prompt_len), jnp.int32),
+        "prompt_len": jnp.ones((b,), jnp.int32),
+        "out_buf": jnp.zeros((b, max_new_cap), jnp.int32),
+        "n_out": jnp.zeros((b,), jnp.int32),
+        "max_new": jnp.ones((b,), jnp.int32),
+        "eos": jnp.full((b,), NO_EOS, jnp.int32),
+        "temperature": jnp.zeros((b,), jnp.float32),
+        "top_k": jnp.zeros((b,), jnp.int32),
+        "top_p": jnp.ones((b,), jnp.float32),
+        "rng": jnp.stack([jax.random.PRNGKey(0)] * b),
+        # sticky per-row finish reason: 0 none, 1 eos, 2 length, 3 cache
+        "finish": jnp.zeros((b,), jnp.int32),
+    }
+
+
+def advance_slots(state, logits, *, max_len: int):
+    """One slot-state transition given this step's (B, V) logits.
+
+    Pure function of (state, logits) — the engine fuses it with
+    ``serve_step`` into a single jit. Per row: sample a token, decide
+    whether it is teacher-forced prompt or generated output, record it,
+    update EOS/length/capacity stop flags, and advance ``cache_index``
+    only for rows still running.
+    """
+    b, m = state["out_buf"].shape
+    rows = jnp.arange(b)
+    live = state["active"] & ~state["done"]
+
+    rng_next = jax.vmap(lambda k: jax.random.split(k, 2))(state["rng"])
+    sampled = S.sample_tokens(logits, rng_next[:, 1],
+                              state["temperature"], state["top_k"],
+                              state["top_p"])
+
+    cur_pos = state["cache_index"]
+    nxt_pos = cur_pos + 1
+    in_prompt = nxt_pos < state["prompt_len"]
+    p_cap = state["prompt_buf"].shape[1]
+    prompt_next = jnp.take_along_axis(
+        state["prompt_buf"], jnp.clip(nxt_pos, 0, p_cap - 1)[:, None],
+        axis=1)[:, 0]
+
+    # the logits at the *last* prompt position predict the first completion
+    # token, so a row generates exactly when its next input is past the
+    # prompt
+    gen = live & ~in_prompt
+    slot = jnp.clip(state["n_out"], 0, m - 1)
+    cur_val = state["out_buf"][rows, slot]
+    out_buf = state["out_buf"].at[rows, slot].set(
+        jnp.where(gen, sampled, cur_val))
+    n_out = state["n_out"] + gen
+
+    hit_eos = gen & (state["eos"] != NO_EOS) & (sampled == state["eos"])
+    hit_len = gen & (n_out >= state["max_new"])
+    # nxt_pos == max_len would write past the cache on the following step
+    hit_cap = live & (nxt_pos >= max_len)
+    done = state["done"] | hit_eos | hit_len | hit_cap
+
+    advance = live & ~done
+    next_tok = jnp.where(in_prompt, prompt_next, sampled)
+    new_state = dict(
+        state,
+        tok=jnp.where(advance[:, None], next_tok[:, None], state["tok"]),
+        cache_index=jnp.where(advance, nxt_pos, cur_pos),
+        done=done,
+        out_buf=out_buf,
+        n_out=n_out,
+        rng=rng_next[:, 0],
+        finish=jnp.where(
+            state["finish"] > 0, state["finish"],
+            jnp.where(hit_eos, 1, jnp.where(hit_len, 2,
+                      jnp.where(hit_cap, 3, 0)))),
+    )
+    return new_state
+
+
+_FINISH_REASONS = {1: "eos", 2: "length", 3: "cache_full"}
+
+
+# Admission/retirement touch the device with *batch-shaped* updates only
+# (a (B,) mask selects the affected rows): the compiled computation is
+# independent of how many requests join or leave at once, so these jits
+# compile exactly once per engine shape instead of once per distinct
+# admission/retirement count.
+
+@jax.jit
+def _apply_admission(state, cache, mask, new):
+    def sel(cur, n):
+        m = mask.reshape((-1,) + (1,) * (cur.ndim - 1))
+        return jnp.where(m, n, cur)
+    state = dict(state)
+    for k, v in new.items():
+        state[k] = sel(state[k], v)
+    return state, T.reset_cache_rows(cache, mask)
+
+
+@jax.jit
+def _apply_retirement(state, mask):
+    return dict(state, active=jnp.where(mask, False, state["active"]))
+
+
+class Scheduler:
+    """Host-side request lifecycle: admission queue + slot bookkeeping."""
+
+    def __init__(self, batch_size: int, max_prompt_len: int,
+                 max_new_cap: int, vocab_size: int):
+        self.batch_size = batch_size
+        self.max_prompt_len = max_prompt_len
+        self.max_new_cap = max_new_cap
+        self.vocab_size = vocab_size
+        self.queue: collections.deque = collections.deque()
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self._rid = itertools.count()
+        # admission template: the init_state schema itself, so a field
+        # added there is automatically reset on every slot recycle
+        self._template = jax.tree.map(
+            np.asarray, init_state(batch_size, max_prompt_len,
+                                   max_new_cap))
+
+    # -- queue ---------------------------------------------------------
+
+    def submit(self, req: Request) -> int:
+        if not req.prompt:
+            raise ValueError("empty prompt")
+        if len(req.prompt) > self.max_prompt_len:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} exceeds engine "
+                f"max_prompt_len {self.max_prompt_len}")
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if req.max_new_tokens > self.max_new_cap:
+            raise ValueError(
+                f"max_new_tokens {req.max_new_tokens} exceeds engine "
+                f"max_new_cap {self.max_new_cap}")
+        req.sampling.validate(self.vocab_size)
+        req.rid = next(self._rid)
+        req.submit_time = time.time()
+        self.queue.append(req)
+        return req.rid
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    @property
+    def running(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    def has_work(self) -> bool:
+        return self.pending > 0 or self.running > 0
+
+    # -- admission -----------------------------------------------------
+
+    def admit(self, state, cache):
+        """Fill free slots from the queue (a slot-pinned request only ever
+        enters its own slot). Returns (state, cache, rows): ONE jitted
+        device call (batch-shaped mask update + cache-row reset)
+        regardless of how many requests are admitted."""
+        rows, reqs = [], []
+        for i in range(self.batch_size):
+            if self.slots[i] is not None:
+                continue
+            for r in self.queue:
+                if r.slot is None or r.slot == i:
+                    self.queue.remove(r)
+                    self.slots[i] = r
+                    rows.append(i)
+                    reqs.append(r)
+                    break
+        if not rows:
+            return state, cache, rows
+
+        b = self.batch_size
+        new = {k: v.copy() for k, v in self._template.items()}
+        mask = np.zeros((b,), bool)
+        for i, r in zip(rows, reqs):
+            s = r.sampling.validate(self.vocab_size)
+            mask[i] = True
+            new["tok"][i, 0] = r.prompt[0]
+            new["active"][i] = True
+            new["prompt_buf"][i, :len(r.prompt)] = r.prompt
+            new["prompt_len"][i] = len(r.prompt)
+            new["max_new"][i] = r.max_new_tokens
+            new["eos"][i] = NO_EOS if r.eos_token is None else r.eos_token
+            new["temperature"][i] = s.temperature
+            new["top_k"][i] = s.top_k
+            new["top_p"][i] = s.top_p
+            new["rng"][i] = np.asarray(jax.random.PRNGKey(s.seed))
+        state, cache = _apply_admission(
+            state, cache, jnp.asarray(mask),
+            {k: jnp.asarray(v) for k, v in new.items()})
+        return state, cache, rows
+
+    # -- retirement ----------------------------------------------------
+
+    def finished_rows(self, done_host, active_host) -> List[int]:
+        """Slot indices holding a finished, not-yet-retired request."""
+        return [i for i in range(self.batch_size)
+                if self.slots[i] is not None
+                and bool(done_host[i]) and bool(active_host[i])]
+
+    def retire(self, state, rows, out_host, n_out_host,
+               finish_host) -> tuple:
+        """Free the slots of ``rows`` and return (new_state, completions).
+        ``out_host``/``n_out_host``/``finish_host`` are host copies."""
+        comps = []
+        now = time.time()
+        for i in rows:
+            req = self.slots[i]
+            n = int(n_out_host[i])
+            comps.append(Completion(
+                rid=req.rid,
+                tokens=[int(t) for t in out_host[i][:n]],
+                prompt=req.prompt,
+                finish_reason=_FINISH_REASONS.get(int(finish_host[i]),
+                                                  "length"),
+                submit_time=req.submit_time,
+                first_token_time=req.first_token_time,
+                finish_time=now,
+            ))
+            self.slots[i] = None
+        mask = np.zeros((self.batch_size,), bool)
+        mask[rows] = True
+        state = _apply_retirement(state, jnp.asarray(mask))
+        return state, comps

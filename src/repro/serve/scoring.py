@@ -1,0 +1,142 @@
+"""CCE-backed candidate scoring: the paper's training-time trick as an
+inference feature.
+
+Scoring/reranking B candidate completions of length S against one prompt
+is the inference workload where the (N, V) logit matrix *reappears*: a
+dense scorer computes ``log_softmax(E @ C.T)`` over every completion
+position — O(B·S·V) memory, the exact shape CCE was built to kill at
+training time. Here the model runs teacher-forced to get embeddings E and
+the per-token/sequence log-probabilities lower through
+``cross_entropy(E, C, labels, loss="seq_logprob", impl=...)`` — the CCE
+primitive's (lse, pick) outputs — so scoring costs O(B·S·D + V·D) and the
+jitted HLO contains no (B, S, V) buffer (gated by
+``benchmarks/serve_throughput.py`` and ``tests/test_serve.py`` via
+``analysis/hlo.array_shape_census``). Dispatch goes through the
+:mod:`repro.backends` registry, so ``mesh=`` runs the same scorer under
+the vocab-parallel combine.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.kernels.ref import IGNORE_INDEX
+from repro.models import transformer as T
+
+
+def build_scoring_batch(prompt, completions, pad_to: int | None = None):
+    """Teacher-forcing batch for ``log p(completion | prompt)``.
+
+    Row b is ``prompt + completions[b]`` (zero-padded); ``labels[b, i]`` is
+    the token row b must predict at position i — completion tokens over
+    positions ``len(prompt)-1 .. len(prompt)+len(c)-2``, IGNORE_INDEX
+    everywhere else (prompt positions score nothing, padding scores
+    nothing). Returns (tokens (B, S) i32, labels (B, S) i32) numpy arrays.
+    """
+    if not prompt:
+        raise ValueError("empty prompt")
+    if not completions or any(not c for c in completions):
+        raise ValueError("completions must be non-empty token lists")
+    lp = len(prompt)
+    s = max(lp + len(c) for c in completions)
+    if pad_to is not None:
+        if pad_to < s:
+            raise ValueError(f"pad_to={pad_to} shorter than the longest "
+                             f"prompt+completion ({s})")
+        s = pad_to
+    b = len(completions)
+    tokens = np.zeros((b, s), np.int32)
+    labels = np.full((b, s), IGNORE_INDEX, np.int32)
+    for i, c in enumerate(completions):
+        row = list(prompt) + list(c)
+        tokens[i, :len(row)] = row
+        labels[i, lp - 1:lp - 1 + len(c)] = c
+    return tokens, labels
+
+
+def score_fn(cfg, *, normalize: str = "sum", impl: str | None = None,
+             per_token: bool = False, mesh=None, vocab_axis: str = "model",
+             token_axes=("data",), cce_cfg=None):
+    """The pure scorer ``(params, tokens, labels) -> scores`` — jit it, lower
+    it for HLO analysis, or call it under a mesh.
+
+    normalize: "sum" (raw sequence log-prob) | "tokens" (length-normalized,
+        the rescoring convention).
+    per_token: return (B, S) per-token log-probs (0 at ignored positions)
+        instead of (B,) sequence scores.
+    impl/mesh/...: forwarded to :func:`repro.core.cross_entropy` — the
+        backend registry decides the realization, exactly as in training.
+    """
+    from repro.core import cross_entropy  # lazy: keeps serve import light
+    from repro.losses import get_loss
+
+    if cfg.is_encdec:
+        # lm_hidden(enc_out=None) would silently turn every cross-attention
+        # block into self-attention; encoder-conditioned scoring needs the
+        # encoder inputs threaded through (ROADMAP: scoring-server batching)
+        raise NotImplementedError(
+            "scoring does not support encoder-decoder configs yet: it "
+            "would need the encoder inputs to condition on")
+    loss = (get_loss("nll") if per_token
+            else get_loss("seq_logprob", normalize=normalize))
+
+    def fn(params, tokens, labels):
+        hidden, _, _ = T.lm_hidden(params, cfg, {"tokens": tokens})
+        C = T.classifier_matrix(params, cfg)
+        E = hidden.astype(C.dtype)
+        out = cross_entropy(
+            E, C, labels, loss=loss, impl=impl or cfg.loss_impl,
+            softcap=cfg.logit_softcap, reduction="none", mesh=mesh,
+            vocab_axis=vocab_axis, token_axes=token_axes, cfg=cce_cfg)
+        # nll -> log-prob for the per-token view; ignored positions are 0
+        return -out if per_token else out
+
+    return fn
+
+
+@functools.lru_cache(maxsize=32)
+def _jitted_scorer(cfg, normalize, impl, per_token, cce_cfg):
+    return jax.jit(score_fn(cfg, normalize=normalize, impl=impl,
+                            per_token=per_token, cce_cfg=cce_cfg))
+
+
+def score(params, cfg, prompt, completions, *, normalize: str = "sum",
+          impl: str | None = None, pad_to: int | None = None,
+          cce_cfg=None):
+    """log p(completion | prompt) for each candidate, CCE-backed.
+
+    Returns a list of floats (one per completion), computed without ever
+    materializing the (B, S, V) logit matrix. ``pad_to`` pads the batch to
+    a fixed length so repeated calls reuse one jit trace.
+    """
+    tokens, labels = build_scoring_batch(prompt, completions, pad_to=pad_to)
+    fn = _jitted_scorer(cfg, normalize, impl or cfg.loss_impl, False,
+                        cce_cfg)
+    return [float(v) for v in fn(params, tokens, labels)]
+
+
+def token_logprobs(params, cfg, prompt, completions, *,
+                   impl: str | None = None, pad_to: int | None = None,
+                   cce_cfg=None):
+    """Per-token log-probs: list (per candidate) of lists (per completion
+    token), same CCE lowering as :func:`score`."""
+    tokens, labels = build_scoring_batch(prompt, completions, pad_to=pad_to)
+    fn = _jitted_scorer(cfg, "sum", impl or cfg.loss_impl, True, cce_cfg)
+    lp = np.asarray(fn(params, tokens, labels))
+    out = []
+    for i, c in enumerate(completions):
+        start = len(prompt) - 1
+        out.append([float(v) for v in lp[i, start:start + len(c)]])
+    return out
+
+
+def rank(params, cfg, prompt, completions, *, normalize: str = "tokens",
+         impl: str | None = None, pad_to: int | None = None,
+         cce_cfg=None):
+    """Candidate indices best-first by (length-normalized) log-prob."""
+    s = score(params, cfg, prompt, completions, normalize=normalize,
+              impl=impl, pad_to=pad_to, cce_cfg=cce_cfg)
+    return sorted(range(len(s)), key=lambda i: -s[i]), s

@@ -150,7 +150,9 @@ def cache_specs(cfg, cache, mesh, data_axes):
         stacked = keys[0] == "groups"   # leading n_groups axis
         shape = leaf.shape[1:] if stacked else leaf.shape
         if name == "pos":
-            spec = [None] * len(shape)
+            # (B, W) per-row ring positions: batch-sharded with their K/V
+            spec = [_shard_if(mesh, shape[0], dp)] + \
+                [None] * (len(shape) - 1)
         else:
             spec = [_shard_if(mesh, shape[0], dp)] + [None] * (len(shape) - 1)
             if len(shape) >= 2:

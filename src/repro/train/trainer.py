@@ -24,7 +24,7 @@ from repro.train.checkpoint import CheckpointManager
 
 def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, loss_fn=None,
                     loss_impl=None, mesh=None, vocab_axis: str = "model",
-                    token_axes=("data",)):
+                    token_axes=("data",), cce_cfg=None):
     """Returns step(params, opt_state, batch, step_idx) -> (params, opt,
     metrics). Gradient accumulation: batch is split into microbatches along
     the batch axis and grads are averaged with a lax.scan (the scheduling
@@ -33,14 +33,16 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, loss_fn=None,
     mesh/vocab_axis/token_axes: forwarded to the ``cross_entropy`` head —
     the production launcher passes its mesh so the loss runs through the
     vocab-parallel combine with whatever backend ``loss_impl`` (or
-    ``cfg.loss_impl``) resolves to."""
+    ``cfg.loss_impl``) resolves to. ``cce_cfg`` carries the kernel-level
+    CCEConfig knobs (sort_vocab, filter modes, accumulator) to the
+    resolved backend."""
 
     def loss_of(params, batch):
         return T.train_loss(params, cfg, batch, loss_fn=loss_fn,
                             loss_impl=loss_impl,
                             loss=tcfg.loss, loss_kwargs=tcfg.loss_options(),
                             mesh=mesh, vocab_axis=vocab_axis,
-                            token_axes=token_axes)
+                            token_axes=token_axes, cce_cfg=cce_cfg)
 
     def step(params, opt_state, batch, step_idx):
         b = batch["labels"].shape[0]
@@ -98,14 +100,21 @@ class Trainer:
     def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, *,
                  data: SyntheticLM | None = None, checkpoint_dir=None,
                  seq_len: int = 512, global_batch: int = 8, loss_fn=None,
-                 jit: bool = True):
+                 loss_impl=None, mesh=None, vocab_axis: str = "model",
+                 token_axes=("data",), cce_cfg=None, jit: bool = True):
         self.cfg, self.tcfg = cfg, tcfg
         self.data = data or SyntheticLM(DataConfig(
             vocab_size=cfg.vocab_size, seq_len=seq_len,
             global_batch=global_batch, seed=tcfg.seed))
         self.ckpt = (CheckpointManager(checkpoint_dir, tcfg.keep_checkpoints)
                      if checkpoint_dir else None)
-        step_fn = make_train_step(cfg, tcfg, loss_fn=loss_fn)
+        # dispatch arguments pass straight through to make_train_step: a
+        # Trainer can select any backend / the vocab-parallel head, not
+        # just the cfg defaults
+        step_fn = make_train_step(cfg, tcfg, loss_fn=loss_fn,
+                                  loss_impl=loss_impl, mesh=mesh,
+                                  vocab_axis=vocab_axis,
+                                  token_axes=token_axes, cce_cfg=cce_cfg)
         self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1)) if jit \
             else step_fn
         self._preempted = False

@@ -1,0 +1,417 @@
+"""Serving subsystem tests: continuous batching golden-equivalence,
+mid-flight admission, device-side sampling, CCE-backed scoring, and the
+O(1)-host-transfers property of the decode loop."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.analysis import hlo as hlo_an
+from repro.models import transformer as T
+from repro.serve import Engine, SamplingParams, scoring
+from repro.serve import sampling as sampling_mod
+
+
+def _cfg(arch="llama3_2_3b", **over):
+    return dataclasses.replace(configs.get_reduced_config(arch),
+                               dtype="float32", **over)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = _cfg()
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+PROMPTS = [[1, 2, 3, 4, 5, 6, 7], [4, 5], [9, 8, 7], [11, 12, 13, 14]]
+
+
+def _sequential(cfg, params, prompts, max_new, **kw):
+    """One-request-at-a-time greedy decode: the golden reference."""
+    return [Engine(cfg, params, max_len=64, batch_size=1).generate(
+        [p], max_new, **kw)[0] for p in prompts]
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence: continuous batching == sequential greedy decode.
+# ---------------------------------------------------------------------------
+
+def test_continuous_matches_sequential_greedy(model):
+    cfg, params = model
+    eng = Engine(cfg, params, max_len=64, batch_size=2)
+    out = eng.generate(PROMPTS, max_new_tokens=6)   # 4 reqs through 2 slots
+    ref = _sequential(cfg, params, PROMPTS, 6)
+    assert out == ref
+
+
+@pytest.mark.parametrize("arch", ["gemma2_2b", "recurrentgemma_9b",
+                                  "rwkv6_3b"])
+def test_continuous_matches_sequential_other_mixers(arch):
+    """Ring-buffer SWA caches and recurrent states are slot-recyclable
+    too: per-row timelines must not leak across rows."""
+    cfg = _cfg(arch)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    prompts = PROMPTS[:3]
+    out = Engine(cfg, params, max_len=48,
+                 batch_size=2).generate(prompts, 5)
+    ref = [Engine(cfg, params, max_len=48, batch_size=1).generate(
+        [p], 5)[0] for p in prompts]
+    assert out == ref
+
+
+def test_mid_flight_admission(model):
+    """A request enqueued after decoding has started completes with
+    exactly the tokens it would produce alone."""
+    cfg, params = model
+    eng = Engine(cfg, params, max_len=64, batch_size=2)
+    r0 = eng.submit(PROMPTS[0], max_new_tokens=6)
+    r1 = eng.submit(PROMPTS[1], max_new_tokens=6)
+    comps = {}
+    for c in eng.step():                    # step 0: only r0/r1 on board
+        comps[c.rid] = c
+    r2 = eng.submit(PROMPTS[2], max_new_tokens=6)   # joins mid-flight
+    comps.update(eng.run())
+    ref = _sequential(cfg, params, PROMPTS[:3], 6)
+    assert [comps[r].tokens for r in (r0, r1, r2)] == ref
+
+
+def test_slot_reuse_is_clean(model):
+    """Back-to-back generations through the same engine (slots recycled
+    many times) keep producing the sequential-reference tokens."""
+    cfg, params = model
+    eng = Engine(cfg, params, max_len=64, batch_size=2)
+    ref = _sequential(cfg, params, PROMPTS, 4)
+    for _ in range(2):
+        assert eng.generate(PROMPTS, max_new_tokens=4) == ref
+
+
+def test_eos_stops_row(model):
+    cfg, params = model
+    base = Engine(cfg, params, max_len=64,
+                  batch_size=1).generate([PROMPTS[0]], 8)[0]
+    # first position whose token did not appear earlier in the output —
+    # using it as EOS must truncate exactly there
+    k = next(i for i in range(1, len(base)) if base[i] not in base[:i])
+    eng = Engine(cfg, params, max_len=64, batch_size=1)
+    rid = eng.submit(PROMPTS[0], max_new_tokens=8, eos_token=base[k])
+    comp = eng.run()[rid]
+    assert comp.tokens == base[:k + 1]      # EOS included, then stop
+    assert comp.finish_reason == "eos"
+
+
+# ---------------------------------------------------------------------------
+# Sampling.
+# ---------------------------------------------------------------------------
+
+def test_sampling_deterministic_and_batch_invariant(model):
+    """Seeded sampling replays identically, and a request's tokens do not
+    depend on what else shares the batch (per-row PRNG streams)."""
+    cfg, params = model
+    sp = SamplingParams(temperature=0.7, top_k=13, top_p=0.9, seed=5)
+    a = Engine(cfg, params, max_len=64, batch_size=2).generate(
+        PROMPTS[:2], 6, sampling=sp)
+    b = Engine(cfg, params, max_len=64, batch_size=2).generate(
+        PROMPTS[:2], 6, sampling=sp)
+    assert a == b
+    alone = Engine(cfg, params, max_len=64, batch_size=1).generate(
+        [PROMPTS[0]], 6, sampling=sp)[0]
+    assert a[0] == alone
+
+
+def test_sample_tokens_temperature_zero_is_greedy():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (4, 37))
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(4))
+    out = sampling_mod.sample_tokens(
+        logits, keys, jnp.zeros((4,)), jnp.zeros((4,), jnp.int32),
+        jnp.ones((4,)))
+    np.testing.assert_array_equal(out, jnp.argmax(logits, -1))
+
+
+def test_sample_tokens_top_k_one_is_greedy_per_row():
+    """top_k=1 forces the argmax even at high temperature — and per-row
+    params mix freely in one call."""
+    logits = jax.random.normal(jax.random.PRNGKey(1), (3, 29))
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(3))
+    out = sampling_mod.sample_tokens(
+        logits, keys, jnp.asarray([5.0, 0.0, 5.0]),
+        jnp.asarray([1, 0, 1], jnp.int32), jnp.ones((3,)))
+    np.testing.assert_array_equal(out, jnp.argmax(logits, -1))
+
+
+def test_sample_tokens_top_p_tiny_is_greedy():
+    logits = jax.random.normal(jax.random.PRNGKey(2), (4, 53))
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(4))
+    out = sampling_mod.sample_tokens(
+        logits, keys, jnp.full((4,), 3.0), jnp.zeros((4,), jnp.int32),
+        jnp.full((4,), 1e-6))
+    np.testing.assert_array_equal(out, jnp.argmax(logits, -1))
+
+
+def test_sampling_params_validate():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-1.0).validate(100)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0).validate(100)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=101).validate(100)
+
+
+# ---------------------------------------------------------------------------
+# O(1) host transfers per engine step.
+# ---------------------------------------------------------------------------
+
+def test_one_host_transfer_per_step(model, monkeypatch):
+    """The decode loop performs exactly one device_get per step when no
+    request finishes (and 2 on finishing steps), independent of batch
+    size — never a per-row int(...) sync."""
+    cfg, params = model
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get",
+                        lambda x: calls.append(1) or real(x))
+    for bs in (2, 4):
+        eng = Engine(cfg, params, max_len=64, batch_size=bs)
+        for p in PROMPTS[:bs]:
+            eng.submit(p, max_new_tokens=4)
+        calls.clear()
+        n_steps = 0
+        while eng.has_work():
+            before = len(calls)
+            done = eng.step()
+            n_steps += 1
+            assert len(calls) - before == (2 if done else 1), \
+                f"batch={bs}: host transfers grew with the step"
+        assert n_steps > 1
+
+
+# ---------------------------------------------------------------------------
+# Scoring.
+# ---------------------------------------------------------------------------
+
+def test_scoring_matches_dense_logprobs(model):
+    """CCE-backed score == dense log_softmax(E @ C.T) gather."""
+    cfg, params = model
+    prompt = [1, 2, 3]
+    comps = [[4, 5], [6], [7, 8, 9]]
+    got = scoring.score(params, cfg, prompt, comps)
+
+    toks, _ = scoring.build_scoring_batch(prompt, comps)
+    hidden, _, _ = T.lm_hidden(params, cfg, {"tokens": jnp.asarray(toks)})
+    C = T.classifier_matrix(params, cfg)
+    ls = jax.nn.log_softmax(
+        hidden.astype(jnp.float32) @ C.astype(jnp.float32).T, axis=-1)
+    want = [sum(float(ls[i, len(prompt) - 1 + j, t])
+                for j, t in enumerate(c)) for i, c in enumerate(comps)]
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_scoring_normalize_tokens(model):
+    cfg, params = model
+    prompt = [1, 2, 3]
+    comps = [[4, 5], [6, 7, 8, 9]]
+    raw = scoring.score(params, cfg, prompt, comps, normalize="sum")
+    norm = scoring.score(params, cfg, prompt, comps, normalize="tokens")
+    np.testing.assert_allclose(norm, [raw[0] / 2, raw[1] / 4], rtol=1e-5)
+
+
+def test_token_logprobs_sum_to_score(model):
+    cfg, params = model
+    prompt = [1, 2, 3]
+    comps = [[4, 5, 6], [7]]
+    per_tok = scoring.token_logprobs(params, cfg, prompt, comps)
+    s = scoring.score(params, cfg, prompt, comps)
+    assert [len(t) for t in per_tok] == [3, 1]
+    np.testing.assert_allclose([sum(t) for t in per_tok], s,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_scoring_impl_agreement(model):
+    cfg, params = model
+    prompt = [5, 6]
+    comps = [[1, 2], [3]]
+    a = scoring.score(params, cfg, prompt, comps, impl="cce_jax")
+    b = scoring.score(params, cfg, prompt, comps, impl="dense")
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_scoring_hlo_has_no_batched_vocab_buffer():
+    """The jitted scorer's optimized HLO must contain no (N, V)-class
+    array: vocab is enlarged so a kernel tile cannot coincide with N×V
+    (same convention as benchmarks/loss_zoo_memory)."""
+    cfg = _cfg(vocab_size=32768)
+    b, s = 8, 64
+    n, v, d = b * s, cfg.padded_vocab_size, cfg.d_model
+    budget = 4 * max(n * d, v * d)
+    assert budget < n * v           # the check is actually discriminating
+    params_sds = jax.eval_shape(
+        lambda: T.init_lm(jax.random.PRNGKey(0), cfg))
+    toks = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    fn = scoring.score_fn(cfg, impl="cce_jax")
+    text = jax.jit(fn).lower(params_sds, toks, toks).compile().as_text()
+    top = hlo_an.array_shape_census(text, top=1)[0]
+    assert top[0] <= budget, \
+        f"scoring materialized an N×V-class buffer: {top[1]}"
+    # control: the dense scorer at the same size does materialize (N, V)
+    dense = scoring.score_fn(cfg, impl="dense")
+    text = jax.jit(dense).lower(params_sds, toks, toks).compile().as_text()
+    assert hlo_an.array_shape_census(text, top=1)[0][0] >= n * v
+
+
+def test_build_scoring_batch_shapes_and_labels():
+    toks, labels = scoring.build_scoring_batch([1, 2], [[3, 4], [5]])
+    np.testing.assert_array_equal(toks, [[1, 2, 3, 4], [1, 2, 5, 0]])
+    ii = -100
+    np.testing.assert_array_equal(labels, [[ii, 3, 4, ii],
+                                           [ii, 5, ii, ii]])
+    with pytest.raises(ValueError):
+        scoring.build_scoring_batch([], [[1]])
+    with pytest.raises(ValueError):
+        scoring.build_scoring_batch([1], [[]])
+
+
+# ---------------------------------------------------------------------------
+# Engine validation / bookkeeping.
+# ---------------------------------------------------------------------------
+
+def test_submit_validation(model):
+    cfg, params = model
+    eng = Engine(cfg, params, max_len=32, batch_size=1)
+    with pytest.raises(ValueError):
+        eng.submit(list(range(30)), max_new_tokens=10)  # prompt+new>max_len
+    with pytest.raises(ValueError):
+        eng.submit([1], max_new_tokens=0)
+
+
+def test_enc_out_blocks_slot_recycling(model):
+    """With enc_out set, rows map to encoder rows by slot: submitting more
+    than batch_size requests must be refused, not silently mispaired."""
+    cfg, params = model
+    enc = jnp.zeros((2, 4, cfg.d_model), jnp.float32)
+    eng = Engine(cfg, params, max_len=64, batch_size=2, enc_out=enc)
+    eng.submit([1, 2], max_new_tokens=2)
+    eng.submit([3, 4], max_new_tokens=2)
+    with pytest.raises(ValueError):
+        eng.submit([5, 6], max_new_tokens=2)
+
+
+def test_enc_out_pins_requests_to_their_encoder_row():
+    """A request submitted after an earlier one retired must still meet
+    ITS OWN encoder row, not the freed slot's."""
+    cfg = _cfg("seamless_m4t_medium")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    enc = jax.random.normal(jax.random.PRNGKey(1),
+                            (2, 4, cfg.d_model)) * 0.5
+    # reference: request B decoded alone against encoder row 1
+    ref = Engine(cfg, params, max_len=32, batch_size=1,
+                 enc_out=enc[1:2]).generate([[3, 4]], 3)[0]
+    # A occupies slot 0, finishes, THEN B is submitted: without slot
+    # pinning B would recycle slot 0 and read A's encoder row 0
+    eng = Engine(cfg, params, max_len=32, batch_size=2, enc_out=enc)
+    ra = eng.submit([1, 2], max_new_tokens=2)
+    comps = eng.run()
+    assert ra in comps
+    rb = eng.submit([3, 4], max_new_tokens=3)
+    assert eng.run()[rb].tokens == ref
+
+
+def test_completion_metadata(model):
+    cfg, params = model
+    eng = Engine(cfg, params, max_len=64, batch_size=2)
+    rid = eng.submit(PROMPTS[0], max_new_tokens=3)
+    comp = eng.run()[rid]
+    assert comp.rid == rid
+    assert comp.prompt == PROMPTS[0]
+    assert comp.finish_reason == "length"
+    assert len(comp.tokens) == 3
+    assert comp.first_token_time is not None
+    assert comp.finish_time >= comp.submit_time
+
+
+# ---------------------------------------------------------------------------
+# Satellite regression: Trainer forwards dispatch arguments.
+# ---------------------------------------------------------------------------
+
+def test_trainer_forwards_dispatch_arguments():
+    """Trainer(loss_impl=...) must reach the backend registry — it used to
+    be silently dropped, so an incapable backend 'worked'."""
+    from repro.backends import BackendResolutionError
+    from repro.configs.base import TrainConfig
+    from repro.train import Trainer
+
+    cfg = _cfg("llama3_2_3b")
+    tcfg = TrainConfig(total_steps=1, warmup_steps=1, loss="z_loss",
+                       loss_kwargs=(("z_weight", 1e-4),))
+    # chunked cannot serve a registry loss (no custom cotangents): with the
+    # argument actually forwarded this must fail at trace time
+    tr = Trainer(cfg, tcfg, seq_len=16, global_batch=2,
+                 loss_impl="chunked", jit=False)
+    with pytest.raises(BackendResolutionError):
+        tr.run(num_steps=1, log_fn=None)
+    # and a capable backend trains normally through the same passthrough
+    hist = Trainer(cfg, tcfg, seq_len=16, global_batch=2,
+                   loss_impl="cce_jax").run(num_steps=1, log_every=1,
+                                            log_fn=None)
+    assert np.isfinite(hist[-1]["loss"])
+
+
+def test_trainer_forwards_mesh():
+    """mesh/vocab_axis/token_axes passthrough: the vocab-parallel head
+    runs under a 1x1 mesh and matches the local loss."""
+    from jax.sharding import Mesh
+
+    from repro.configs.base import TrainConfig
+    from repro.train import Trainer
+
+    cfg = _cfg("llama3_2_3b")
+    tcfg = TrainConfig(total_steps=2, warmup_steps=1, seed=3)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    a = Trainer(cfg, tcfg, seq_len=16, global_batch=2, mesh=mesh,
+                loss_impl="cce_jax").run(num_steps=2, log_every=1,
+                                         log_fn=None)
+    b = Trainer(cfg, tcfg, seq_len=16, global_batch=2,
+                loss_impl="cce_jax").run(num_steps=2, log_every=1,
+                                         log_fn=None)
+    np.testing.assert_allclose([h["loss"] for h in a],
+                               [h["loss"] for h in b], rtol=1e-5)
+
+
+def test_trainer_forwards_cce_cfg():
+    """cce_cfg passthrough: a CCEConfig with sort_vocab still trains and
+    matches the default config's loss (sorting is numerics-neutral)."""
+    from repro.configs.base import TrainConfig
+    from repro.kernels.ops import CCEConfig
+    from repro.train import Trainer
+
+    cfg = _cfg("llama3_2_3b")
+    tcfg = TrainConfig(total_steps=1, warmup_steps=1, seed=4)
+    a = Trainer(cfg, tcfg, seq_len=16, global_batch=2,
+                cce_cfg=CCEConfig(sort_vocab=True),
+                loss_impl="cce_jax").run(num_steps=1, log_every=1,
+                                         log_fn=None)
+    b = Trainer(cfg, tcfg, seq_len=16, global_batch=2,
+                loss_impl="cce_jax").run(num_steps=1, log_every=1,
+                                         log_fn=None)
+    np.testing.assert_allclose(a[-1]["loss"], b[-1]["loss"], rtol=1e-5)
+
+
+def test_cce_cli_flags_validate_against_dataclass():
+    import argparse
+
+    from repro.launch.cce_flags import add_cce_args, cce_config_from_args
+
+    ap = argparse.ArgumentParser()
+    add_cce_args(ap)
+    args = ap.parse_args(["--cce-sort-vocab", "--cce-accum", "bf16_kahan",
+                          "--cce-filter-mode-c", "full"])
+    c = cce_config_from_args(args)
+    assert c.sort_vocab and c.accum == "bf16_kahan"
+    assert c.filter_mode_c == "full" and c.filter_mode_e == "filtered"
+    assert cce_config_from_args(ap.parse_args([])) is None
+    with pytest.raises(SystemExit):
+        ap.parse_args(["--cce-accum", "f64"])   # not a CCEConfig choice
