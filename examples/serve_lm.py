@@ -5,6 +5,9 @@ Demonstrates the inference side of the framework:
   * slot-based continuous batching — requests with ragged prompt lengths
     share the batch, a mid-flight request joins as soon as a slot frees
     up, and each row decodes on its own timeline (per-row ``cache_index``);
+  * chunked prefill (``--prefill-chunk``) — prompts are ingested several
+    tokens per fused prefill+decode step, cutting TTFT without changing a
+    single output token;
   * device-side sampling with *per-request* parameters (row 0 greedy next
     to row 1 at temperature 0.8 / top-p 0.9), one host sync per step;
   * CCE-backed scoring: ranking candidate completions by
@@ -33,6 +36,9 @@ def main():
     ap.add_argument("--batch", type=int, default=4,
                     help="engine slots (concurrent rows)")
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="prompt tokens ingested per step during prefill "
+                         "(1 = one-token teacher forcing)")
     args = ap.parse_args()
 
     cfg = configs.get_reduced_config(args.arch)
@@ -58,7 +64,7 @@ def main():
             jax.random.PRNGKey(1), (batch, 16, cfg.d_model),
             dtype=cfg.dtype) * 0.02
     engine = Engine(cfg, params, max_len=128, batch_size=batch,
-                    enc_out=enc_out)
+                    prefill_chunk=args.prefill_chunk, enc_out=enc_out)
     policies = [SamplingParams(),                                  # greedy
                 SamplingParams(temperature=0.8, top_p=0.9, seed=1),
                 SamplingParams(temperature=1.0, top_k=40, seed=2)]

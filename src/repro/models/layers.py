@@ -207,16 +207,33 @@ def _row_update(buf, upd, idx):
     )(buf, upd, idx)
 
 
+def _masked_row_update(buf, upd, tgt, write):
+    """Scatter ``upd`` (B, Sq, ...) rows into ``buf`` (B, L, ...) at
+    per-token positions ``tgt`` (B, Sq); tokens with ``write`` False are
+    dropped (their target is pushed out of bounds, mode="drop").
+
+    Chunked prefill's ragged tails make a plain ``dynamic_update_slice``
+    unsafe twice over: invalid tail tokens must not land in the cache, and
+    a row whose chunk extends past L would have its start clamped and
+    clobber *earlier* valid positions. Valid targets are unique per row, so
+    the scatter is deterministic."""
+    b, sq = tgt.shape
+    safe = jnp.where(write, tgt, buf.shape[1])
+    return buf.at[jnp.arange(b)[:, None], safe].set(upd, mode="drop")
+
+
 def multi_head_attention(params, x, *, num_heads, num_kv_heads, head_dim,
                          cos_sin=None, causal=True, window=None,
                          softcap=None, kv_x=None, cache=None,
-                         cache_index=None):
+                         cache_index=None, valid_len=None):
     """Self- or cross-attention with optional KV cache (decode).
 
     cache: dict(k=(B, S_cache, Hkv, hd), v=...) updated at ``cache_index``
-    when decoding (x has Sq=1). ``cache_index`` may be a scalar (all rows on
-    one timeline) or a (B,) vector of per-row positions. Returns
-    (out, new_cache).
+    when decoding. ``cache_index`` may be a scalar (all rows on one
+    timeline) or a (B,) vector of per-row positions. With Sq > 1 (chunked
+    prefill) each row writes ``valid_len`` (B,) KV positions — tail tokens
+    past a row's valid length are padding: never cached, and causally
+    invisible to valid queries. Returns (out, new_cache).
     """
     b, sq, _ = x.shape
     kv_in = x if kv_x is None else kv_x
@@ -236,12 +253,11 @@ def multi_head_attention(params, x, *, num_heads, num_kv_heads, head_dim,
     if cache is not None:
         causal = True
         q_offset = cache_index
-        if "pos" in cache:
+        if "pos" in cache and sq == 1:
             # Ring buffer (sliding-window cache, length W << context): write
             # at slot t mod W; the mask comes from the stored absolute
             # positions (B, W), so RoPE'd keys stay valid and each row can
-            # sit at a different absolute time. Single-token steps only.
-            assert sq == 1, "ring caches support one-token decode steps"
+            # sit at a different absolute time.
             w_len = cache["k"].shape[1]
             slot = jax.lax.rem(cache_index, w_len)
             k = _row_update(cache["k"], k, slot)
@@ -255,6 +271,44 @@ def multi_head_attention(params, x, *, num_heads, num_kv_heads, head_dim,
             pos = _row_update(cache["pos"], abs_pos, slot_vec)
             new_cache = {"k": k, "v": v, "pos": pos}
             kv_pos = pos
+        elif "pos" in cache:
+            # Multi-token ring step: a later chunk token's ring write can
+            # evict a slot an *earlier* chunk query still needs (the window
+            # trails by W), so attention reads (old ring ∪ chunk) and the
+            # ring is only updated for future steps — with the last
+            # min(n, W) valid tokens per row.
+            w_len = cache["k"].shape[1]
+            ci = jnp.broadcast_to(
+                jnp.asarray(cache_index, jnp.int32).reshape(-1), (b,))
+            n = (jnp.full((b,), sq, jnp.int32) if valid_len is None
+                 else jnp.broadcast_to(
+                     jnp.asarray(valid_len, jnp.int32), (b,)))
+            j = jnp.arange(sq)[None]
+            abs_pos = ci[:, None] + j                       # (B, Sq)
+            write = (j < n[:, None]) & (j >= (n - w_len)[:, None])
+            slots = jax.lax.rem(abs_pos, w_len)
+            new_cache = {
+                "k": _masked_row_update(cache["k"], k, slots, write),
+                "v": _masked_row_update(cache["v"], v, slots, write),
+                "pos": _masked_row_update(cache["pos"], abs_pos, slots,
+                                          write),
+            }
+            kv_pos = jnp.concatenate(
+                [cache["pos"], jnp.where(j < n[:, None], abs_pos, -1)], 1)
+            k = jnp.concatenate([cache["k"], k], axis=1)
+            v = jnp.concatenate([cache["v"], v], axis=1)
+        elif sq > 1:
+            ci = jnp.broadcast_to(
+                jnp.asarray(cache_index, jnp.int32).reshape(-1), (b,))
+            n = (jnp.full((b,), sq, jnp.int32) if valid_len is None
+                 else jnp.broadcast_to(
+                     jnp.asarray(valid_len, jnp.int32), (b,)))
+            j = jnp.arange(sq)[None]
+            tgt = ci[:, None] + j
+            write = j < n[:, None]
+            k = _masked_row_update(cache["k"], k, tgt, write)
+            v = _masked_row_update(cache["v"], v, tgt, write)
+            new_cache = {"k": k, "v": v}
         else:
             k = _row_update(cache["k"], k, cache_index)
             v = _row_update(cache["v"], v, cache_index)
@@ -265,7 +319,10 @@ def multi_head_attention(params, x, *, num_heads, num_kv_heads, head_dim,
     kf = _repeat_kv(k, num_heads)
     vf = _repeat_kv(v, num_heads)
 
-    if sq == 1 or kf.shape[1] <= DENSE_ATTN_MAX_SEQ:
+    if cache is not None or sq == 1 or kf.shape[1] <= DENSE_ATTN_MAX_SEQ:
+        # cached steps always take the dense path: it is the only one that
+        # understands per-row q_offset / ragged kv_pos, and Sq stays small
+        # (1 or one prefill chunk) so the score tile is (Sq, S_cache)
         out = _dense_attn(q, kf, vf, causal=causal, window=window,
                           softcap=softcap, q_offset=q_offset, kv_pos=kv_pos)
         out = out.astype(x.dtype)

@@ -46,20 +46,32 @@ def init_rglru_block(key, d_model, cfg, dtype):
     }
 
 
-def _causal_conv(x, w):
-    """Depthwise causal temporal conv. x (B,S,W), w (K,W)."""
+def _causal_conv(x, w, hist=None):
+    """Depthwise causal temporal conv. x (B,S,W), w (K,W).
+
+    hist: optional (B, K-1, W) carry of the previous K-1 inputs (chunked
+    prefill); defaults to zeros — the left zero-pad of teacher forcing.
+    """
     k = w.shape[0]
-    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    if hist is None:
+        pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([hist.astype(x.dtype), x], axis=1)
     out = jnp.zeros_like(x)
     for i in range(k):  # small static K (4): unrolled adds, XLA fuses
         out = out + pad[:, i:i + x.shape[1], :] * w[k - 1 - i]
     return out
 
 
-def _rglru_scan(xt, a):
+def _rglru_scan(xt, a, h0=None):
     """h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * xt_t via associative scan.
-    xt, a: (B, S, W) f32."""
+    xt, a: (B, S, W) f32; h0: optional (B, W) initial state, carried in as
+    a virtual leading step (a=1, b=h0) — exact, since combine((1, h0),
+    (a_1, b_1)) is the decode-step update."""
     b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * xt
+    if h0 is not None:
+        a = jnp.concatenate([jnp.ones_like(h0)[:, None], a], axis=1)
+        b = jnp.concatenate([h0[:, None], b], axis=1)
 
     def combine(c1, c2):
         a1, b1 = c1
@@ -67,25 +79,42 @@ def _rglru_scan(xt, a):
         return a1 * a2, b1 * a2 + b2
 
     _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
-    return h
+    return h[:, 1:] if h0 is not None else h
 
 
-def rglru_block(params, x, cfg, state=None, decode=False):
+def rglru_block(params, x, cfg, state=None, decode=False, valid_len=None):
     """Griffin recurrent block. x (B,S,d) -> (out, new_state).
 
-    state (decode): dict(conv=(B, K-1, W), h=(B, W))."""
+    state (decode): dict(conv=(B, K-1, W), h=(B, W)). decode with S > 1 is
+    the chunked-prefill path: the scan starts from ``state`` and, when
+    ``valid_len`` (B,) is given, positions past a row's valid length are
+    identity steps (a=1, input 0) so the carried state is exactly the
+    state after that row's last valid token."""
+    b, s, _ = x.shape
+    single = decode and s == 1 and valid_len is None
     gate = jax.nn.gelu(dense({"w": params["w_gate"]}, x))
     xb = dense({"w": params["w_x"]}, x)
+    kw = cfg.conv_width
 
-    if decode:
+    if single:
         conv_hist = jnp.concatenate([state["conv"], xb], axis=1)  # (B,K,W)
         # taps: conv_w[j] multiplies x_{t-j}; history is oldest->newest
         xb_c = jnp.einsum("bkw,kw->bw", conv_hist,
                           params["conv_w"][::-1])[:, None]
         new_conv = conv_hist[:, 1:]
+    elif decode:
+        hist = jnp.concatenate([state["conv"], xb], axis=1)  # (B, K-1+S, W)
+        xb_c = _causal_conv(xb, params["conv_w"], hist=state["conv"])
+        n = (jnp.full((b,), s, jnp.int32) if valid_len is None
+             else jnp.asarray(valid_len, jnp.int32))
+        # last K-1 inputs ending at each row's final valid token; for
+        # n < K-1 this correctly reaches back into the carried history
+        new_conv = jax.vmap(
+            lambda h, i: jax.lax.dynamic_slice_in_dim(h, i, kw - 1, axis=0)
+        )(hist, n)
     else:
         xb_c = _causal_conv(xb, params["conv_w"])
-        new_conv = xb[:, -(cfg.conv_width - 1):]
+        new_conv = xb[:, -(kw - 1):]
 
     r = jax.nn.sigmoid(dense({"w": params["w_a"]}, xb_c).astype(jnp.float32))
     i = jax.nn.sigmoid(dense({"w": params["w_i"]}, xb_c).astype(jnp.float32))
@@ -93,12 +122,19 @@ def rglru_block(params, x, cfg, state=None, decode=False):
     a = jnp.exp(log_a)
     gated = i * xb_c.astype(jnp.float32)
 
-    if decode:
+    if single:
         h_prev = state["h"]
         h = a[:, 0] * h_prev + jnp.sqrt(
             jnp.maximum(1.0 - a[:, 0] ** 2, 1e-12)) * gated[:, 0]
         hs = h[:, None]
         new_state = {"conv": new_conv, "h": h}
+    elif decode:
+        if valid_len is not None:
+            valid = (jnp.arange(s)[None] < valid_len[:, None])[..., None]
+            a = jnp.where(valid, a, 1.0)
+            gated = jnp.where(valid, gated, 0.0)
+        hs = _rglru_scan(gated, a, h0=state["h"])
+        new_state = {"conv": new_conv, "h": hs[:, -1]}
     else:
         hs = _rglru_scan(gated, a)
         new_state = {"conv": new_conv, "h": hs[:, -1]}
@@ -197,16 +233,21 @@ def _rwkv6_chunk(r, k, v, w_log, u, state, chunk_len):
     return out, state_f
 
 
-def rwkv6_mixer(params, x, cfg, state=None, decode=False):
+def rwkv6_mixer(params, x, cfg, state=None, decode=False, valid_len=None):
     """RWKV-6 time mixer. x (B,S,d) -> (out, new_state).
 
-    state: dict(shift=(B,1,d), wkv=(B,H,hd,hd) f32)."""
+    state: dict(shift=(B,1,d), wkv=(B,H,hd,hd) f32). decode with S > 1 is
+    the chunked-prefill path: the chunk recurrence starts from ``state``
+    and, when ``valid_len`` (B,) is given, tokens past a row's valid
+    length contribute nothing to the carried state (their k and log-decay
+    are zeroed) and the shift carry is that row's last valid token."""
     b, s, d = x.shape
     hd = cfg.head_dim
     nh = d // hd
+    single = decode and s == 1 and valid_len is None
     prev = state["shift"] if state is not None else jnp.zeros(
         (b, 1, d), x.dtype)
-    xs = _token_shift(x, prev) if not decode else prev
+    xs = _token_shift(x, prev) if not single else prev
     mix = params["shift_mix"]
 
     def proj(w, i):
@@ -227,19 +268,40 @@ def rwkv6_mixer(params, x, cfg, state=None, decode=False):
             else jnp.zeros((b, nh, hd, hd), jnp.float32))
 
     rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
-    if decode:
+    if single:
         # single-token update: o = r.(S + u k^T v); S' = diag(w) S + k^T v
         kv = jnp.einsum("bhsd,bhse->bhde", kf, vf)  # s == 1
         out = (jnp.einsum("bhsd,bhde->bhse", rf, wkv0)
                + jnp.einsum("bhsd,bhde->bhse", rf * params["bonus_u"][None, :, None, :], kv))
         wkv1 = jnp.exp(w_log).transpose(0, 1, 3, 2) * wkv0 + kv
     else:
+        if valid_len is not None:
+            # ragged chunk: zero k and log-decay past each row's valid
+            # length — those tokens then add nothing to the WKV state and
+            # decay nothing (exp(0) = 1), freezing it at the last valid
+            # token; their own (garbage) outputs are ignored upstream
+            vm = (jnp.arange(s)[None] < valid_len[:, None])[:, None, :,
+                                                            None]
+            kf = jnp.where(vm, kf, 0.0)
+            w_log = jnp.where(vm, w_log, 0.0)
+        cl = cfg.chunk_len
+        if decode and s % min(cl, s) != 0:
+            # serve-prefill chunks are small and need not divide
+            # chunk_len: run them as one chunk. Training/teacher-forcing
+            # keeps the divisibility assert — a silent single-chunk
+            # fallback there would be an O(S^2) memory cliff.
+            cl = s
         out, wkv1 = _rwkv6_chunk(rf, kf, vf, w_log, params["bonus_u"],
-                                 wkv0, cfg.chunk_len)
+                                 wkv0, cl)
 
     out = out.transpose(0, 2, 1, 3).reshape(b, s, d).astype(x.dtype)
     out = rmsnorm(params["ln_out"], out) * g
-    new_state = {"shift": x[:, -1:], "wkv": wkv1}
+    if valid_len is None:
+        shift = x[:, -1:]
+    else:
+        idx = jnp.clip(valid_len - 1, 0, s - 1)
+        shift = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    new_state = {"shift": shift, "wkv": wkv1}
     return out @ params["w_o"], new_state
 
 
@@ -259,13 +321,19 @@ def init_rwkv_channel_mix(key, d_model, d_ff, dtype):
             "mix": jax.random.uniform(ks[2], (2, d_model)).astype(dtype)}
 
 
-def rwkv_channel_mix(params, x, state=None, decode=False):
+def rwkv_channel_mix(params, x, state=None, decode=False, valid_len=None):
     """RWKV channel mixer (squared-relu FFN with receptance gate)."""
     b, s, d = x.shape
+    single = decode and s == 1 and valid_len is None
     prev = state if state is not None else jnp.zeros((b, 1, d), x.dtype)
-    xs = _token_shift(x, prev) if not decode else prev
+    xs = _token_shift(x, prev) if not single else prev
     xk = x + (xs - x) * params["mix"][0]
     xr = x + (xs - x) * params["mix"][1]
     k = jnp.square(jax.nn.relu(xk @ params["w_k"]))
     out = jax.nn.sigmoid(xr @ params["w_r"]) * (k @ params["w_v"])
-    return out, x[:, -1:]
+    if valid_len is None:
+        shift = x[:, -1:]
+    else:
+        idx = jnp.clip(valid_len - 1, 0, s - 1)
+        shift = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    return out, shift

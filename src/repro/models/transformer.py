@@ -21,6 +21,7 @@ model code itself is mesh-agnostic.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 
@@ -149,8 +150,14 @@ def _rope_for(cfg, positions, kv_positions=None):
     return (cos, sin, kcos, ksin)
 
 
-def _apply_block(params, x, kind, cfg, cos_sin, cache, cache_index, decode):
-    """One (mixer + MLP) block with pre-norms. Returns (x, new_cache, aux)."""
+def _apply_block(params, x, kind, cfg, cos_sin, cache, cache_index, decode,
+                 valid_len=None):
+    """One (mixer + MLP) block with pre-norms. Returns (x, new_cache, aux).
+
+    valid_len (B,), decode only: per-row count of valid tokens in a
+    chunked-prefill step — tail positions past it are padding and must
+    not enter the KV cache or the recurrent states.
+    """
     aux = jnp.zeros((), jnp.float32)
     h = L.rmsnorm(params["ln1"], x, cfg.norm_eps)
     if kind in ATTN_KINDS:
@@ -159,13 +166,16 @@ def _apply_block(params, x, kind, cfg, cos_sin, cache, cache_index, decode):
             params["mixer"], h, num_heads=cfg.num_heads,
             num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
             cos_sin=cos_sin, causal=True, window=window,
-            softcap=cfg.attn_softcap, cache=cache, cache_index=cache_index)
+            softcap=cfg.attn_softcap, cache=cache, cache_index=cache_index,
+            valid_len=valid_len)
     elif kind == "rglru":
         out, new_cache = R.rglru_block(params["mixer"], h, cfg.ssm,
-                                       state=cache, decode=decode)
+                                       state=cache, decode=decode,
+                                       valid_len=valid_len)
     elif kind == "rwkv6":
         out, new_cache = R.rwkv6_mixer(params["mixer"], h, cfg.ssm,
-                                       state=cache, decode=decode)
+                                       state=cache, decode=decode,
+                                       valid_len=valid_len)
     else:
         raise ValueError(kind)
     x = x + constrain(out, "residual")
@@ -176,7 +186,8 @@ def _apply_block(params, x, kind, cfg, cos_sin, cache, cache_index, decode):
     elif kind == "rwkv6":
         out, shift = R.rwkv_channel_mix(
             params["mlp"], h,
-            state=cache.get("mlp_shift") if cache else None, decode=decode)
+            state=cache.get("mlp_shift") if cache else None, decode=decode,
+            valid_len=valid_len)
         if new_cache is not None:
             new_cache = dict(new_cache)
             new_cache["mlp_shift"] = shift
@@ -203,10 +214,12 @@ def _embed(params, cfg, batch):
 
 
 def lm_hidden(params, cfg, batch, cache=None, cache_index=None,
-              enc_out=None):
+              enc_out=None, valid_len=None):
     """Run the (decoder) stack. Returns (hidden (B,S,d), new_cache, aux).
 
     cache: pytree from ``init_cache`` for decode; None for teacher forcing.
+    valid_len (B,): per-row valid-token count for chunked prefill (decode
+    with S > 1); tail positions are padding (see ``serve_prefill``).
     """
     decode = cache is not None
     x = _embed(params, cfg, batch)
@@ -238,7 +251,8 @@ def lm_hidden(params, cfg, batch, cache=None, cache_index=None,
         for pos, kind in enumerate(pattern):
             c = block_caches[pos] if block_caches is not None else None
             x, nc, a = _apply_block(block_params[pos], x, kind, cfg, cos_sin,
-                                    c, cache_index, decode)
+                                    c, cache_index, decode,
+                                    valid_len=valid_len)
             if cross_p is not None:
                 x = _apply_cross(jax.tree.map(lambda a: a[pos], cross_p),
                                  x, cfg, enc_out)
@@ -277,7 +291,8 @@ def lm_hidden(params, cfg, batch, cache=None, cache_index=None,
     for i, kind in enumerate(tail):
         c = cache["tail"][i] if decode else None
         x, nc, a = _apply_block(params["tail"][i], x, kind, cfg, cos_sin,
-                                c, cache_index, decode)
+                                c, cache_index, decode,
+                                valid_len=valid_len)
         aux_total = aux_total + a
         if decode:
             new_cache.setdefault("tail", []).append(nc)
@@ -479,6 +494,43 @@ def serve_step(params, cfg, cache, tokens, cache_index, enc_out=None):
                                      cache_index=cache_index, enc_out=enc_out)
     C = classifier_matrix(params, cfg)
     logits = hidden[:, -1].astype(jnp.float32) @ C.astype(jnp.float32).T
+    if cfg.logit_softcap is not None:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits[:, :cfg.vocab_size], new_cache
+
+
+def serve_prefill(params, cfg, cache, tokens, cache_index, valid_len,
+                  enc_out=None):
+    """Chunked prefill: consume up to S tokens per row in ONE call.
+
+    tokens (B, S); cache_index (B,) per-row absolute write position;
+    valid_len (B,) in [1, S] — row b ingests ``tokens[b, :valid_len[b]]``
+    at positions ``cache_index[b] .. cache_index[b] + valid_len[b] - 1``
+    and everything past that is padding (never cached, never touching the
+    recurrent states). Returns (logits (B, V) at each row's LAST VALID
+    position, new cache) — exactly the logits ``valid_len`` one-token
+    ``serve_step`` calls would have ended on, so a scheduler can fuse
+    prompt ingestion for some rows with single-token decode for others
+    (valid_len == 1) in the same jit.
+    """
+    if cfg.moe is not None:
+        # serve must be drop-free: one-token decode never drops a token
+        # (<= 1 slot per expert), so the chunked path may not either —
+        # capacity e/k makes cap == tokens-per-row, the per-expert maximum
+        moe = cfg.moe
+        cap_free = moe.num_experts / moe.top_k
+        if moe.capacity_factor < cap_free:
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(moe, capacity_factor=cap_free))
+    b, s = tokens.shape
+    valid_len = jnp.asarray(valid_len, jnp.int32)
+    hidden, new_cache, _ = lm_hidden(
+        params, cfg, {"tokens": tokens}, cache=cache,
+        cache_index=cache_index, enc_out=enc_out, valid_len=valid_len)
+    last = jnp.clip(valid_len - 1, 0, s - 1)
+    h_last = jnp.take_along_axis(hidden, last[:, None, None], axis=1)[:, 0]
+    C = classifier_matrix(params, cfg)
+    logits = h_last.astype(jnp.float32) @ C.astype(jnp.float32).T
     if cfg.logit_softcap is not None:
         logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
     return logits[:, :cfg.vocab_size], new_cache

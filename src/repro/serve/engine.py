@@ -9,6 +9,17 @@ status vectors), independent of batch size; finished rows are fetched and
 retired in one additional transfer only on the steps where something
 finished.
 
+Prompt ingestion is **chunked** (``prefill_chunk``): while any slot is
+still inside its prompt, the engine swaps the single-token jit for a fused
+prefill+decode jit (``serve_prefill``) in which prefilling rows consume up
+to ``prefill_chunk`` prompt tokens per step — straight from the
+device-side prompt buffer — while decoding rows advance one token as
+usual. A 100-token prompt then costs ~100/chunk steps before its first
+generated token instead of 100, without stalling the rows that are already
+decoding and without any extra host traffic. Token streams are identical
+to one-token teacher forcing (greedy AND sampled: each row's PRNG stream
+is advanced per consumed token, not per step).
+
 Requests are admitted from the scheduler's queue whenever a slot is free —
 mid-flight, without disturbing the other rows (their cache slots and
 timelines are row-local). A finished row's KV rows are recycled
@@ -21,10 +32,12 @@ everything greedy, run to completion, return outputs in submission order.
 
 from __future__ import annotations
 
+import bisect
 import functools
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.models import transformer as T
 from repro.serve import scheduler as sched
@@ -48,6 +61,33 @@ def _engine_step(params, cache, state, enc_out, *, cfg, max_len):
     return cache, state
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "max_len", "chunk"),
+                   donate_argnums=(1, 2))
+def _engine_prefill_step(params, cache, state, enc_out, *, cfg, max_len,
+                         chunk):
+    """Piggyback chunked prefill: one fused jit in which rows still inside
+    their prompt ingest up to ``chunk`` prompt tokens (gathered from the
+    device-side prompt buffer — no extra host traffic) while decoding rows
+    advance their usual single token (valid_len == 1). Prompt ingestion
+    therefore neither stalls the decoding rows nor adds host syncs."""
+    p = state["cache_index"]
+    live = state["active"] & ~state["done"]
+    in_prompt = live & (p < state["prompt_len"])
+    n_tok = jnp.where(in_prompt,
+                      jnp.minimum(chunk, state["prompt_len"] - p),
+                      1).astype(jnp.int32)
+    pcap = state["prompt_buf"].shape[1]
+    idx = jnp.clip(p[:, None] + jnp.arange(chunk), 0, pcap - 1)
+    ptoks = jnp.take_along_axis(state["prompt_buf"], idx, axis=1)
+    toks = jnp.where(in_prompt[:, None], ptoks,
+                     jnp.broadcast_to(state["tok"], ptoks.shape))
+    logits, cache = T.serve_prefill(params, cfg, cache, toks, p, n_tok,
+                                    enc_out=enc_out)
+    state = sched.advance_slots(state, logits, max_len=max_len,
+                                n_tok=n_tok, chunk=chunk)
+    return cache, state
+
+
 class Engine:
     """Slot-based continuous-batching engine over ``serve_step``.
 
@@ -55,6 +95,11 @@ class Engine:
     batch_size: number of slots (concurrent requests per decode step).
     max_prompt_len / max_new_cap: capacities of the device-side prompt and
         output buffers (default: ``max_len``); they fix the jit signature.
+    prefill_chunk: prompt tokens a prefilling row ingests per engine step
+        (1 = classic one-token teacher forcing). While any slot is still
+        inside its prompt the engine runs the fused prefill+decode jit
+        (``serve_prefill``); once every slot is decoding it drops back to
+        the single-token jit, so steady-state decode pays nothing.
     enc_out: optional encoder output for encoder-decoder models, shared by
         all rows (use a fresh engine per enc_out batch; rows map to slots
         in submission order).
@@ -62,16 +107,21 @@ class Engine:
 
     def __init__(self, cfg, params, *, max_len: int = 512,
                  batch_size: int = 8, max_prompt_len: int | None = None,
-                 max_new_cap: int | None = None, enc_out=None):
+                 max_new_cap: int | None = None, prefill_chunk: int = 1,
+                 enc_out=None):
         if enc_out is not None and enc_out.shape[0] != batch_size:
             raise ValueError(
                 f"enc_out has {enc_out.shape[0]} rows but the engine has "
                 f"{batch_size} slots; slot i reads encoder row i, so they "
                 f"must match (size batch_size to the encoder batch)")
+        if prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.batch_size = batch_size
+        self.prefill_chunk = int(prefill_chunk)
         self.enc_out = enc_out
         self.scheduler = sched.Scheduler(
             batch_size, max_prompt_len or max_len, max_new_cap or max_len,
@@ -81,6 +131,14 @@ class Engine:
                                       self.scheduler.max_new_cap)
         self.cache = T.init_cache(cfg, batch_size, max_len)
         self.step_count = 0
+        # host mirror of each slot's unconsumed prompt tokens; prefill
+        # progress is host-deterministic (stopping can only hit generated
+        # tokens), so no device sync is needed to pick the step flavor
+        self._prefill_left = [0] * batch_size
+        # (step_count, wall-clock) sync log: maps device step indices to
+        # times, so a row's first-token step converts to a true TTFT at
+        # retirement instead of being stamped at the next host sync
+        self._times = [(0, time.time())]
         # with enc_out set, request i must land in slot i to meet its
         # encoder row — only guaranteed while no slot has been recycled
         self._enc_submits = 0
@@ -92,10 +150,14 @@ class Engine:
                eos_token: int | None = None) -> int:
         """Queue a request; returns its request id. The request starts
         decoding at the next ``step()`` with a free slot."""
-        if len(prompt) + max_new_tokens > self.max_len:
+        # the final sampled token is never fed back, so the last cache
+        # position written is len(prompt) + max_new_tokens - 2: a request
+        # with prompt + max_new == max_len + 1 still fits exactly
+        if len(prompt) + max_new_tokens - 1 > self.max_len:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new_tokens "
-                f"({max_new_tokens}) exceeds the cache length "
+                f"({max_new_tokens}) needs {len(prompt) + max_new_tokens - 1} "
+                f"cache positions, exceeding the cache length "
                 f"(max_len={self.max_len})")
         slot = None
         if self.enc_out is not None:
@@ -121,6 +183,11 @@ class Engine:
     def step(self, substeps: int = 1):
         """Admit, run ``substeps`` jitted decode steps, sync once.
 
+        Each substep runs the fused prefill+decode jit while any slot is
+        still inside its prompt (ingesting up to ``prefill_chunk`` prompt
+        tokens per prefilling row), and the single-token jit otherwise —
+        chosen from host-side bookkeeping, never a device sync.
+
         Returns the list of :class:`~repro.serve.scheduler.Completion`
         finished by this call. Host<->device traffic: the admission writes
         (only when something was queued), ONE status ``device_get`` — and
@@ -128,45 +195,97 @@ class Engine:
         """
         if substeps < 1:
             raise ValueError(f"substeps must be >= 1, got {substeps}")
-        self.state, self.cache, _ = self.scheduler.admit(
+        self._times.append((self.step_count, time.time()))
+        self.state, self.cache, rows = self.scheduler.admit(
             self.state, self.cache)
+        for i in rows:
+            self._prefill_left[i] = len(self.scheduler.slots[i].prompt)
+            self.scheduler.slots[i].admit_step = self.step_count
         for _ in range(substeps):
-            self.cache, self.state = _engine_step(
-                self.params, self.cache, self.state, self.enc_out,
-                cfg=self.cfg, max_len=self.max_len)
+            if self.prefill_chunk > 1 and any(
+                    left > 1 for left in self._prefill_left):
+                self.cache, self.state = _engine_prefill_step(
+                    self.params, self.cache, self.state, self.enc_out,
+                    cfg=self.cfg, max_len=self.max_len,
+                    chunk=self.prefill_chunk)
+                used = self.prefill_chunk
+            else:
+                self.cache, self.state = _engine_step(
+                    self.params, self.cache, self.state, self.enc_out,
+                    cfg=self.cfg, max_len=self.max_len)
+                used = 1
+            for i, req in enumerate(self.scheduler.slots):
+                if req is not None and self._prefill_left[i] > 0:
+                    self._prefill_left[i] -= min(used,
+                                                 self._prefill_left[i])
             self.step_count += 1
+        self._times.append((self.step_count, time.time()))
+        self._prune_times()
         return self._sync()
 
-    def _sync(self):
-        """The single per-step host sync: pull the status vectors, record
-        first-token times, retire finished rows."""
-        done, active, n_out = jax.device_get(
-            (self.state["done"], self.state["active"],
-             self.state["n_out"]))
-        now = time.time()
+    def _step_time(self, s: int) -> float:
+        """Wall-clock estimate for device step ``s`` by linear
+        interpolation between the enclosing entries of the sync log."""
+        times = self._times
+        k = bisect.bisect_left(times, (s, float("-inf")))
+        if k >= len(times):
+            return times[-1][1]
+        s1, t1 = times[k]
+        if s1 == s or k == 0:
+            return t1
+        s0, t0 = times[k - 1]
+        if s1 == s0:
+            return t1
+        return t0 + (t1 - t0) * (s - s0) / (s1 - s0)
+
+    def _prune_times(self):
+        """Drop sync-log entries no retirement can reference anymore:
+        every live row's first token lands at or after its admission."""
+        floor = self.step_count
         for i, req in enumerate(self.scheduler.slots):
-            if (req is not None and req.first_token_time is None
-                    and n_out[i] > 0):
-                req.first_token_time = now
+            if req is not None and req.admit_step >= 0:
+                floor = min(floor, req.admit_step)
+        t = self._times
+        k = 0
+        while k + 1 < len(t) and t[k + 1][0] <= floor:
+            k += 1
+        del t[:k]
+
+    def _sync(self):
+        """The single per-step host sync: pull the status vectors, then
+        retire finished rows (attributing each one's TTFT from the device
+        step index its first token was generated at)."""
+        done, active = jax.device_get(
+            (self.state["done"], self.state["active"]))
         rows = self.scheduler.finished_rows(done, active)
         if not rows:
             return []
-        out_host, n_host, fin_host = jax.device_get(
+        out_host, n_host, fin_host, gen_host = jax.device_get(
             (self.state["out_buf"], self.state["n_out"],
-             self.state["finish"]))
+             self.state["finish"], self.state["gen_step"]))
+        for i in rows:
+            if int(gen_host[i]) >= 0:
+                # gen_step is the 0-based index of the advance_slots call
+                # that produced the token; it exists once that call ends
+                self.scheduler.slots[i].first_token_time = self._step_time(
+                    int(gen_host[i]) + 1)
+            self._prefill_left[i] = 0
         self.state, comps = self.scheduler.retire(
             self.state, rows, out_host, n_host, fin_host)
         return comps
 
     def run(self, substeps: int = 1, max_steps: int | None = None):
         """Drive ``step()`` until all submitted work is finished; returns
-        {rid: Completion}."""
+        {rid: Completion}. ``max_steps`` bounds the total number of decode
+        steps: the final call's substeps are clamped to the remaining
+        budget, so ``max_steps=4, substeps=8`` runs exactly 4 steps."""
         out = {}
         limit = max_steps if max_steps is not None else 10_000_000
         while self.has_work() and limit > 0:
-            for c in self.step(substeps=substeps):
+            n = min(substeps, limit)
+            for c in self.step(substeps=n):
                 out[c.rid] = c
-            limit -= substeps
+            limit -= n
         return out
 
     # -- legacy API ----------------------------------------------------

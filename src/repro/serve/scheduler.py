@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import heapq
 import itertools
 import time
 from typing import List, Optional
@@ -48,6 +49,7 @@ class Request:
     rid: int = -1                       # assigned by the scheduler
     submit_time: float = 0.0
     first_token_time: Optional[float] = None
+    admit_step: int = -1                # engine step_count at admission
 
 
 @dataclasses.dataclass
@@ -82,29 +84,65 @@ def init_state(batch_size: int, max_prompt_len: int, max_new_cap: int):
         "rng": jnp.stack([jax.random.PRNGKey(0)] * b),
         # sticky per-row finish reason: 0 none, 1 eos, 2 length, 3 cache
         "finish": jnp.zeros((b,), jnp.int32),
+        # device step index (value of "t") at which the row's first token
+        # was generated; -1 until then. The host converts it to wall time
+        # at retirement, so TTFT stays honest under --sync-every > 1.
+        "gen_step": jnp.full((b,), -1, jnp.int32),
+        # global device step counter — one per advance_slots call, aligned
+        # with the engine's host-side step_count. NOT per-row: admission
+        # must never reset it (the scheduler template excludes it).
+        "t": jnp.zeros((), jnp.int32),
     }
 
 
-def advance_slots(state, logits, *, max_len: int):
+def advance_slots(state, logits, *, max_len: int, n_tok=None,
+                  chunk: int = 1):
     """One slot-state transition given this step's (B, V) logits.
 
     Pure function of (state, logits) — the engine fuses it with
-    ``serve_step`` into a single jit. Per row: sample a token, decide
-    whether it is teacher-forced prompt or generated output, record it,
-    update EOS/length/capacity stop flags, and advance ``cache_index``
-    only for rows still running.
+    ``serve_step``/``serve_prefill`` into a single jit. Per row: sample a
+    token, decide whether it is teacher-forced prompt or generated output,
+    record it, update EOS/length/capacity stop flags, and advance
+    ``cache_index`` only for rows still running.
+
+    n_tok (B,): tokens each row consumed this step (chunked prefill);
+    defaults to one. ``chunk`` is the static upper bound of ``n_tok`` —
+    each row's PRNG stream is advanced by exactly ``n_tok`` splits and the
+    sample is drawn with the key the ``n_tok``-th one-token step would
+    have used, so a chunked prefill replays the identical token sequence,
+    greedy or sampled.
     """
     b, m = state["out_buf"].shape
     rows = jnp.arange(b)
     live = state["active"] & ~state["done"]
+    if n_tok is None:
+        n_tok = jnp.ones((b,), jnp.int32)
 
-    rng_next = jax.vmap(lambda k: jax.random.split(k, 2))(state["rng"])
-    sampled = S.sample_tokens(logits, rng_next[:, 1],
+    if chunk == 1:
+        rng_next = jax.vmap(lambda k: jax.random.split(k, 2))(state["rng"])
+        sample_key = rng_next[:, 1]
+        rng_carry = rng_next[:, 0]
+    else:
+        carry, keys, carries = state["rng"], [], [state["rng"]]
+        for _ in range(chunk):      # static unroll: chunk is a jit const
+            nxt = jax.vmap(lambda k: jax.random.split(k, 2))(carry)
+            keys.append(nxt[:, 1])
+            carry = nxt[:, 0]
+            carries.append(carry)
+        keys = jnp.stack(keys, 1)                       # (B, chunk, 2)
+        carries = jnp.stack(carries, 1)                 # (B, chunk+1, 2)
+        sel = jnp.clip(n_tok - 1, 0, chunk - 1)
+        sample_key = jnp.take_along_axis(
+            keys, sel[:, None, None], axis=1)[:, 0]
+        rng_carry = jnp.take_along_axis(
+            carries, jnp.clip(n_tok, 0, chunk)[:, None, None],
+            axis=1)[:, 0]
+    sampled = S.sample_tokens(logits, sample_key,
                               state["temperature"], state["top_k"],
                               state["top_p"])
 
     cur_pos = state["cache_index"]
-    nxt_pos = cur_pos + 1
+    nxt_pos = cur_pos + n_tok
     in_prompt = nxt_pos < state["prompt_len"]
     p_cap = state["prompt_buf"].shape[1]
     prompt_next = jnp.take_along_axis(
@@ -136,11 +174,14 @@ def advance_slots(state, logits, *, max_len: int):
         done=done,
         out_buf=out_buf,
         n_out=n_out,
-        rng=rng_next[:, 0],
+        rng=rng_carry,
         finish=jnp.where(
             state["finish"] > 0, state["finish"],
             jnp.where(hit_eos, 1, jnp.where(hit_len, 2,
                       jnp.where(hit_cap, 3, 0)))),
+        gen_step=jnp.where(gen & (state["gen_step"] < 0), state["t"],
+                           state["gen_step"]),
+        t=state["t"] + 1,
     )
     return new_state
 
@@ -183,10 +224,13 @@ class Scheduler:
         self.slots: List[Optional[Request]] = [None] * batch_size
         self._rid = itertools.count()
         # admission template: the init_state schema itself, so a field
-        # added there is automatically reset on every slot recycle
+        # added there is automatically reset on every slot recycle — minus
+        # "t", the global device step counter, which admission must not
+        # rewind (it is the clock gen_step/TTFT attribution is built on)
         self._template = jax.tree.map(
             np.asarray, init_state(batch_size, max_prompt_len,
                                    max_new_cap))
+        self._template.pop("t")
 
     # -- queue ---------------------------------------------------------
 
@@ -223,21 +267,39 @@ class Scheduler:
     # -- admission -----------------------------------------------------
 
     def admit(self, state, cache):
-        """Fill free slots from the queue (a slot-pinned request only ever
-        enters its own slot). Returns (state, cache, rows): ONE jitted
-        device call (batch-shaped mask update + cache-row reset)
-        regardless of how many requests are admitted."""
+        """Fill free slots from the queue in ONE FIFO pass (a slot-pinned
+        request only ever enters its own slot and, while that slot is
+        busy, waits without blocking later requests). Returns
+        (state, cache, rows): ONE jitted device call (batch-shaped mask
+        update + cache-row reset) regardless of how many requests are
+        admitted. O(queue + slots·log slots), no mutation of the deque
+        mid-iteration."""
         rows, reqs = [], []
-        for i in range(self.batch_size):
-            if self.slots[i] is not None:
-                continue
-            for r in self.queue:
-                if r.slot is None or r.slot == i:
-                    self.queue.remove(r)
-                    self.slots[i] = r
-                    rows.append(i)
-                    reqs.append(r)
-                    break
+        free = [i for i in range(self.batch_size) if self.slots[i] is None]
+        heapq.heapify(free)
+        free_set = set(free)
+        kept: collections.deque = collections.deque()
+        while self.queue:
+            if not free_set:        # nothing can admit: keep order, stop
+                kept.extend(self.queue)
+                self.queue.clear()
+                break
+            r = self.queue.popleft()
+            if r.slot is not None:
+                if r.slot not in free_set:
+                    kept.append(r)
+                    continue
+                i = r.slot
+                free_set.remove(i)
+            else:
+                i = heapq.heappop(free)     # lowest free index, FIFO fill
+                while i not in free_set:    # lazily skip pinned takeovers
+                    i = heapq.heappop(free)
+                free_set.remove(i)
+            self.slots[i] = r
+            rows.append(i)
+            reqs.append(r)
+        self.queue = kept
         if not rows:
             return state, cache, rows
 

@@ -98,33 +98,44 @@ def score_fn(cfg, *, normalize: str = "sum", impl: str | None = None,
 
 
 @functools.lru_cache(maxsize=32)
-def _jitted_scorer(cfg, normalize, impl, per_token, cce_cfg):
+def _jitted_scorer(cfg, normalize, impl, per_token, mesh, vocab_axis,
+                   token_axes, cce_cfg):
+    # EVERY argument that alters the lowering must be part of this cache
+    # key: a key that omitted mesh/vocab_axis/token_axes would silently
+    # hand back a scorer compiled for a different (or no) mesh.
     return jax.jit(score_fn(cfg, normalize=normalize, impl=impl,
-                            per_token=per_token, cce_cfg=cce_cfg))
+                            per_token=per_token, mesh=mesh,
+                            vocab_axis=vocab_axis, token_axes=token_axes,
+                            cce_cfg=cce_cfg))
 
 
 def score(params, cfg, prompt, completions, *, normalize: str = "sum",
           impl: str | None = None, pad_to: int | None = None,
+          mesh=None, vocab_axis: str = "model", token_axes=("data",),
           cce_cfg=None):
     """log p(completion | prompt) for each candidate, CCE-backed.
 
     Returns a list of floats (one per completion), computed without ever
     materializing the (B, S, V) logit matrix. ``pad_to`` pads the batch to
-    a fixed length so repeated calls reuse one jit trace.
+    a fixed length so repeated calls reuse one jit trace. ``mesh`` (with
+    ``vocab_axis``/``token_axes``) runs the scorer under the
+    vocab-parallel combine, exactly as in training.
     """
     tokens, labels = build_scoring_batch(prompt, completions, pad_to=pad_to)
     fn = _jitted_scorer(cfg, normalize, impl or cfg.loss_impl, False,
-                        cce_cfg)
+                        mesh, vocab_axis, tuple(token_axes), cce_cfg)
     return [float(v) for v in fn(params, tokens, labels)]
 
 
 def token_logprobs(params, cfg, prompt, completions, *,
                    impl: str | None = None, pad_to: int | None = None,
-                   cce_cfg=None):
+                   mesh=None, vocab_axis: str = "model",
+                   token_axes=("data",), cce_cfg=None):
     """Per-token log-probs: list (per candidate) of lists (per completion
     token), same CCE lowering as :func:`score`."""
     tokens, labels = build_scoring_batch(prompt, completions, pad_to=pad_to)
-    fn = _jitted_scorer(cfg, "sum", impl or cfg.loss_impl, True, cce_cfg)
+    fn = _jitted_scorer(cfg, "sum", impl or cfg.loss_impl, True,
+                        mesh, vocab_axis, tuple(token_axes), cce_cfg)
     lp = np.asarray(fn(params, tokens, labels))
     out = []
     for i, c in enumerate(completions):
@@ -135,8 +146,10 @@ def token_logprobs(params, cfg, prompt, completions, *,
 
 def rank(params, cfg, prompt, completions, *, normalize: str = "tokens",
          impl: str | None = None, pad_to: int | None = None,
+         mesh=None, vocab_axis: str = "model", token_axes=("data",),
          cce_cfg=None):
     """Candidate indices best-first by (length-normalized) log-prob."""
     s = score(params, cfg, prompt, completions, normalize=normalize,
-              impl=impl, pad_to=pad_to, cce_cfg=cce_cfg)
+              impl=impl, pad_to=pad_to, mesh=mesh, vocab_axis=vocab_axis,
+              token_axes=token_axes, cce_cfg=cce_cfg)
     return sorted(range(len(s)), key=lambda i: -s[i]), s

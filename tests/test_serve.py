@@ -14,6 +14,7 @@ from repro.analysis import hlo as hlo_an
 from repro.models import transformer as T
 from repro.serve import Engine, SamplingParams, scoring
 from repro.serve import sampling as sampling_mod
+from repro.serve import scheduler as sched_mod
 
 
 def _cfg(arch="llama3_2_3b", **over):
@@ -62,6 +63,88 @@ def test_continuous_matches_sequential_other_mixers(arch):
     ref = [Engine(cfg, params, max_len=48, batch_size=1).generate(
         [p], 5)[0] for p in prompts]
     assert out == ref
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: token-identical to one-token teacher forcing.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["llama3_2_3b", "gemma2_2b",
+                                  "recurrentgemma_9b", "rwkv6_3b",
+                                  "olmoe_1b_7b"])
+def test_chunked_prefill_matches_one_token(arch):
+    """prefill_chunk > 1 (ragged final chunks included) must replay the
+    exact token streams of one-token teacher forcing for every mixer
+    family: dense attention, ring-buffer SWA, RG-LRU, RWKV-6, and MoE
+    (whose serve path must be drop-free)."""
+    cfg = _cfg(arch)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    ref = [Engine(cfg, params, max_len=48, batch_size=1).generate(
+        [p], 5)[0] for p in PROMPTS]
+    for chunk in (3, 8):    # 3: multi-chunk + ragged tail; 8: one bite
+        out = Engine(cfg, params, max_len=48, batch_size=2,
+                     prefill_chunk=chunk).generate(PROMPTS, 5)
+        assert out == ref, f"chunk={chunk}"
+
+
+def test_chunked_prefill_encdec_matches_one_token():
+    """Cross-attention rows prefill in chunks too (every chunk position
+    attends the full encoder output)."""
+    cfg = _cfg("seamless_m4t_medium")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    enc = jax.random.normal(jax.random.PRNGKey(1), (2, 4, cfg.d_model)) * 0.5
+    prompts = [[1, 2, 3, 4, 5], [3, 4]]
+    ref = Engine(cfg, params, max_len=32, batch_size=2,
+                 enc_out=enc).generate(prompts, 3)
+    out = Engine(cfg, params, max_len=32, batch_size=2, prefill_chunk=4,
+                 enc_out=enc).generate(prompts, 3)
+    assert out == ref
+
+
+def test_chunked_prefill_sampled_streams_identical(model):
+    """Each row's PRNG stream advances per consumed token, not per engine
+    step — so chunked prefill replays SAMPLED tokens too."""
+    cfg, params = model
+    sp = SamplingParams(temperature=0.7, top_k=13, top_p=0.9, seed=5)
+    a = Engine(cfg, params, max_len=64, batch_size=2).generate(
+        PROMPTS, 6, sampling=sp)
+    b = Engine(cfg, params, max_len=64, batch_size=2,
+               prefill_chunk=4).generate(PROMPTS, 6, sampling=sp)
+    assert a == b
+
+
+def test_chunked_prefill_mid_flight_admission(model):
+    """A request admitted while other rows are decoding prefills in
+    chunks without disturbing them — everyone still produces their
+    sequential-reference tokens."""
+    cfg, params = model
+    eng = Engine(cfg, params, max_len=64, batch_size=2, prefill_chunk=4)
+    r0 = eng.submit(PROMPTS[0], max_new_tokens=6)
+    comps = {}
+    for c in eng.step():            # r0 starts prefilling/decoding alone
+        comps[c.rid] = c
+    r3 = eng.submit(PROMPTS[3], max_new_tokens=6)   # joins mid-flight
+    comps.update(eng.run())
+    ref = _sequential(cfg, params, [PROMPTS[0], PROMPTS[3]], 6)
+    assert [comps[r0].tokens, comps[r3].tokens] == ref
+
+
+def test_chunked_prefill_one_host_transfer_per_step(model, monkeypatch):
+    """Piggyback prefill must not add host syncs: still exactly one
+    device_get per step (2 when something finishes)."""
+    cfg, params = model
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get",
+                        lambda x: calls.append(1) or real(x))
+    eng = Engine(cfg, params, max_len=64, batch_size=2, prefill_chunk=4)
+    for p in PROMPTS[:2]:
+        eng.submit(p, max_new_tokens=4)
+    calls.clear()
+    while eng.has_work():
+        before = len(calls)
+        done = eng.step()
+        assert len(calls) - before == (2 if done else 1)
 
 
 def test_mid_flight_admission(model):
@@ -239,6 +322,29 @@ def test_scoring_impl_agreement(model):
     np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
 
 
+def test_scoring_sharded_matches_local(model):
+    """score(mesh=...) runs the scorer under the vocab-parallel combine
+    and must agree with the local path — and must NOT be conflated with
+    the meshless jit by the scorer cache (the cache key includes
+    mesh/vocab_axis/token_axes, so interleaved calls stay correct)."""
+    from jax.sharding import Mesh
+
+    cfg, params = model
+    prompt = [1, 2, 3]
+    comps = [[4, 5], [6], [7, 8, 9]]
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    local = scoring.score(params, cfg, prompt, comps, impl="cce_jax")
+    shard = scoring.score(params, cfg, prompt, comps, impl="cce_jax",
+                          mesh=mesh)
+    np.testing.assert_allclose(shard, local, rtol=1e-5, atol=1e-5)
+    again = scoring.score(params, cfg, prompt, comps, impl="cce_jax")
+    np.testing.assert_allclose(again, local, rtol=0)
+    per_tok = scoring.token_logprobs(params, cfg, prompt, comps, mesh=mesh)
+    np.testing.assert_allclose([sum(t) for t in per_tok], local,
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_scoring_hlo_has_no_batched_vocab_buffer():
     """The jitted scorer's optimized HLO must contain no (N, V)-class
     array: vocab is enlarged so a kernel tile cannot coincide with N×V
@@ -282,9 +388,81 @@ def test_submit_validation(model):
     cfg, params = model
     eng = Engine(cfg, params, max_len=32, batch_size=1)
     with pytest.raises(ValueError):
-        eng.submit(list(range(30)), max_new_tokens=10)  # prompt+new>max_len
+        eng.submit(list(range(30)), max_new_tokens=10)  # needs 39 positions
     with pytest.raises(ValueError):
         eng.submit([1], max_new_tokens=0)
+    with pytest.raises(ValueError):
+        Engine(cfg, params, max_len=32, batch_size=1, prefill_chunk=0)
+
+
+def test_submit_exactly_fitting_request_completes(model):
+    """The last sampled token is never fed back, so prompt + max_new can
+    exceed max_len by one: such a request must be accepted and finish
+    with "length" — not be refused, and not die as "cache_full"."""
+    cfg, params = model
+    eng = Engine(cfg, params, max_len=32, batch_size=1)
+    rid = eng.submit(list(range(1, 31)), max_new_tokens=3)  # 30+3-1 == 32
+    comp = eng.run()[rid]
+    assert comp.finish_reason == "length"
+    assert len(comp.tokens) == 3
+    with pytest.raises(ValueError):     # one past the exact fit
+        eng.submit(list(range(1, 31)), max_new_tokens=4)
+
+
+def test_run_max_steps_clamps_final_substeps(model):
+    """run(max_steps=4, substeps=8) must execute exactly 4 decode steps,
+    not one unconditional 8-substep batch."""
+    cfg, params = model
+    eng = Engine(cfg, params, max_len=64, batch_size=1)
+    eng.submit(PROMPTS[0], max_new_tokens=16)
+    eng.run(substeps=8, max_steps=4)
+    assert eng.step_count == 4
+
+
+def test_ttft_attributed_to_first_token_step(model):
+    """Under substeps > 1, TTFT comes from the device-side step index of
+    each row's first generated token — rows finishing their prompt at
+    different steps inside ONE sync window get distinct, ordered TTFTs
+    (the old host-sync stamping gave them all the same time)."""
+    cfg, params = model
+    eng = Engine(cfg, params, max_len=64, batch_size=2)
+    r_short = eng.submit([1], max_new_tokens=4)
+    r_long = eng.submit(list(range(1, 13)), max_new_tokens=4)
+    comps = eng.run(substeps=32)        # whole workload, single sync
+    ts, tl = comps[r_short].first_token_time, comps[r_long].first_token_time
+    assert ts is not None and tl is not None
+    assert ts < tl                      # step 1 vs step 12, same window
+    assert comps[r_long].finish_time >= tl
+
+
+def test_admission_is_single_pass_fifo(model):
+    """Admission fills free slots strictly in submission order (earliest
+    request -> lowest free slot); the overflow stays queued in order."""
+    cfg, params = model
+    eng = Engine(cfg, params, max_len=64, batch_size=2)
+    sub = lambda: eng.submit([1, 2], max_new_tokens=4)
+    r0, r1, r2, r3 = sub(), sub(), sub(), sub()
+    sch = eng.scheduler
+    eng.step()
+    assert [sch.slots[0].rid, sch.slots[1].rid] == [r0, r1]
+    assert [r.rid for r in sch.queue] == [r2, r3]
+
+
+def test_admission_pinned_request_does_not_block_later(model):
+    """A request pinned to a busy slot waits without blocking a later
+    unpinned request, and keeps its queue position."""
+    cfg, params = model
+    eng = Engine(cfg, params, max_len=64, batch_size=2)
+    sch = eng.scheduler
+    ra = eng.submit([1, 2], max_new_tokens=4)
+    eng.step()
+    assert sch.slots[0].rid == ra and sch.slots[1] is None
+    rp = sch.submit(sched_mod.Request(prompt=[3], max_new_tokens=2,
+                                      slot=0))    # pinned to busy slot 0
+    ru = eng.submit([4, 5], max_new_tokens=2)
+    eng.state, eng.cache, rows = sch.admit(eng.state, eng.cache)
+    assert rows == [1] and sch.slots[1].rid == ru
+    assert [r.rid for r in sch.queue] == [rp]     # still first in line
 
 
 def test_enc_out_blocks_slot_recycling(model):
