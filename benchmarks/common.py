@@ -10,10 +10,39 @@ Two measurement modes (this container is CPU-only; TPU is the target):
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Machine-readable perf-trajectory rows (benchmarks/run.py --json). Each row
+# is one measured kernel/loss variant; future PRs regress against the
+# recorded file (CI uploads BENCH_kernels.json as a workflow artifact).
+# ---------------------------------------------------------------------------
+
+_JSON_ROWS: list[dict] = []
+
+
+def record(bench: str, config: str, *, flops: float | None = None,
+           wall_s: float | None = None,
+           memory_class: str | None = None, **extra) -> None:
+    """Append one ``{bench, config, flops, wall_s, memory_class}`` row to
+    the in-process perf log (written out by ``run.py --json``)."""
+    _JSON_ROWS.append({"bench": bench, "config": config, "flops": flops,
+                       "wall_s": wall_s, "memory_class": memory_class,
+                       **extra})
+
+
+def json_rows() -> list[dict]:
+    return list(_JSON_ROWS)
+
+
+def write_json(path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(_JSON_ROWS, f, indent=1, default=float)
+        f.write("\n")
 
 
 def wall_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:

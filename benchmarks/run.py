@@ -2,15 +2,29 @@
 
 Prints ``name,us_per_call,derived`` CSV rows. Roofline/dry-run numbers live
 in results/dryrun (produced by repro.launch.dryrun) and EXPERIMENTS.md.
+
+``--json PATH`` additionally writes the perf-trajectory rows the modules
+recorded via :func:`benchmarks.common.record` — ``{bench, config, flops,
+wall_s, memory_class}`` per measured kernel/loss variant — so future PRs
+can regress against a recorded baseline (CI uploads ``BENCH_kernels.json``
+as a workflow artifact). ``--only a,b`` restricts to named modules.
 """
 
+import argparse
 import sys
 import time
 import traceback
 
 
 def main() -> None:
-    from benchmarks import (fig1_model_memory, fig3_softmax_sparsity,
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write recorded perf rows (e.g. BENCH_kernels.json)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names (default: all)")
+    args = ap.parse_args()
+
+    from benchmarks import (common, fig1_model_memory, fig3_softmax_sparsity,
                             fig4_convergence, loss_zoo_memory,
                             serve_throughput, table1_loss_memory,
                             tableA1_ignored_tokens,
@@ -26,6 +40,13 @@ def main() -> None:
         ("tableA3", tableA3_more_models),
         ("serve", serve_throughput),
     ]
+    if args.only:
+        wanted = args.only.split(",")
+        unknown = set(wanted) - {n for n, _ in modules}
+        if unknown:
+            sys.exit(f"unknown benchmark(s) {sorted(unknown)}; "
+                     f"available: {[n for n, _ in modules]}")
+        modules = [(n, m) for n, m in modules if n in wanted]
     print("name,us_per_call,derived")
     failed = []
     for name, mod in modules:
@@ -37,6 +58,10 @@ def main() -> None:
         except Exception:
             failed.append(name)
             traceback.print_exc()
+    if args.json:
+        common.write_json(args.json)
+        print(f"wrote {len(common.json_rows())} perf rows to {args.json}",
+              file=sys.stderr)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -17,7 +17,11 @@ from repro.kernels import ops as kernel_ops
 class PallasCCE(Backend):
     """The paper's method: fused Pallas TPU kernels (interpret mode on
     CPU), gradient filtering + vocab sorting, custom VJP over arbitrary
-    cotangents."""
+    cotangents. The backward defaults to the single-pass fused kernel with
+    forward-emitted block-sparsity maps (``CCEConfig.bwd`` /
+    ``filter_stats`` — DESIGN.md §7); ``bwd="two_pass"`` restores the
+    classic dE-then-dC pair (required for the Kahan/bf16 accumulator
+    ablations)."""
     description = "Pallas TPU kernels (paper's CCE; interpret on CPU)"
     memory_class = "O(N·D + V·D)"
     supports_custom_cotangents = True

@@ -13,6 +13,11 @@ NLL is only one member of the loss family built on the ``lse_and_pick``
 primitive: see :mod:`repro.losses` for the registry of memory-efficient
 vocabulary losses (z-loss, focal, label smoothing, per-token weighting,
 sequence scoring) — all of which inherit CCE's O(N·D + V·D) memory class.
+
+Kernel-level knobs (block sizes, gradient filtering, the fused single-pass
+backward and its forward-emitted block-sparsity map — DESIGN.md §7) travel
+in :class:`CCEConfig` (re-exported here from ``repro.kernels.ops``); every
+entry point below and :func:`repro.core.cross_entropy` accept ``cfg=``.
 """
 
 from __future__ import annotations

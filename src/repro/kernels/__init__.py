@@ -13,6 +13,7 @@ from repro.kernels.ops import (  # noqa: F401
     linear_cross_entropy_pallas,
     lse_and_pick_pallas,
     lse_pick_sum_pallas,
+    vmem_working_set,
 )
 from repro.kernels.indexed_matmul import indexed_matmul_pallas  # noqa: F401
 from repro.kernels.ref import IGNORE_INDEX  # noqa: F401

@@ -10,26 +10,42 @@ in the paper.
 
 TPU adaptation (DESIGN.md §2): the paper's single Triton kernel accumulates
 ``dE`` and ``dC`` concurrently with global-memory atomics. TPUs have no such
-atomics; instead we run **two sequential-grid passes** whose accumulation
-axis is innermost:
+atomics; instead two strategies are provided (``CCEConfig.bwd``):
 
-  * ``dE`` pass: grid (n, v), v innermost — dE tile accumulates in VMEM
-    scratch over vocab blocks, one HBM write per n-block.
-  * ``dC`` pass: grid (v, n), n innermost — symmetric.
+  * **two_pass** — two sequential-grid passes whose accumulation axis is
+    innermost: the ``dE`` pass, grid (n, v) with v innermost, accumulates
+    the dE tile in VMEM scratch over vocab blocks (one HBM write per
+    n-block); the ``dC`` pass, grid (v, n), is symmetric. Each pass
+    recomputes the logit tile, so the (N, V, D) matmul is paid twice.
+  * **fused** (DESIGN.md §7) — ONE pass, grid (n, v) with v innermost,
+    recomputes each logit tile once and feeds both outgoing matmuls: dE
+    accumulates in VMEM scratch exactly as in the dE pass, while dC
+    accumulates across the (sequential) n axis directly in its HBM-backed
+    output block via read-modify-write — Pallas output windows are
+    readable, so a revisited (v) block carries the partial sum. The dC
+    output is f32 (cast by the wrapper) so the accumulation is bit-identical
+    to the two-pass VMEM scratch: same addends, same order, same dtype.
 
-Both passes implement the paper's two throughput tricks:
+All variants implement the paper's two throughput tricks:
 
   * **Gradient filtering**: a block is skipped (``@pl.when``) when every
     entry of the pre-upstream-scaled gradient ``|S - onehot|`` is below
     ``eps`` (default 2^-12, the smallest non-truncated bf16 value — paper
     §4.3). The label's one-hot keeps blocks containing a label from ever
     being filtered. ``filter=False`` reproduces CCE-Kahan-FullC / -FullE.
+    The statistic either comes from recomputing the tile (paper Alg. 4,
+    ``filter_stats="recompute"`` — the recompute matmul is then paid even
+    on dead blocks) or from the forward-emitted live-block ``bitmap``
+    (``filter_stats="fwd_bitmap"``, DESIGN.md §7 — dead blocks skip the
+    recompute itself).
   * **Vocabulary sorting** is applied by the caller (ops.py) by permuting C
-    so hot vocab entries share blocks; the kernels are order-agnostic.
+    so hot vocab entries share blocks; the kernels are order-agnostic (the
+    caller also re-blocks the bitmap's v axis under the permutation).
 
 Accumulation is f32 in VMEM by default (strictly tighter than the paper's
 bf16+Kahan in HBM); ``accum="bf16_kahan"`` reproduces the paper's
-compensated-summation variant for the ablation benchmarks.
+compensated-summation variant for the ablation benchmarks (two_pass only —
+the fused path is f32-exact by construction).
 """
 
 from __future__ import annotations
@@ -129,14 +145,15 @@ def _accum(acc_ref, comp_ref, contrib, accum_mode):
         raise ValueError(accum_mode)
 
 
-def _de_kernel(x_ref, gl_ref, gp_ref, *refs,
+def _de_kernel(*refs,
                softcap, vocab, n_tokens, block_n, block_v, filter_eps,
-               accum_mode, with_sum=False):
-    if with_sum:
-        gs_ref, lse_ref, e_ref, c_ref, de_ref, acc, comp = refs
-    else:
-        lse_ref, e_ref, c_ref, de_ref, acc, comp = refs
-        gs_ref = None
+               accum_mode, with_sum=False, with_bitmap=False):
+    refs = list(refs)
+    bm_ref = refs.pop(0) if with_bitmap else None
+    x_ref, gl_ref, gp_ref = refs[:3]
+    refs = refs[3:]
+    gs_ref = refs.pop(0) if with_sum else None
+    lse_ref, e_ref, c_ref, de_ref, acc, comp = refs
     v = pl.program_id(1)
     nv = pl.num_programs(1)
     n = pl.program_id(0)
@@ -147,36 +164,48 @@ def _de_kernel(x_ref, gl_ref, gp_ref, *refs,
         if comp is not None:
             comp[...] = jnp.zeros_like(comp)
 
-    e = _zero_padded_rows(e_ref[...].astype(jnp.float32), n * block_n, n_tokens)
-    c = _zero_padded_rows(c_ref[...].astype(jnp.float32), v * block_v, vocab)
-    dz, live = _grad_tile(
-        e, c, x_ref[...], lse_ref[...], gl_ref[...], gp_ref[...],
-        softcap=softcap, vocab=vocab,
-        v_start=v * block_v, n_start=n * block_n, n_tokens=n_tokens,
-        g_sum=gs_ref[...] if with_sum else None)
+    def _tile_and_accum():
+        e = _zero_padded_rows(e_ref[...].astype(jnp.float32), n * block_n,
+                              n_tokens)
+        c = _zero_padded_rows(c_ref[...].astype(jnp.float32), v * block_v,
+                              vocab)
+        dz, live = _grad_tile(
+            e, c, x_ref[...], lse_ref[...], gl_ref[...], gp_ref[...],
+            softcap=softcap, vocab=vocab,
+            v_start=v * block_v, n_start=n * block_n, n_tokens=n_tokens,
+            g_sum=gs_ref[...] if with_sum else None)
 
-    if filter_eps is not None:
-        @pl.when(live >= filter_eps)
         def _mm():
-            _accum(acc, comp, jnp.dot(dz, c, preferred_element_type=jnp.float32),
+            _accum(acc, comp,
+                   jnp.dot(dz, c, preferred_element_type=jnp.float32),
                    accum_mode)
+
+        if filter_eps is not None and not with_bitmap:
+            pl.when(live >= filter_eps)(_mm)
+        else:
+            _mm()
+
+    if with_bitmap:
+        # The forward already took the filtering decision — dead blocks skip
+        # the logit-tile recompute itself, not just the outgoing matmul.
+        pl.when(bm_ref[0, 0] != 0)(_tile_and_accum)
     else:
-        _accum(acc, comp, jnp.dot(dz, c, preferred_element_type=jnp.float32),
-               accum_mode)
+        _tile_and_accum()
 
     @pl.when(v == nv - 1)
     def _finalize():
         de_ref[...] = acc[...].astype(de_ref.dtype)
 
 
-def _dc_kernel(x_ref, gl_ref, gp_ref, *refs,
+def _dc_kernel(*refs,
                softcap, vocab, n_tokens, block_n, block_v, filter_eps,
-               accum_mode, with_sum=False):
-    if with_sum:
-        gs_ref, lse_ref, e_ref, c_ref, dc_ref, acc, comp = refs
-    else:
-        lse_ref, e_ref, c_ref, dc_ref, acc, comp = refs
-        gs_ref = None
+               accum_mode, with_sum=False, with_bitmap=False):
+    refs = list(refs)
+    bm_ref = refs.pop(0) if with_bitmap else None
+    x_ref, gl_ref, gp_ref = refs[:3]
+    refs = refs[3:]
+    gs_ref = refs.pop(0) if with_sum else None
+    lse_ref, e_ref, c_ref, dc_ref, acc, comp = refs
     n = pl.program_id(1)
     nn = pl.num_programs(1)
     v = pl.program_id(0)
@@ -187,23 +216,31 @@ def _dc_kernel(x_ref, gl_ref, gp_ref, *refs,
         if comp is not None:
             comp[...] = jnp.zeros_like(comp)
 
-    e = _zero_padded_rows(e_ref[...].astype(jnp.float32), n * block_n, n_tokens)
-    c = _zero_padded_rows(c_ref[...].astype(jnp.float32), v * block_v, vocab)
-    dz, live = _grad_tile(
-        e, c, x_ref[...], lse_ref[...], gl_ref[...], gp_ref[...],
-        softcap=softcap, vocab=vocab,
-        v_start=v * block_v, n_start=n * block_n, n_tokens=n_tokens,
-        g_sum=gs_ref[...] if with_sum else None)
+    def _tile_and_accum():
+        e = _zero_padded_rows(e_ref[...].astype(jnp.float32), n * block_n,
+                              n_tokens)
+        c = _zero_padded_rows(c_ref[...].astype(jnp.float32), v * block_v,
+                              vocab)
+        dz, live = _grad_tile(
+            e, c, x_ref[...], lse_ref[...], gl_ref[...], gp_ref[...],
+            softcap=softcap, vocab=vocab,
+            v_start=v * block_v, n_start=n * block_n, n_tokens=n_tokens,
+            g_sum=gs_ref[...] if with_sum else None)
 
-    contrib = lambda: jax.lax.dot_general(  # (block_v, block_n) @ (block_n, D)
-        dz, e, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        def _mm():   # (block_v, block_n) @ (block_n, D)
+            _accum(acc, comp, jax.lax.dot_general(
+                dz, e, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32), accum_mode)
 
-    if filter_eps is not None:
-        @pl.when(live >= filter_eps)
-        def _mm():
-            _accum(acc, comp, contrib(), accum_mode)
+        if filter_eps is not None and not with_bitmap:
+            pl.when(live >= filter_eps)(_mm)
+        else:
+            _mm()
+
+    if with_bitmap:
+        pl.when(bm_ref[0, 0] != 0)(_tile_and_accum)
     else:
-        _accum(acc, comp, contrib(), accum_mode)
+        _tile_and_accum()
 
     @pl.when(n == nn - 1)
     def _finalize():
@@ -224,23 +261,28 @@ def _prep(E, C, x, lse, g_lse, g_pick, g_sum=None):
 def cce_backward_dE_pallas(E, C, x, lse, g_lse, g_pick, *, softcap=None,
                            block_n=128, block_v=256,
                            filter_eps=DEFAULT_FILTER_EPS,
-                           accum="f32", g_sum=None, interpret=False):
+                           accum="f32", g_sum=None, bitmap=None,
+                           interpret=False):
     """dE (N, D) for cotangents (g_lse, g_pick[, g_sum]) of the
     (lse, pick[, sum_logits]) primitive. filter_eps=None disables gradient
     filtering (the -FullE variant); a non-None g_sum contributes a dense
     gradient that the filter statistic cannot see, so it forces
-    filter_eps=None."""
+    filter_eps=None. A non-None ``bitmap`` (the forward-emitted live-block
+    map, shape (cdiv(N, block_n), cdiv(V, block_v)) int32) replaces the
+    recompute statistic entirely: dead blocks skip the tile recompute."""
     n_tokens, d = E.shape
     vocab = C.shape[0]
     with_sum = g_sum is not None
     if with_sum:
         filter_eps = None
+        bitmap = None
+    with_bitmap = bitmap is not None
     x2, gl2, gp2, gs2, lse2 = _prep(E, C, x, lse, g_lse, g_pick, g_sum)
     grid = (pl.cdiv(n_tokens, block_n), pl.cdiv(vocab, block_v))
     kernel = functools.partial(
         _de_kernel, softcap=softcap, vocab=vocab, n_tokens=n_tokens,
         block_n=block_n, block_v=block_v, filter_eps=filter_eps,
-        accum_mode=accum, with_sum=with_sum)
+        accum_mode=accum, with_sum=with_sum, with_bitmap=with_bitmap)
     scratch = [pltpu.VMEM((block_n, d), jnp.float32)]
     if accum == "bf16_kahan":
         scratch.append(pltpu.VMEM((block_n, d), jnp.float32))
@@ -248,6 +290,8 @@ def cce_backward_dE_pallas(E, C, x, lse, g_lse, g_pick, *, softcap=None,
         kernel = functools.partial(_wrap_no_comp, kernel)
     tok_spec = lambda: pl.BlockSpec((block_n, 1), lambda nn, vv: (nn, 0))
     in_specs = [
+        *([pl.BlockSpec((1, 1), lambda nn, vv: (nn, vv))]
+          if with_bitmap else []),                           # bitmap
         tok_spec(),                                          # labels
         tok_spec(),                                          # g_lse
         tok_spec(),                                          # g_pick
@@ -256,7 +300,8 @@ def cce_backward_dE_pallas(E, C, x, lse, g_lse, g_pick, *, softcap=None,
         pl.BlockSpec((block_n, d), lambda nn, vv: (nn, 0)),  # E
         pl.BlockSpec((block_v, d), lambda nn, vv: (vv, 0)),  # C
     ]
-    inputs = [x2, gl2, gp2, *([gs2] if with_sum else []), lse2, E, C]
+    inputs = [*([bitmap] if with_bitmap else []),
+              x2, gl2, gp2, *([gs2] if with_sum else []), lse2, E, C]
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -273,21 +318,25 @@ def cce_backward_dE_pallas(E, C, x, lse, g_lse, g_pick, *, softcap=None,
 def cce_backward_dC_pallas(E, C, x, lse, g_lse, g_pick, *, softcap=None,
                            block_n=128, block_v=256,
                            filter_eps=DEFAULT_FILTER_EPS,
-                           accum="f32", g_sum=None, interpret=False):
+                           accum="f32", g_sum=None, bitmap=None,
+                           interpret=False):
     """dC (V, D) for cotangents (g_lse, g_pick[, g_sum]). filter_eps=None
     disables filtering (the -FullC variant, the paper's recommended
-    pretraining setting); non-None g_sum forces it off (dense gradient)."""
+    pretraining setting); non-None g_sum forces it off (dense gradient).
+    ``bitmap`` as in :func:`cce_backward_dE_pallas`."""
     n_tokens, d = E.shape
     vocab = C.shape[0]
     with_sum = g_sum is not None
     if with_sum:
         filter_eps = None
+        bitmap = None
+    with_bitmap = bitmap is not None
     x2, gl2, gp2, gs2, lse2 = _prep(E, C, x, lse, g_lse, g_pick, g_sum)
     grid = (pl.cdiv(vocab, block_v), pl.cdiv(n_tokens, block_n))
     kernel = functools.partial(
         _dc_kernel, softcap=softcap, vocab=vocab, n_tokens=n_tokens,
         block_n=block_n, block_v=block_v, filter_eps=filter_eps,
-        accum_mode=accum, with_sum=with_sum)
+        accum_mode=accum, with_sum=with_sum, with_bitmap=with_bitmap)
     scratch = [pltpu.VMEM((block_v, d), jnp.float32)]
     if accum == "bf16_kahan":
         scratch.append(pltpu.VMEM((block_v, d), jnp.float32))
@@ -295,6 +344,8 @@ def cce_backward_dC_pallas(E, C, x, lse, g_lse, g_pick, *, softcap=None,
         kernel = functools.partial(_wrap_no_comp, kernel)
     tok_spec = lambda: pl.BlockSpec((block_n, 1), lambda vv, nn: (nn, 0))
     in_specs = [
+        *([pl.BlockSpec((1, 1), lambda vv, nn: (nn, vv))]
+          if with_bitmap else []),                           # bitmap
         tok_spec(),                                          # labels
         tok_spec(),                                          # g_lse
         tok_spec(),                                          # g_pick
@@ -303,7 +354,8 @@ def cce_backward_dC_pallas(E, C, x, lse, g_lse, g_pick, *, softcap=None,
         pl.BlockSpec((block_n, d), lambda vv, nn: (nn, 0)),  # E
         pl.BlockSpec((block_v, d), lambda vv, nn: (vv, 0)),  # C
     ]
-    inputs = [x2, gl2, gp2, *([gs2] if with_sum else []), lse2, E, C]
+    inputs = [*([bitmap] if with_bitmap else []),
+              x2, gl2, gp2, *([gs2] if with_sum else []), lse2, E, C]
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -313,6 +365,180 @@ def cce_backward_dC_pallas(E, C, x, lse, g_lse, g_pick, *, softcap=None,
         scratch_shapes=scratch,
         compiler_params=_util.compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(*inputs)
+
+
+def _fused_kernel(*refs,
+                  softcap, vocab, n_tokens, block_n, block_v,
+                  filter_eps_e, filter_eps_c, with_sum=False,
+                  with_bitmap=False, use_alias=False):
+    refs = list(refs)
+    bm_ref = refs.pop(0) if with_bitmap else None
+    x_ref, gl_ref, gp_ref = refs[:3]
+    refs = refs[3:]
+    gs_ref = refs.pop(0) if with_sum else None
+    if use_alias:
+        lse_ref, e_ref, c_ref, dc_in_ref, de_ref, dc_ref, de_acc = refs
+    else:
+        lse_ref, e_ref, c_ref, de_ref, dc_ref, de_acc = refs
+        dc_in_ref = None
+    n = pl.program_id(0)
+    nn = pl.num_programs(0)
+    v = pl.program_id(1)
+    nv = pl.num_programs(1)
+
+    @pl.when(v == 0)
+    def _init_de():
+        de_acc[...] = jnp.zeros_like(de_acc)
+
+    # dC accumulates across the (sequential) outer n axis through HBM; the
+    # partial sum is carried by one of two mechanisms (see the wrapper):
+    if use_alias:
+        # compiled target: the output is HBM-aliased with a zeros input, and
+        # the *input* window — guaranteed to be fetched every grid step —
+        # carries the previous revisit's flushed partial sum. Copy-through
+        # first so dead (filtered) blocks preserve it; live blocks then
+        # add into the VMEM output buffer.
+        dc_ref[...] = dc_in_ref[...]
+    else:
+        # interpret mode: output windows observably carry their previous
+        # contents on revisit (aliased inputs do NOT re-read them there), so
+        # accumulate in the output ref directly, seeded at first visit.
+        @pl.when(n == 0)
+        def _init_dc():
+            dc_ref[...] = jnp.zeros_like(dc_ref)
+
+    def _tile_and_accum():
+        e = _zero_padded_rows(e_ref[...].astype(jnp.float32), n * block_n,
+                              n_tokens)
+        c = _zero_padded_rows(c_ref[...].astype(jnp.float32), v * block_v,
+                              vocab)
+        dz, live = _grad_tile(
+            e, c, x_ref[...], lse_ref[...], gl_ref[...], gp_ref[...],
+            softcap=softcap, vocab=vocab,
+            v_start=v * block_v, n_start=n * block_n, n_tokens=n_tokens,
+            g_sum=gs_ref[...] if with_sum else None)
+
+        def _mm_e():
+            de_acc[...] += jnp.dot(dz, c, preferred_element_type=jnp.float32)
+
+        def _mm_c():  # (block_v, block_n) @ (block_n, D), into the HBM block
+            dc_ref[...] += jax.lax.dot_general(
+                dz, e, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+        if filter_eps_e is not None and not with_bitmap:
+            pl.when(live >= filter_eps_e)(_mm_e)
+        else:
+            _mm_e()
+        if filter_eps_c is not None and not with_bitmap:
+            pl.when(live >= filter_eps_c)(_mm_c)
+        else:
+            _mm_c()
+
+    if with_bitmap:
+        pl.when(bm_ref[0, 0] != 0)(_tile_and_accum)
+    else:
+        _tile_and_accum()
+
+    @pl.when(v == nv - 1)
+    def _finalize():
+        de_ref[...] = de_acc[...].astype(de_ref.dtype)
+
+
+# Minimum vocab-block count for the fused kernel on the compiled (TPU)
+# target: the aliased dC block written at step (n, v) must be flushed to
+# HBM before the input fetch for its revisit at (n+1, v) is issued. The
+# write-back happens when the output index changes (step (n, v+1)) and the
+# pipeline prefetches one step ahead, so a revisit distance of nv grid
+# steps leaves nv - 2 steps of slack; require a margin. ops.py falls back
+# to the two-pass kernels below this (interpret mode has no pipeline and
+# no constraint).
+FUSED_MIN_NV = 4
+
+
+def cce_backward_fused_pallas(E, C, x, lse, g_lse, g_pick, *, softcap=None,
+                              block_n=128, block_v=256,
+                              filter_eps_e=DEFAULT_FILTER_EPS,
+                              filter_eps_c=DEFAULT_FILTER_EPS,
+                              g_sum=None, bitmap=None, interpret=False):
+    """Single-pass fused backward: ``(dE, dC_f32)`` from ONE logit-tile
+    recompute per (n, v) block (DESIGN.md §7).
+
+    Grid (n, v), both axes sequential ("arbitrary"): dE accumulates over the
+    innermost v axis in VMEM scratch exactly like the two-pass dE kernel;
+    dC accumulates across the outer n axis through its HBM-backed block —
+    via an ``input_output_aliases``'d zeros input on the compiled target
+    (input windows are re-fetched every grid step by contract; see
+    ``FUSED_MIN_NV`` for the flush-distance guard) and via the readable
+    output window in interpret mode (where aliased inputs observably do
+    NOT carry the accumulation). dC is returned in f32 — the same addends
+    in the same order as the two-pass f32 VMEM accumulation, so casting it
+    to C.dtype is bit-identical to the two-pass result. Kahan / bf16
+    accumulation modes are two_pass-only (the dispatch in ops.py falls
+    back); a non-None ``g_sum`` forces filtering off, as in the two-pass
+    kernels. With ``bitmap`` (requires both sides filtered) dead blocks
+    skip the recompute; with the recompute statistic, each side's matmul is
+    gated on its own ``filter_eps_*``.
+
+    Note the trade: fused halves the recompute FLOPs but streams the f32
+    dC array through HBM once per n-block (read+write ≈ 8·nn·V·D bytes vs
+    one write from VMEM in two_pass) — on HBM-bandwidth-bound geometries
+    two_pass can win wall-clock; ``benchmarks/tableA2`` reports both
+    FLOPs and the traffic estimate per combination.
+    """
+    n_tokens, d = E.shape
+    vocab = C.shape[0]
+    with_sum = g_sum is not None
+    if with_sum:
+        filter_eps_e = filter_eps_c = None
+        bitmap = None
+    with_bitmap = bitmap is not None
+    if with_bitmap:
+        # The bitmap gates the shared tile recompute, so it can only stand
+        # in for the statistic when BOTH sides filter (ops.py guarantees).
+        assert filter_eps_e is not None and filter_eps_c is not None
+    use_alias = not interpret
+    x2, gl2, gp2, gs2, lse2 = _prep(E, C, x, lse, g_lse, g_pick, g_sum)
+    grid = (pl.cdiv(n_tokens, block_n), pl.cdiv(vocab, block_v))
+    kernel = functools.partial(
+        _fused_kernel, softcap=softcap, vocab=vocab, n_tokens=n_tokens,
+        block_n=block_n, block_v=block_v, filter_eps_e=filter_eps_e,
+        filter_eps_c=filter_eps_c, with_sum=with_sum,
+        with_bitmap=with_bitmap, use_alias=use_alias)
+    tok_spec = lambda: pl.BlockSpec((block_n, 1), lambda nn_, vv: (nn_, 0))
+    dc_spec = lambda: pl.BlockSpec((block_v, d), lambda nn_, vv: (vv, 0))
+    in_specs = [
+        *([pl.BlockSpec((1, 1), lambda nn_, vv: (nn_, vv))]
+          if with_bitmap else []),                            # bitmap
+        tok_spec(),                                           # labels
+        tok_spec(),                                           # g_lse
+        tok_spec(),                                           # g_pick
+        *([tok_spec()] if with_sum else []),                  # g_sum
+        tok_spec(),                                           # lse
+        pl.BlockSpec((block_n, d), lambda nn_, vv: (nn_, 0)),  # E
+        pl.BlockSpec((block_v, d), lambda nn_, vv: (vv, 0)),   # C
+        *([dc_spec()] if use_alias else []),                   # dC seed
+    ]
+    inputs = [*([bitmap] if with_bitmap else []),
+              x2, gl2, gp2, *([gs2] if with_sum else []), lse2, E, C]
+    if use_alias:
+        inputs.append(jnp.zeros((vocab, d), jnp.float32))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((block_n, d), lambda nn_, vv: (nn_, 0)),  # dE
+            dc_spec(),                                             # dC
+        ],
+        out_shape=[sds((n_tokens, d), E.dtype, *inputs),
+                   sds((vocab, d), jnp.float32, *inputs)],
+        scratch_shapes=[pltpu.VMEM((block_n, d), jnp.float32)],
+        input_output_aliases={len(inputs) - 1: 1} if use_alias else {},
+        compiler_params=_util.compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(*inputs)
 

@@ -18,6 +18,21 @@ TPU adaptation vs. the paper's Triton kernel (see DESIGN.md §2):
   * The label logit is extracted with a broadcasted-iota column mask fused
     into the same tile (VPU-friendly), not a dynamic gather.
   * f32 accumulation in VMEM regardless of input dtype.
+
+Forward-emitted block-sparsity map (DESIGN.md §7): with ``emit_bitmap`` the
+kernel additionally returns a per-``(n_block, v_block)`` **live-block
+bitmap** — the gradient-filtering decision of paper §4.3 precomputed while
+the logit tile is already in VMEM. A block is *live* iff any of its valid
+rows has ``max_j a[i, j] - lse_i >= log(eps)`` (equivalently
+``max_j S[i, j] >= eps``) or contains a row's label (label blocks are
+always live, so the one-hot term can never be filtered). The per-row
+per-v-block tile maxima are staged in one extra VMEM scratch column per
+vocab step and reduced against the online LSE at the final step, so the
+bitmap costs no extra pass over the vocabulary. Both backward passes (and
+the fused single-pass backward) can then ``@pl.when``-skip the logit-tile
+*recompute itself* on dead blocks, instead of recomputing the tile only to
+discover the block was filterable. The bitmap is
+O(N·V / (block_n·block_v)) int32 — negligible next to E and C.
 """
 
 from __future__ import annotations
@@ -34,14 +49,25 @@ from repro.kernels._util import sds
 
 
 def _fwd_kernel(x_ref, e_ref, c_ref, *refs,
-                softcap, n_tokens, vocab, block_n, block_v, with_sum):
+                softcap, n_tokens, vocab, block_n, block_v, with_sum,
+                emit_bitmap, filter_eps):
+    refs = list(refs)
+    n_out = (3 if with_sum else 2) + (1 if emit_bitmap else 0)
+    out_refs, scr = refs[:n_out], refs[n_out:]
     if with_sum:
-        lse_ref, pick_ref, sum_ref, m_acc, s_acc, p_acc, z_acc = refs
+        lse_ref, pick_ref, sum_ref = out_refs[:3]
+        m_acc, s_acc, p_acc, z_acc = scr[:4]
+        scr = scr[4:]
     else:
-        lse_ref, pick_ref, m_acc, s_acc, p_acc = refs
+        lse_ref, pick_ref = out_refs[:2]
+        m_acc, s_acc, p_acc = scr[:3]
         sum_ref = z_acc = None
+        scr = scr[3:]
+    bm_ref = out_refs[-1] if emit_bitmap else None
+    rm_acc = scr[0] if emit_bitmap else None
     v = pl.program_id(1)
     nv = pl.num_programs(1)
+    n = pl.program_id(0)
 
     @pl.when(v == 0)
     def _init():
@@ -74,6 +100,10 @@ def _fwd_kernel(x_ref, e_ref, c_ref, *refs,
 
     # Online (streaming) log-sum-exp, numerically stable.
     bmax = jnp.max(a, axis=1, keepdims=True)
+    if emit_bitmap:
+        # Stage this v-block's per-row tile max; the block-liveness decision
+        # needs the final LSE and is taken once, in _finalize.
+        rm_acc[:, pl.ds(v, 1)] = bmax
     m_new = jnp.maximum(m_acc[...], bmax)
     m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
     s_acc[...] = (s_acc[...] * jnp.exp(m_acc[...] - m_safe)
@@ -82,16 +112,32 @@ def _fwd_kernel(x_ref, e_ref, c_ref, *refs,
 
     @pl.when(v == nv - 1)
     def _finalize():
-        lse_ref[...] = m_acc[...] + jnp.log(s_acc[...])
+        lse = m_acc[...] + jnp.log(s_acc[...])
+        lse_ref[...] = lse
         pick_ref[...] = p_acc[...]
         if with_sum:
             sum_ref[...] = z_acc[...]
+        if emit_bitmap:
+            # live[b] = any valid row with max_j S[i, j] >= eps, or any valid
+            # row whose label lands in block b (one-hot gradients are never
+            # filterable). Padded rows (ragged N edge) carry undefined tile
+            # maxima and labels — masked out via the row index.
+            score = rm_acc[...] - lse                    # (block_n, nv)
+            vb = jax.lax.broadcasted_iota(jnp.int32, score.shape, 1)
+            rows = (n * block_n
+                    + jax.lax.broadcasted_iota(jnp.int32, score.shape, 0))
+            live = (score >= jnp.log(filter_eps)) | (vb == labels // block_v)
+            live &= rows < n_tokens
+            bm_ref[...] = jnp.max(live.astype(jnp.int32), axis=0,
+                                  keepdims=True)
 
 
 def cce_forward_pallas(E: jax.Array, C: jax.Array, x: jax.Array, *,
                        softcap: float | None = None,
                        block_n: int = 128, block_v: int = 256,
                        with_sum: bool = False,
+                       emit_bitmap: bool = False,
+                       filter_eps: float | None = None,
                        interpret: bool = False):
     """Returns ``(lse, pick)`` — or ``(lse, pick, sum_logits)`` when
     ``with_sum`` — as f32 ``(N,)`` vectors.
@@ -102,23 +148,40 @@ def cce_forward_pallas(E: jax.Array, C: jax.Array, x: jax.Array, *,
 
     ``with_sum`` is static: when False the sum accumulator and its output
     are not part of the kernel at all (no dead compute).
+
+    ``emit_bitmap`` (static) appends a ``(cdiv(N, block_n),
+    cdiv(V, block_v))`` int32 live-block bitmap to the outputs: entry
+    ``[nb, vb]`` is 1 iff the backward's gradient-filtering statistic at
+    threshold ``filter_eps`` could keep the block (see DESIGN.md §7 — a
+    conservative superset: label blocks are always live). The backward
+    kernels consume it to skip the logit-tile recompute on dead blocks.
     """
     n_tokens, d = E.shape
     vocab, d2 = C.shape
     assert d == d2, (E.shape, C.shape)
     assert x.shape == (n_tokens,)
+    if emit_bitmap:
+        assert filter_eps is not None and filter_eps > 0.0, filter_eps
 
-    grid = (pl.cdiv(n_tokens, block_n), pl.cdiv(vocab, block_v))
+    nn, nv = pl.cdiv(n_tokens, block_n), pl.cdiv(vocab, block_v)
+    grid = (nn, nv)
     x2 = x.astype(jnp.int32).reshape(n_tokens, 1)
 
     kernel = functools.partial(
         _fwd_kernel, softcap=softcap, n_tokens=n_tokens, vocab=vocab,
-        block_n=block_n, block_v=block_v, with_sum=with_sum)
+        block_n=block_n, block_v=block_v, with_sum=with_sum,
+        emit_bitmap=emit_bitmap, filter_eps=filter_eps)
 
     n_out = 3 if with_sum else 2
     out_spec = pl.BlockSpec((block_n, 1), lambda n, v: (n, 0))
+    out_specs = [out_spec] * n_out
+    out_shape = [sds((n_tokens, 1), jnp.float32, x2, E, C)] * n_out
     scratch = [pltpu.VMEM((block_n, 1), jnp.float32)  # max / sum-exp /
                for _ in range(n_out + 1)]             # pick / (sum-logits)
+    if emit_bitmap:
+        out_specs.append(pl.BlockSpec((1, nv), lambda n, v: (n, 0)))
+        out_shape.append(sds((nn, nv), jnp.int32, x2, E, C))
+        scratch.append(pltpu.VMEM((block_n, nv), jnp.float32))  # tile maxima
     outs = pl.pallas_call(
         kernel,
         grid=grid,
@@ -127,11 +190,12 @@ def cce_forward_pallas(E: jax.Array, C: jax.Array, x: jax.Array, *,
             pl.BlockSpec((block_n, d), lambda n, v: (n, 0)),   # E
             pl.BlockSpec((block_v, d), lambda n, v: (v, 0)),   # C
         ],
-        out_specs=[out_spec] * n_out,
-        out_shape=[sds((n_tokens, 1), jnp.float32, x2, E, C)] * n_out,
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=scratch,
         compiler_params=_util.compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x2, E, C)
-    return tuple(o[:, 0] for o in outs)
+    flat = tuple(o[:, 0] for o in outs[:n_out])
+    return flat + (outs[n_out],) if emit_bitmap else flat

@@ -44,6 +44,22 @@ class CCEConfig:
            | "bf16" (paper's raw CCE accumulation, for ablation only).
     sort_vocab: permute C by descending average logit before the backward
            passes so hot tokens cluster into dense blocks (paper §4.3).
+    bwd: "fused" (default, measured best — benchmarks/tableA2): ONE backward
+           pass recomputes each logit tile once and feeds both dE and dC;
+           "two_pass" runs the classic dE-then-dC passes (each recomputing
+           the tile). Falls back to two_pass when accum != "f32" (the fused
+           dC accumulates in an f32 HBM output, which has no Kahan twin).
+    filter_stats: where the gradient-filtering block-skip decision comes
+           from. "fwd_bitmap" (default, measured best): the forward emits a
+           per-(n_block, v_block) live-block bitmap, so dead blocks skip
+           the logit-tile *recompute itself*; "recompute": paper Alg. 4 —
+           the statistic is evaluated from the recomputed tile, so the
+           recompute matmul is paid even on filtered blocks. The bitmap is
+           a conservative superset of the recompute statistic (label blocks
+           always live), and is automatically disabled when nothing filters:
+           sum_logits in use (label smoothing — dense cotangent forces full
+           gradients), both filter modes "full", or (fused only) mixed
+           filter modes.
     """
     softcap: float | None = None
     block_n: int | None = None
@@ -53,26 +69,79 @@ class CCEConfig:
     filter_mode_c: str = "filtered"
     accum: str = "f32"
     sort_vocab: bool = False
+    bwd: str = "fused"
+    filter_stats: str = "fwd_bitmap"
     interpret: bool | None = None  # None = auto (interpret on CPU)
+
+    def __post_init__(self):
+        if self.bwd not in ("two_pass", "fused"):
+            raise ValueError(
+                f"CCEConfig.bwd must be 'two_pass' or 'fused'; got "
+                f"{self.bwd!r}")
+        if self.filter_stats not in ("recompute", "fwd_bitmap"):
+            raise ValueError(
+                f"CCEConfig.filter_stats must be 'recompute' or "
+                f"'fwd_bitmap'; got {self.filter_stats!r}")
+        for side in ("filter_mode_e", "filter_mode_c"):
+            if getattr(self, side) not in ("filtered", "full"):
+                raise ValueError(
+                    f"CCEConfig.{side} must be 'filtered' or 'full'; got "
+                    f"{getattr(self, side)!r}")
+        if self.accum not in ("f32", "bf16", "bf16_kahan"):
+            raise ValueError(
+                f"CCEConfig.accum must be 'f32', 'bf16' or 'bf16_kahan'; "
+                f"got {self.accum!r}")
 
     def resolved_interpret(self) -> bool:
         return _is_cpu() if self.interpret is None else self.interpret
 
 
-def choose_blocks(n_tokens: int, vocab: int, d: int, itemsize: int,
-                  accum_rows: int = 1) -> tuple[int, int]:
-    """Pick (block_n, block_v): multiples of the (8,128) TPU tile, working
-    set under the VMEM budget. Working set per grid step (input tiles are
-    double-buffered by the pipeline):
+def vmem_working_set(block_n: int, block_v: int, d: int, itemsize: int,
+                     accum_rows: int = 1, *, with_sum: bool = False,
+                     emit_bitmap: bool = False, vocab: int | None = None,
+                     kahan: bool = False) -> int:
+    """Estimated VMEM bytes one grid step of the CCE kernels keeps live.
 
-        2*(block_n*D + block_v*D)*itemsize          E/C tiles
+        2*(block_n*D + block_v*D)*itemsize          E/C tiles (dbl-buffered)
       + block_n*block_v*4                           logit tile (f32)
       + accum_rows*max(block_n,block_v)*D*4         f32 accumulator scratch
+        (x2 under Kahan: the compensation buffer mirrors the accumulator)
+      + (n_out+1)*block_n*4                         fwd online-LSE columns
+                                                    (m/s/pick[, sum])
+      + block_n*cdiv(vocab, block_v)*4              fwd per-row tile maxima
+                                                    (bitmap emission only)
+      + cdiv(vocab, block_v)*4                      the bitmap row itself
+
+    ``accum_rows=2`` models the fused backward (dE scratch + the resident
+    dC output block).
     """
+    ws = (2 * (block_n + block_v) * d * itemsize + block_n * block_v * 4
+          + accum_rows * max(block_n, block_v) * d * 4
+          * (2 if kahan else 1))
+    n_out = 3 if with_sum else 2
+    ws += (n_out + 1) * block_n * 4
+    if emit_bitmap:
+        assert vocab is not None
+        nv = -(-vocab // block_v)
+        ws += block_n * nv * 4 + nv * 4
+    return ws
+
+
+def choose_blocks(n_tokens: int, vocab: int, d: int, itemsize: int,
+                  accum_rows: int = 1, *, with_sum: bool = False,
+                  emit_bitmap: bool = False,
+                  kahan: bool = False) -> tuple[int, int]:
+    """Pick (block_n, block_v): multiples of the (8,128) TPU tile, with
+    :func:`vmem_working_set` under the VMEM budget. ``with_sum`` /
+    ``emit_bitmap`` / ``kahan`` charge the optional scratch and output
+    buffers (the sum column, the per-row tile-max staging for the bitmap,
+    the Kahan compensation buffer) so enabling a knob can never silently
+    overflow VMEM at a block shape chosen without it."""
     def fits(bn, bv):
-        ws = (2 * (bn + bv) * d * itemsize + bn * bv * 4
-              + accum_rows * max(bn, bv) * d * 4)
-        return ws <= _VMEM_BUDGET
+        return vmem_working_set(
+            bn, bv, d, itemsize, accum_rows, with_sum=with_sum,
+            emit_bitmap=emit_bitmap, vocab=vocab,
+            kahan=kahan) <= _VMEM_BUDGET
 
     bn, bv = 256, 512
     while bv > 128 and not fits(bn, bv):
@@ -89,10 +158,18 @@ def _round_up(x: int, m: int) -> int:
 
 
 def _resolve_blocks(cfg: CCEConfig, n_tokens, vocab, d, itemsize,
-                    accum_rows: int = 1):
+                    want_sum: bool = False):
+    """One block choice shared by the forward and both backward flavours —
+    the bitmap's block grid must match across passes, so every knob that
+    changes any kernel's scratch footprint is charged here."""
     if cfg.block_n is not None and cfg.block_v is not None:
         return cfg.block_n, cfg.block_v
-    bn, bv = choose_blocks(n_tokens, vocab, d, itemsize, accum_rows)
+    plan = _bwd_plan(cfg, want_sum)
+    bn, bv = choose_blocks(
+        n_tokens, vocab, d, itemsize,
+        accum_rows=2 if plan.fused else 1,
+        with_sum=want_sum, emit_bitmap=plan.emit_bitmap,
+        kahan=cfg.accum == "bf16_kahan")
     return cfg.block_n or bn, cfg.block_v or bv
 
 
@@ -105,45 +182,108 @@ def _resolve_blocks(cfg: CCEConfig, n_tokens, vocab, d, itemsize,
 # the ingredient label smoothing needs (mean logit = sum_logits / V).
 # ----------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class _BwdPlan:
+    """Static backward strategy derived from (CCEConfig, want_sum).
+
+    The sum_logits cotangent is dense over the vocabulary (d sum / d a = 1
+    everywhere), so the |S - onehot| block-skip statistic cannot see it —
+    gradient filtering (and with it the bitmap) is off whenever the third
+    output is in use. The fused path keeps bit-exact two_pass parity only
+    under f32 accumulation, and a *shared*-tile skip needs both sides
+    filtered, so mixed filter modes fall back to the recompute statistic
+    there (two_pass can still bitmap-gate each side independently).
+    """
+    fused: bool
+    eps_e: float | None      # None = that side unfiltered (Full*)
+    eps_c: float | None
+    bitmap_e: bool           # dE gate comes from the fwd bitmap
+    bitmap_c: bool
+
+    @property
+    def emit_bitmap(self) -> bool:
+        return self.bitmap_e or self.bitmap_c
+
+
+def _bwd_plan(cfg: CCEConfig, want_sum: bool) -> _BwdPlan:
+    eps_e = (cfg.filter_eps
+             if cfg.filter_mode_e == "filtered" and not want_sum else None)
+    eps_c = (cfg.filter_eps
+             if cfg.filter_mode_c == "filtered" and not want_sum else None)
+    fused = cfg.bwd == "fused" and cfg.accum == "f32"
+    bm = cfg.filter_stats == "fwd_bitmap"
+    bitmap_e = bm and eps_e is not None
+    bitmap_c = bm and eps_c is not None
+    if fused and not (bitmap_e and bitmap_c):
+        bitmap_e = bitmap_c = False
+    return _BwdPlan(fused=fused, eps_e=eps_e, eps_c=eps_c,
+                    bitmap_e=bitmap_e, bitmap_c=bitmap_c)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
 def _lse_pick(cfg: CCEConfig, want_sum: bool, E, C, x):
     return _lse_pick_fwd_impl(cfg, want_sum, E, C, x)
 
 
-def _lse_pick_fwd_impl(cfg, want_sum, E, C, x):
+def _lse_pick_fwd_impl(cfg, want_sum, E, C, x, emit_bitmap=False):
     n_tokens, d = E.shape
     vocab = C.shape[0]
-    bn, bv = _resolve_blocks(cfg, n_tokens, vocab, d, E.dtype.itemsize)
+    bn, bv = _resolve_blocks(cfg, n_tokens, vocab, d, E.dtype.itemsize,
+                             want_sum)
     safe_x = jnp.where(x == IGNORE_INDEX, 0, x)
     return cce_fwd.cce_forward_pallas(
         E, C, safe_x, softcap=cfg.softcap, block_n=bn, block_v=bv,
-        with_sum=want_sum, interpret=cfg.resolved_interpret())
+        with_sum=want_sum, emit_bitmap=emit_bitmap,
+        filter_eps=cfg.filter_eps if emit_bitmap else None,
+        interpret=cfg.resolved_interpret())
 
 
 def _lse_pick_vjp_fwd(cfg, want_sum, E, C, x):
-    outs = _lse_pick_fwd_impl(cfg, want_sum, E, C, x)
-    return outs, (E, C, x, outs[0])
+    plan = _bwd_plan(cfg, want_sum)
+    outs = _lse_pick_fwd_impl(cfg, want_sum, E, C, x,
+                              emit_bitmap=plan.emit_bitmap)
+    if plan.emit_bitmap:
+        *outs, bitmap = outs
+        outs = tuple(outs)
+    else:
+        bitmap = None
+    return outs, (E, C, x, outs[0], bitmap)
+
+
+def _permute_bitmap(bitmap, perm, vocab, block_v):
+    """Re-block the live-block bitmap's v axis under a row permutation of C.
+
+    The permutation is row-granular while the bitmap is block-granular, so
+    the exact sorted-layout statistic is unknowable from the bitmap alone.
+    Conservative (superset) expansion keeps correctness: a vocab row
+    inherits its *source* block's liveness, and a sorted block is live iff
+    any of its rows is — so any entry the recompute statistic could keep in
+    the sorted layout still lands in a live block. See DESIGN.md §7.
+    """
+    nn, nv = bitmap.shape
+    row_live = jnp.take(bitmap != 0, jnp.arange(vocab) // block_v,
+                        axis=1)                       # (nn, V) source blocks
+    row_live = jnp.take(row_live, perm, axis=1)       # sorted row order
+    pad = nv * block_v - vocab
+    if pad:
+        row_live = jnp.pad(row_live, ((0, 0), (0, pad)))
+    return jnp.max(row_live.reshape(nn, nv, block_v).astype(jnp.int32),
+                   axis=2)
 
 
 def _lse_pick_vjp_bwd(cfg, want_sum, residuals, cotangents):
-    E, C, x, lse = residuals
+    E, C, x, lse, bitmap = residuals
     g_lse, g_pick = cotangents[0], cotangents[1]
     g_sum = cotangents[2].astype(jnp.float32) if want_sum else None
     n_tokens, d = E.shape
     vocab = C.shape[0]
-    bn, bv = _resolve_blocks(cfg, n_tokens, vocab, d, E.dtype.itemsize)
+    bn, bv = _resolve_blocks(cfg, n_tokens, vocab, d, E.dtype.itemsize,
+                             want_sum)
     interpret = cfg.resolved_interpret()
     g_lse = g_lse.astype(jnp.float32)
     g_pick = g_pick.astype(jnp.float32)
     safe_x = jnp.where(x == IGNORE_INDEX, 0, x)
-
-    # The sum_logits cotangent is dense over the vocabulary (d sum / d a = 1
-    # everywhere), so the |S - onehot| block-skip statistic cannot see it —
-    # gradient filtering must be off whenever the third output is in use.
-    eps_e = (cfg.filter_eps
-             if cfg.filter_mode_e == "filtered" and not want_sum else None)
-    eps_c = (cfg.filter_eps
-             if cfg.filter_mode_c == "filtered" and not want_sum else None)
+    plan = _bwd_plan(cfg, want_sum)
 
     if cfg.sort_vocab:
         # Vocabulary sorting (paper §4.3): order vocab by average logit so
@@ -154,16 +294,31 @@ def _lse_pick_vjp_bwd(cfg, want_sum, residuals, cotangents):
         inv_perm = jnp.argsort(perm)
         C_s = jnp.take(C, perm, axis=0)
         x_s = jnp.take(inv_perm, safe_x)
+        if bitmap is not None:
+            bitmap = _permute_bitmap(bitmap, perm, vocab, bv)
     else:
         perm = inv_perm = None
         C_s, x_s = C, safe_x
 
     kw = dict(softcap=cfg.softcap, block_n=bn, block_v=bv,
-              accum=cfg.accum, interpret=interpret, g_sum=g_sum)
-    dE = cce_bwd.cce_backward_dE_pallas(E, C_s, x_s, lse, g_lse, g_pick,
-                                        filter_eps=eps_e, **kw)
-    dC_s = cce_bwd.cce_backward_dC_pallas(E, C_s, x_s, lse, g_lse, g_pick,
-                                          filter_eps=eps_c, **kw)
+              interpret=interpret, g_sum=g_sum)
+    # On the compiled target the fused dC flush-before-revisit guard needs
+    # enough vocab blocks between revisits (no pipeline in interpret mode).
+    run_fused = plan.fused and (
+        interpret or -(-vocab // bv) >= cce_bwd.FUSED_MIN_NV)
+    if run_fused:
+        dE, dC_s = cce_bwd.cce_backward_fused_pallas(
+            E, C_s, x_s, lse, g_lse, g_pick,
+            filter_eps_e=plan.eps_e, filter_eps_c=plan.eps_c,
+            bitmap=bitmap if plan.emit_bitmap else None, **kw)
+        dC_s = dC_s.astype(C.dtype)
+    else:
+        dE = cce_bwd.cce_backward_dE_pallas(
+            E, C_s, x_s, lse, g_lse, g_pick, filter_eps=plan.eps_e,
+            accum=cfg.accum, bitmap=bitmap if plan.bitmap_e else None, **kw)
+        dC_s = cce_bwd.cce_backward_dC_pallas(
+            E, C_s, x_s, lse, g_lse, g_pick, filter_eps=plan.eps_c,
+            accum=cfg.accum, bitmap=bitmap if plan.bitmap_c else None, **kw)
     dC = jnp.take(dC_s, inv_perm, axis=0) if perm is not None else dC_s
     return dE, dC, None
 

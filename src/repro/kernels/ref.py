@@ -102,6 +102,45 @@ def ref_avg_logit(E, C, softcap: float | None = None) -> jax.Array:
     return jnp.dot(C.astype(jnp.float32), jnp.mean(E.astype(jnp.float32), axis=0))
 
 
+def ref_block_live(E, C, x, block_n: int, block_v: int, eps: float,
+                   softcap: float | None = None):
+    """Block-granular gradient-filtering oracle (paper Alg. 4): boolean
+    ``(cdiv(N, block_n), cdiv(V, block_v))`` map, True where
+    ``max |S - onehot| >= eps`` over the block — what the recompute
+    statistic keeps, and the set the fwd-emitted bitmap must cover
+    (its conservative superset additionally keeps every label block)."""
+    import numpy as np
+
+    safe_x = np.asarray(jnp.where(x == IGNORE_INDEX, 0, x))
+    S = np.asarray(ref_softmax(E, C, softcap=softcap))
+    onehot = np.zeros_like(S)
+    onehot[np.arange(S.shape[0]), safe_x] = 1.0
+    stat = np.abs(S - onehot)
+    n, v = stat.shape
+    nn, nv = -(-n // block_n), -(-v // block_v)
+    out = np.zeros((nn, nv), bool)
+    for nb in range(nn):
+        for vb in range(nv):
+            out[nb, vb] = stat[nb * block_n:(nb + 1) * block_n,
+                               vb * block_v:(vb + 1) * block_v].max() >= eps
+    return out
+
+
+def peaked_problem(n, d, v, hot=64, scale=22.0, seed=11, noise=0.05):
+    """(E, C, x, g) with post-training-like softmax concentration, so
+    gradient filtering genuinely skips blocks: confident predictions
+    (E ~ scale * C[x]) of Zipf-ish labels drawn from a small hot set.
+    Random E/C give near-uniform softmax ~1/V > eps and nothing filters —
+    tests and benchmarks of the filtering/bitmap paths share this
+    generator instead of re-tuning the concentration by hand."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.randint(ks[0], (n,), 0, hot)
+    C = (jax.random.normal(ks[1], (v, d)) * (d ** -0.5)).astype(jnp.float32)
+    E = C[x] * scale + jax.random.normal(ks[2], (n, d)) * noise
+    g = jax.random.normal(ks[3], (n,))
+    return E, C, x, g
+
+
 def ref_wkv(r, k, v, w_log, u, state0):
     """Sequential (per-token) RWKV-6 WKV oracle — O(S) python loop, f32.
 

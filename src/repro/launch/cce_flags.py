@@ -35,6 +35,19 @@ _FLAGS = {
         choices=["f32", "bf16_kahan", "bf16"], default=None,
         help="backward accumulator: f32 (TPU-native default), bf16_kahan "
              "(paper CCE-Kahan parity), bf16 (ablation only)")),
+    "--cce-bwd": ("bwd", dict(
+        choices=["two_pass", "fused"], default=None,
+        help="backward strategy: fused (default; one logit-tile recompute "
+             "feeds both dE and dC) or two_pass (classic dE-then-dC "
+             "passes). fused falls back to two_pass when --cce-accum is "
+             "not f32")),
+    "--cce-filter-stats": ("filter_stats", dict(
+        choices=["recompute", "fwd_bitmap"], default=None,
+        help="gradient-filter statistic source: fwd_bitmap (default; the "
+             "forward emits a live-block bitmap so dead blocks skip the "
+             "tile recompute) or recompute (paper Alg. 4; statistic from "
+             "the recomputed tile). The bitmap auto-disables when nothing "
+             "filters (label smoothing / filter modes full)")),
 }
 
 

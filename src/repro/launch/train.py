@@ -6,7 +6,8 @@
       [--loss nll|z_loss|focal|weighted|label_smoothing] \
       [--loss-kwargs '{"eps": 0.1}'] \
       [--cce-sort-vocab] [--cce-filter-mode-e filtered|full] \
-      [--cce-filter-mode-c filtered|full] [--cce-accum f32|bf16_kahan|bf16]
+      [--cce-filter-mode-c filtered|full] [--cce-accum f32|bf16_kahan|bf16] \
+      [--cce-bwd two_pass|fused] [--cce-filter-stats recompute|fwd_bitmap]
 
 The training loss comes from the ``repro.losses`` registry — every entry
 lowers onto the CCE (lse, pick[, sum]) primitive, so switching losses never

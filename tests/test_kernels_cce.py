@@ -1,12 +1,16 @@
 """Per-kernel shape/dtype sweeps: Pallas kernels vs. the pure-jnp oracle."""
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.kernels import (CCEConfig, IGNORE_INDEX, indexed_matmul_pallas,
-                           linear_cross_entropy_pallas, lse_and_pick_pallas)
-from repro.kernels import ref
+                           linear_cross_entropy_pallas, lse_and_pick_pallas,
+                           lse_pick_sum_pallas, vmem_working_set)
+from repro.kernels import cce_fwd, ref
+from repro.kernels.cce_bwd import DEFAULT_FILTER_EPS
 
 SHAPES = [
     # (N, D, V, block_n, block_v)
@@ -146,6 +150,200 @@ def test_filter_modes():
     dEn, dCn = grads("full", "full")
     assert jnp.max(jnp.abs(dEf - dEn)) < 2e-4
     assert jnp.max(jnp.abs(dCf - dCn)) < 2e-4
+
+
+# ---------------------------------------------------------------------------
+# Fused single-pass backward + forward-emitted block-sparsity maps
+# (DESIGN.md §7).
+# ---------------------------------------------------------------------------
+
+def _peaked(n, d, v, hot=64, seed=11, ignore_frac=0.0):
+    """ref.peaked_problem (shared with the benchmarks), plus optional
+    IGNORE_INDEX masking."""
+    E, C, x, g = ref.peaked_problem(n, d, v, hot=hot, seed=seed)
+    if ignore_frac:
+        mask = jax.random.uniform(jax.random.PRNGKey(seed + 2), (n,))
+        x = jnp.where(mask < ignore_frac, IGNORE_INDEX, x)
+    return E, C, x, g
+
+
+def _grads(E, C, x, g, cfg):
+    return jax.grad(lambda e, c: jnp.sum(
+        linear_cross_entropy_pallas(e, c, x, cfg) * g), (0, 1))(E, C)
+
+
+@pytest.mark.parametrize("shape", SHAPES[:4])
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("softcap", [None, 20.0])
+def test_fused_bitexact_vs_two_pass_filter_off(shape, dtype, softcap):
+    """Acceptance bar: the fused single-pass backward is BIT-IDENTICAL to
+    the two-pass kernels with filtering off — same addends, same order,
+    same f32 accumulation (the dC HBM-revisit accumulation is f32 and cast
+    once, exactly like the two-pass VMEM scratch)."""
+    n, d, v, bn, bv = shape
+    E, C, x, g = _mk(n, d, v, dtype, seed=21)
+    base = dict(block_n=bn, block_v=bv, softcap=softcap,
+                filter_mode_e="full", filter_mode_c="full")
+    dE0, dC0 = _grads(E, C, x, g, CCEConfig(bwd="two_pass", **base))
+    dE1, dC1 = _grads(E, C, x, g, CCEConfig(bwd="fused", **base))
+    np.testing.assert_array_equal(np.asarray(dE0), np.asarray(dE1))
+    np.testing.assert_array_equal(np.asarray(dC0), np.asarray(dC1))
+
+
+def test_fused_bitexact_vs_two_pass_filter_on():
+    """With the shared recompute statistic the gating decisions are
+    identical too, so bit-exactness extends to filtering ON — including a
+    genuinely sparse (peaked) problem where blocks really are skipped."""
+    E, C, x, g = _peaked(96, 32, 1024)
+    base = dict(block_n=32, block_v=128, filter_stats="recompute")
+    dE0, dC0 = _grads(E, C, x, g, CCEConfig(bwd="two_pass", **base))
+    dE1, dC1 = _grads(E, C, x, g, CCEConfig(bwd="fused", **base))
+    np.testing.assert_array_equal(np.asarray(dE0), np.asarray(dE1))
+    np.testing.assert_array_equal(np.asarray(dC0), np.asarray(dC1))
+
+
+def test_fused_with_sum_matches_dense_autodiff():
+    """The fused path must serve the three-output primitive (dense g_sum
+    cotangent forces filtering off) bit-identically to two_pass and to
+    tolerance against dense autodiff."""
+    E, C, x, g = _mk(48, 32, 300, jnp.float32, seed=22)
+
+    def loss(bwd):
+        cfg = CCEConfig(block_n=16, block_v=128, bwd=bwd)
+
+        def f(e, c):
+            lse, pick, z = lse_pick_sum_pallas(e, c, x, cfg)
+            return jnp.sum((lse - pick) * g + 1e-3 * z)
+        return jax.grad(f, (0, 1))(E, C)
+
+    dE0, dC0 = loss("two_pass")
+    dE1, dC1 = loss("fused")
+    np.testing.assert_array_equal(np.asarray(dE0), np.asarray(dE1))
+    np.testing.assert_array_equal(np.asarray(dC0), np.asarray(dC1))
+
+    def f_ref(e, c):
+        z = ref.ref_logits(e, c)
+        lse = jax.scipy.special.logsumexp(z, axis=-1)
+        pick = jnp.take_along_axis(z, x[:, None], 1)[:, 0]
+        return jnp.sum((lse - pick) * g + 1e-3 * jnp.sum(z, -1))
+
+    dEr, dCr = jax.grad(f_ref, (0, 1))(E, C)
+    assert jnp.max(jnp.abs(dE1 - dEr)) < 2e-4
+    assert jnp.max(jnp.abs(dC1 - dCr)) < 2e-4
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("peaked", [False, True])
+def test_fwd_bitmap_never_drops_a_live_block(seed, peaked):
+    """The forward-emitted bitmap is a conservative superset of the
+    recompute statistic: any block Alg. 4 keeps is marked live, and every
+    label-containing block is live unconditionally."""
+    n, d, v, bn, bv = 70, 32, 640, 32, 128
+    if peaked:
+        E, C, x, _ = _peaked(n, d, v, seed=seed + 30)
+        x = jnp.where(x == IGNORE_INDEX, 0, x)
+    else:
+        E, C, x, _ = _mk(n, d, v, jnp.float32, seed=seed)
+    *_, bm = cce_fwd.cce_forward_pallas(
+        E, C, x, block_n=bn, block_v=bv, emit_bitmap=True,
+        filter_eps=DEFAULT_FILTER_EPS, interpret=True)
+    bm = np.asarray(bm) != 0
+    rec = ref.ref_block_live(E, C, x, bn, bv, DEFAULT_FILTER_EPS)
+    assert not np.any(rec & ~bm), "bitmap dropped a block Alg. 4 keeps"
+    for i, lab in enumerate(np.asarray(x)):
+        assert bm[i // bn, lab // bv], "label block must always be live"
+
+
+@pytest.mark.parametrize("bwd", ["two_pass", "fused"])
+def test_fwd_bitmap_grads_match_full_on_sparse_problem(bwd):
+    """On a peaked problem where filtering genuinely skips blocks, the
+    bitmap-gated backward stays within the paper's lossless-filtering
+    tolerance of the unfiltered gradients (and is at least as accurate as
+    recompute-stat filtering, being a superset)."""
+    E, C, x, g = _peaked(128, 64, 1024, ignore_frac=0.2)
+    base = dict(block_n=32, block_v=128)
+    dEf, dCf = _grads(E, C, x, g, CCEConfig(
+        filter_mode_e="full", filter_mode_c="full", **base))
+    dEb, dCb = _grads(E, C, x, g, CCEConfig(
+        bwd=bwd, filter_stats="fwd_bitmap", **base))
+    # dropped entries are < eps = 2^-12 each; the residual is the sum of a
+    # dead block's sub-eps tail — well under bf16 training noise (paper
+    # §4.3's losslessness claim), but not zero.
+    assert jnp.max(jnp.abs(dEb - dEf)) < 1e-2
+    assert jnp.max(jnp.abs(dCb - dCf)) < 1e-2
+    # the bitmap really does gate: the peaked problem has dead blocks
+    sx = jnp.where(x == IGNORE_INDEX, 0, x)
+    *_, bm = cce_fwd.cce_forward_pallas(
+        E, C, sx, block_n=32, block_v=128, emit_bitmap=True,
+        filter_eps=DEFAULT_FILTER_EPS, interpret=True)
+    assert float((np.asarray(bm) != 0).mean()) < 1.0
+
+
+@pytest.mark.parametrize("bwd", ["two_pass", "fused"])
+def test_sort_vocab_composes_with_fwd_bitmap(bwd):
+    """sort_vocab permutes C rows before the backward; the bitmap's v axis
+    must be re-blocked under the permutation (conservative row-expansion),
+    or live rows would land in blocks marked dead."""
+    E, C, x, g = _peaked(96, 32, 1024, seed=41)
+    base = dict(block_n=32, block_v=128)
+    dEf, dCf = _grads(E, C, x, g, CCEConfig(
+        filter_mode_e="full", filter_mode_c="full", **base))
+    dEs, dCs = _grads(E, C, x, g, CCEConfig(
+        bwd=bwd, filter_stats="fwd_bitmap", sort_vocab=True, **base))
+    assert jnp.max(jnp.abs(dEs - dEf)) < 2e-3
+    assert jnp.max(jnp.abs(dCs - dCf)) < 2e-3
+
+
+def test_fused_falls_back_for_kahan_accum():
+    """bwd="fused" requires f32 accumulation; other modes silently use the
+    two-pass kernels (documented fallback), so results still match the
+    explicit two_pass config."""
+    E, C, x, g = _mk(64, 32, 256, jnp.bfloat16, seed=23)
+    base = dict(block_n=32, block_v=128, accum="bf16_kahan")
+    dE0, dC0 = _grads(E, C, x, g, CCEConfig(bwd="two_pass", **base))
+    dE1, dC1 = _grads(E, C, x, g, CCEConfig(bwd="fused", **base))
+    np.testing.assert_array_equal(np.asarray(dE0), np.asarray(dE1))
+    np.testing.assert_array_equal(np.asarray(dC0), np.asarray(dC1))
+
+
+def test_cceconfig_rejects_invalid_values():
+    with pytest.raises(ValueError):
+        CCEConfig(bwd="single_pass")
+    with pytest.raises(ValueError):
+        CCEConfig(filter_stats="oracle")
+    with pytest.raises(ValueError):
+        CCEConfig(filter_mode_e="off")
+    with pytest.raises(ValueError):
+        CCEConfig(accum="f64")
+
+
+def test_choose_blocks_fit_paper_geometries():
+    """The VMEM-fit estimate must cover every optional buffer (with_sum
+    column, Kahan compensation, bitmap staging scratch) at the paper
+    geometries of the assigned configs — a knob can never silently
+    overflow the budget at a block shape chosen without it."""
+    import repro.configs as configs
+    from repro.kernels.ops import _VMEM_BUDGET, choose_blocks
+
+    n_tokens = 8192
+    for arch in configs.ASSIGNED:
+        cfg = configs.get_config(arch)
+        v, d = cfg.padded_vocab_size, cfg.d_model
+        for with_sum in (False, True):
+            for emit_bitmap in (False, True):
+                for kahan in (False, True):
+                    for accum_rows in (1, 2):
+                        bn, bv = choose_blocks(
+                            n_tokens, v, d, 2, accum_rows,
+                            with_sum=with_sum, emit_bitmap=emit_bitmap,
+                            kahan=kahan)
+                        ws = vmem_working_set(
+                            bn, bv, d, 2, accum_rows, with_sum=with_sum,
+                            emit_bitmap=emit_bitmap, vocab=v, kahan=kahan)
+                        assert ws <= _VMEM_BUDGET, (
+                            arch, with_sum, emit_bitmap, kahan, accum_rows,
+                            bn, bv, ws)
+                        assert bn % 8 == 0 and bv % 128 == 0, (arch, bn, bv)
 
 
 def test_indexed_matmul():

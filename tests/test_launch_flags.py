@@ -1,0 +1,119 @@
+"""Regression tests: the ``--cce-*`` CLI surface tracks CCEConfig.
+
+``launch/cce_flags.py`` auto-derives flags from the dataclass; these tests
+pin that every field added for the fused backward / bitmap filtering work
+(``bwd``, ``filter_stats``) is reachable end-to-end through the real
+``launch/train`` and ``launch/dryrun`` entry points (argv -> argparse ->
+CCEConfig -> Trainer / run_cell), and that invalid values are rejected at
+the CLI boundary.
+"""
+
+import argparse
+import dataclasses
+
+import pytest
+
+from repro.kernels.ops import CCEConfig
+from repro.launch.cce_flags import _FLAGS, add_cce_args, cce_config_from_args
+
+
+def test_every_new_knob_has_a_flag():
+    covered = {field for field, _ in _FLAGS.values()}
+    assert {"bwd", "filter_stats"} <= covered
+    fields = {f.name for f in dataclasses.fields(CCEConfig)}
+    assert covered <= fields  # _validate_flags would raise too
+
+
+def test_parse_new_knobs_roundtrip():
+    ap = argparse.ArgumentParser()
+    add_cce_args(ap)
+    c = cce_config_from_args(ap.parse_args(
+        ["--cce-bwd", "two_pass", "--cce-filter-stats", "recompute"]))
+    assert c.bwd == "two_pass" and c.filter_stats == "recompute"
+    # unset flags keep dataclass defaults (measured best: fused+fwd_bitmap)
+    c2 = cce_config_from_args(ap.parse_args(["--cce-sort-vocab"]))
+    assert c2.bwd == "fused" and c2.filter_stats == "fwd_bitmap"
+    assert cce_config_from_args(ap.parse_args([])) is None
+
+
+@pytest.mark.parametrize("argv", [
+    ["--cce-bwd", "single_pass"],
+    ["--cce-filter-stats", "oracle"],
+])
+def test_cli_rejects_invalid_values(argv):
+    ap = argparse.ArgumentParser()
+    add_cce_args(ap)
+    with pytest.raises(SystemExit):
+        ap.parse_args(argv)
+
+
+def test_train_cli_threads_cce_config(monkeypatch):
+    """argv -> launch.train.main -> Trainer(cce_cfg=...) end-to-end, with
+    the Trainer stubbed so no training runs."""
+    from repro.launch import train as train_cli
+
+    seen = {}
+
+    class FakeTrainer:
+        def __init__(self, cfg, tcfg, **kw):
+            seen.update(kw)
+
+        def install_signal_handlers(self):
+            pass
+
+        def run(self, num_steps=None, **kw):
+            pass
+
+        def save(self):
+            pass
+
+    monkeypatch.setattr(train_cli, "Trainer", FakeTrainer)
+    monkeypatch.setattr(
+        "sys.argv",
+        ["train", "--arch", "gemma_2b", "--reduced", "--steps", "1",
+         "--batch", "2", "--seq", "16",
+         "--cce-bwd", "two_pass", "--cce-filter-stats", "recompute",
+         "--cce-sort-vocab"])
+    train_cli.main()
+    c = seen["cce_cfg"]
+    assert isinstance(c, CCEConfig)
+    assert c.bwd == "two_pass" and c.filter_stats == "recompute"
+    assert c.sort_vocab
+
+    monkeypatch.setattr(
+        "sys.argv",
+        ["train", "--arch", "gemma_2b", "--reduced", "--steps", "1",
+         "--cce-bwd", "bogus"])
+    with pytest.raises(SystemExit):
+        train_cli.main()
+
+
+def test_dryrun_cli_threads_cce_config(monkeypatch):
+    """argv -> launch.dryrun.main -> run_cell(cce_cfg=...) end-to-end,
+    with run_cell stubbed so nothing compiles."""
+    from repro.launch import dryrun as dryrun_cli
+
+    seen = []
+
+    def fake_run_cell(arch, shape, multi_pod, out_dir, *, force=False,
+                      loss_impl=None, tag="", cce_cfg=None):
+        seen.append(cce_cfg)
+        return {"ok": True, "compile_s": 0.0, "roofline": {}}
+
+    monkeypatch.setattr(dryrun_cli, "run_cell", fake_run_cell)
+    monkeypatch.setattr(
+        "sys.argv",
+        ["dryrun", "--arch", "gemma_2b", "--shape", "train_4k",
+         "--mesh", "single", "--cce-bwd", "fused",
+         "--cce-filter-stats", "fwd_bitmap", "--cce-accum", "f32"])
+    with pytest.raises(SystemExit) as e:
+        dryrun_cli.main()
+    assert e.value.code == 0
+    assert seen and all(isinstance(c, CCEConfig) for c in seen)
+    assert seen[0].bwd == "fused" and seen[0].filter_stats == "fwd_bitmap"
+
+    monkeypatch.setattr(
+        "sys.argv", ["dryrun", "--cce-filter-stats", "nope"])
+    with pytest.raises(SystemExit) as e:
+        dryrun_cli.main()
+    assert e.value.code != 0

@@ -214,3 +214,61 @@ def test_rglru_scan_matches_sequential(seed):
     np.testing.assert_allclose(np.asarray(h_scan),
                                np.asarray(jnp.stack(hs, 1)),
                                atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-pass CCE backward + fwd-emitted block-sparsity maps
+# (DESIGN.md §7) — interpret-mode property tests.
+# ---------------------------------------------------------------------------
+
+from repro.kernels import CCEConfig, cce_fwd, linear_cross_entropy_pallas
+from repro.kernels.cce_bwd import DEFAULT_FILTER_EPS
+
+
+def _cce_problem(seed, n, d, v, peaked):
+    if peaked:
+        return ref.peaked_problem(n, d, v, hot=max(v // 8, 1), seed=seed)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    C = jax.random.normal(ks[0], (v, d)) * (d ** -0.5)
+    x = jax.random.randint(ks[1], (n,), 0, v)
+    E = jax.random.normal(ks[2], (n, d)) * 0.7
+    g = jax.random.normal(ks[3], (n,))
+    return E, C, x, g
+
+
+@settings(**_SETTINGS)
+@given(seed=st.integers(0, 2**16), n=st.sampled_from([17, 32, 48]),
+       v=st.sampled_from([256, 300, 384]), peaked=st.booleans())
+def test_fused_backward_bitexact_vs_two_pass(seed, n, v, peaked):
+    """Property (a): fused == two-pass gradients BIT-exactly with
+    filtering off, at arbitrary (ragged) shapes."""
+    E, C, x, g = _cce_problem(seed, n, 32, v, peaked)
+    base = dict(block_n=16, block_v=128,
+                filter_mode_e="full", filter_mode_c="full")
+
+    def grads(bwd):
+        cfg = CCEConfig(bwd=bwd, **base)
+        return jax.grad(lambda e, c: jnp.sum(
+            linear_cross_entropy_pallas(e, c, x, cfg) * g), (0, 1))(E, C)
+
+    (dE0, dC0), (dE1, dC1) = grads("two_pass"), grads("fused")
+    np.testing.assert_array_equal(np.asarray(dE0), np.asarray(dE1))
+    np.testing.assert_array_equal(np.asarray(dC0), np.asarray(dC1))
+
+
+@settings(**_SETTINGS)
+@given(seed=st.integers(0, 2**16), n=st.sampled_from([24, 40, 64]),
+       v=st.sampled_from([384, 512, 640]), peaked=st.booleans())
+def test_fwd_bitmap_superset_property(seed, n, v, peaked):
+    """Property (b): the fwd bitmap never marks a block dead that the
+    recompute statistic would keep, and label blocks are always live."""
+    bn, bv = 16, 128
+    E, C, x, _ = _cce_problem(seed, n, 32, v, peaked)
+    *_, bm = cce_fwd.cce_forward_pallas(
+        E, C, x, block_n=bn, block_v=bv, emit_bitmap=True,
+        filter_eps=DEFAULT_FILTER_EPS, interpret=True)
+    bm = np.asarray(bm) != 0
+    rec = ref.ref_block_live(E, C, x, bn, bv, DEFAULT_FILTER_EPS)
+    assert not np.any(rec & ~bm)
+    for i, lab in enumerate(np.asarray(x)):
+        assert bm[i // bn, lab // bv]

@@ -590,6 +590,13 @@ def test_cce_cli_flags_validate_against_dataclass():
     c = cce_config_from_args(args)
     assert c.sort_vocab and c.accum == "bf16_kahan"
     assert c.filter_mode_c == "full" and c.filter_mode_e == "filtered"
+    assert c.bwd == "fused" and c.filter_stats == "fwd_bitmap"  # defaults
+    args = ap.parse_args(["--cce-bwd", "two_pass",
+                          "--cce-filter-stats", "recompute"])
+    c = cce_config_from_args(args)
+    assert c.bwd == "two_pass" and c.filter_stats == "recompute"
     assert cce_config_from_args(ap.parse_args([])) is None
     with pytest.raises(SystemExit):
         ap.parse_args(["--cce-accum", "f64"])   # not a CCEConfig choice
+    with pytest.raises(SystemExit):
+        ap.parse_args(["--cce-bwd", "atomic"])  # not a CCEConfig choice
