@@ -11,6 +11,7 @@ Two measurement modes (this container is CPU-only; TPU is the target):
 from __future__ import annotations
 
 import json
+import os
 import time
 
 import jax
@@ -18,30 +19,64 @@ import jax.numpy as jnp
 
 # ---------------------------------------------------------------------------
 # Machine-readable perf-trajectory rows (benchmarks/run.py --json). Each row
-# is one measured kernel/loss variant; future PRs regress against the
-# recorded file (CI uploads BENCH_kernels.json as a workflow artifact).
+# is one measured kernel/loss variant; the committed BENCH_*.json files are
+# the repo's perf trajectory, and benchmarks/perf_gate.py regresses fresh
+# runs against them in CI.
 # ---------------------------------------------------------------------------
+
+#: Perf-file schema: ``{"schema": N, "rows": [...]}``. Bump when row keys
+#: change meaning; readers also accept the legacy bare-list format.
+SCHEMA_VERSION = 1
 
 _JSON_ROWS: list[dict] = []
 
 
-def record(bench: str, config: str, *, flops: float | None = None,
-           wall_s: float | None = None,
+def record(bench: str, config: str, *, geometry: str | None = None,
+           flops: float | None = None, wall_s: float | None = None,
            memory_class: str | None = None, **extra) -> None:
-    """Append one ``{bench, config, flops, wall_s, memory_class}`` row to
-    the in-process perf log (written out by ``run.py --json``)."""
-    _JSON_ROWS.append({"bench": bench, "config": config, "flops": flops,
+    """Append one ``{bench, config, geometry, flops, wall_s, memory_class,
+    ts}`` row to the in-process perf log (written out by ``run.py --json``).
+    ``geometry`` names the problem size (e.g. ``"N=4096 V=32768 D=1024"``)
+    so the perf gate only ever compares like with like."""
+    _JSON_ROWS.append({"bench": bench, "config": config,
+                       "geometry": geometry, "flops": flops,
                        "wall_s": wall_s, "memory_class": memory_class,
-                       **extra})
+                       "ts": round(time.time(), 3), **extra})
 
 
 def json_rows() -> list[dict]:
     return list(_JSON_ROWS)
 
 
+def row_key(r: dict) -> tuple:
+    """Stable identity+sort key: (bench, config, geometry)."""
+    return (r.get("bench") or "", r.get("config") or "",
+            r.get("geometry") or "")
+
+
+def read_json(path: str) -> list[dict]:
+    """Rows from a perf file — schema-versioned dict or legacy bare list."""
+    with open(path) as f:
+        doc = json.load(f)
+    return doc if isinstance(doc, list) else doc.get("rows", [])
+
+
 def write_json(path: str) -> None:
+    """Write ``{"schema": ..., "rows": [...]}`` — rows stably sorted by
+    (bench, config, geometry) with ``sort_keys`` so reruns diff cleanly.
+
+    Merges into an existing file: benches re-recorded this run replace
+    their old rows; rows from benches *not* run (e.g. skipped via
+    ``run.py --only``) are kept, so a targeted rerun never clobbers the
+    rest of the trajectory."""
+    rows = list(_JSON_ROWS)
+    fresh = {r["bench"] for r in rows}
+    if os.path.exists(path):
+        rows += [r for r in read_json(path) if r.get("bench") not in fresh]
+    rows.sort(key=row_key)
     with open(path, "w") as f:
-        json.dump(_JSON_ROWS, f, indent=1, default=float)
+        json.dump({"schema": SCHEMA_VERSION, "rows": rows}, f,
+                  indent=1, sort_keys=True, default=float)
         f.write("\n")
 
 

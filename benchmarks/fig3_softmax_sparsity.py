@@ -80,10 +80,12 @@ def run(steps: int = 60):
     row("fig3/bitmap_dropped_live_blocks", 0,
         f"{int(dropped)} (must be 0: the bitmap is a conservative "
         f"superset)")
-    record("fig3", "bitmap_live_fraction", flops=None,
+    geom = (f"N={E.shape[0]} D={cfg.d_model} V={cfg.vocab_size} "
+            f"bn={bn} bv={bv}")
+    record("fig3", "bitmap_live_fraction", geometry=geom, flops=None,
            memory_class="O(N·V/(bn·bv)) bits",
            live_frac=float(bm.mean()))
-    record("fig3", "recompute_live_fraction",
+    record("fig3", "recompute_live_fraction", geometry=geom,
            live_frac=float(rec.mean()))
 
 

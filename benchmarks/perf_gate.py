@@ -1,0 +1,103 @@
+"""Perf gate: compare a fresh ``run.py --json`` output against a committed
+baseline (the in-repo perf trajectory, BENCH_kernels.json / BENCH_serve.json).
+
+  PYTHONPATH=src python -m benchmarks.perf_gate BASELINE FRESH \
+      [--wall-tol 1.5] [--strict-wall]
+
+Rows are matched by identity key ``(bench, config, geometry)``. Two checks
+per matched pair:
+
+  * **memory_class** — HARD FAIL (exit 1) on any regression. Classes are
+    ranked ``O(N·D + V·D)`` < ``O(N/K·V)`` < ``O(N·V)`` (< unknown); a
+    fresh row may improve its class, never worsen it. This is the paper's
+    central claim and must not drift.
+  * **wall_s** — WARN ONLY by default: wall clock on shared CI runners is
+    noisy (and the kernels run in interpret mode on CPU), so a fresh wall
+    beyond ``--wall-tol`` x baseline prints a warning; ``--strict-wall``
+    upgrades it to a failure for controlled machines.
+
+Baseline rows with no fresh counterpart are reported (the fresh run may
+legitimately have been restricted via ``--only``); fresh rows with no
+baseline are listed as new so the baseline can be re-committed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.common import read_json, row_key
+
+#: Lower rank = strictly better memory behavior. Unknown/None classes rank
+#: worst so a fresh row can never dodge the gate by dropping the field.
+_CLASS_RANK = {"O(N·D + V·D)": 0, "O(N/K·V)": 1, "O(N·V)": 2}
+
+
+def class_rank(cls: str | None) -> int:
+    return _CLASS_RANK.get(cls, len(_CLASS_RANK))
+
+
+def compare(baseline: list[dict], fresh: list[dict], *,
+            wall_tol: float = 1.5) -> dict:
+    """-> {failures, warnings, missing, new, matched} (lists of strings,
+    except ``matched``: int)."""
+    base = {row_key(r): r for r in baseline}
+    new = {row_key(r): r for r in fresh}
+    out = {"failures": [], "warnings": [], "missing": [], "new": [],
+           "matched": 0}
+    for key in sorted(set(base) & set(new)):
+        b, f = base[key], new[key]
+        out["matched"] += 1
+        name = "/".join(k for k in key if k)
+        bc, fc = b.get("memory_class"), f.get("memory_class")
+        if class_rank(fc) > class_rank(bc):
+            out["failures"].append(
+                f"{name}: memory_class regressed {bc!r} -> {fc!r}")
+        bw, fw = b.get("wall_s"), f.get("wall_s")
+        if bw and fw and fw > wall_tol * bw:
+            out["warnings"].append(
+                f"{name}: wall_s {bw:.4g} -> {fw:.4g} "
+                f"({fw / bw:.2f}x > {wall_tol:.2f}x tolerance)")
+    out["missing"] = ["/".join(k for k in key if k)
+                      for key in sorted(set(base) - set(new))]
+    out["new"] = ["/".join(k for k in key if k)
+                  for key in sorted(set(new) - set(base))]
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_*.json")
+    ap.add_argument("fresh", help="freshly produced run.py --json output")
+    ap.add_argument("--wall-tol", type=float, default=1.5,
+                    help="warn when fresh wall_s exceeds this multiple "
+                         "of baseline (default 1.5)")
+    ap.add_argument("--strict-wall", action="store_true",
+                    help="treat wall_s warnings as failures")
+    args = ap.parse_args(argv)
+
+    res = compare(read_json(args.baseline), read_json(args.fresh),
+                  wall_tol=args.wall_tol)
+    print(f"perf gate: {res['matched']} rows matched against "
+          f"{args.baseline}")
+    for m in res["missing"]:
+        print(f"  note: baseline row not in fresh run: {m}")
+    for m in res["new"]:
+        print(f"  note: new row (not in baseline): {m}")
+    for w in res["warnings"]:
+        print(f"  WARN: {w}")
+    for f in res["failures"]:
+        print(f"  FAIL: {f}")
+    if res["matched"] == 0:
+        print("  FAIL: no rows matched — wrong files?")
+        return 1
+    if res["failures"] or (args.strict_wall and res["warnings"]):
+        return 1
+    print("perf gate: OK"
+          + (f" ({len(res['warnings'])} wall warnings)"
+             if res["warnings"] else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,10 +4,13 @@ Prints ``name,us_per_call,derived`` CSV rows. Roofline/dry-run numbers live
 in results/dryrun (produced by repro.launch.dryrun) and EXPERIMENTS.md.
 
 ``--json PATH`` additionally writes the perf-trajectory rows the modules
-recorded via :func:`benchmarks.common.record` — ``{bench, config, flops,
-wall_s, memory_class}`` per measured kernel/loss variant — so future PRs
-can regress against a recorded baseline (CI uploads ``BENCH_kernels.json``
-as a workflow artifact). ``--only a,b`` restricts to named modules.
+recorded via :func:`benchmarks.common.record` — schema-versioned
+``{bench, config, geometry, flops, wall_s, memory_class, ts}`` rows,
+stably sorted — and *merges* into an existing PATH: benches skipped via
+``--only`` keep their previous rows instead of being clobbered. The
+committed ``BENCH_kernels.json`` / ``BENCH_serve.json`` baselines are
+regressed against fresh runs by ``benchmarks/perf_gate.py`` in CI.
+``--only a,b`` restricts to named modules.
 """
 
 import argparse
@@ -19,7 +22,9 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write recorded perf rows (e.g. BENCH_kernels.json)")
+                    help="write recorded perf rows (e.g. BENCH_kernels."
+                         "json); merges into PATH, keeping rows of "
+                         "benches skipped via --only")
     ap.add_argument("--only", default=None,
                     help="comma-separated module names (default: all)")
     args = ap.parse_args()

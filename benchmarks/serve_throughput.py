@@ -18,7 +18,10 @@ prompts are ingested up to 16 tokens per fused prefill+decode step, so a
 48 (token streams unchanged).
 
 Reported: wall-clock tokens/s and mean time-to-first-token (TTFT); the
-chunked-prefill row includes its TTFT cut over one-token prefill.
+chunked-prefill row includes its TTFT cut over one-token prefill. Every
+variant is also recorded for ``run.py --only serve --json
+BENCH_serve.json`` — the committed serving-perf trajectory the CI perf
+gate compares against.
 
 Scoring: ``repro.launch.serve.check_scoring_memory_class`` AOT-lowers the
 ``cross_entropy(..., loss="seq_logprob")`` scorer at an enlarged
@@ -39,7 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import record, row
 import repro.configs as configs
 from repro.models import transformer as T
 from repro.serve import Engine
@@ -149,12 +152,24 @@ def run(arch="llama3_2_3b", n_requests=12, slots=4, max_len=80,
     row(f"serve/{arch}/chunked_prefill", dp / max(tp, 1) * 1e6,
         f"{tp / dp:.1f} tok/s ttft={fp * 1e3:.0f}ms "
         f"(chunk={prefill_chunk}) ttft_cut={fc / max(fp, 1e-9):.2f}x")
+    # perf-trajectory rows (run.py --json BENCH_serve.json); wall_s is the
+    # full workload wall so the gate tracks end-to-end serving time
+    geom = f"arch={arch} reqs={n_requests} slots={slots} max_len={max_len}"
+    for config, (tok, dt, ttft) in [
+            ("lockstep", (tl, dl, fl)),
+            ("continuous", (tc, dc, fc)),
+            (f"chunked_prefill@{prefill_chunk}", (tp, dp, fp))]:
+        record("serve", config, geometry=geom, wall_s=dt,
+               memory_class="O(N·D + V·D)", tok_s=tok / dt,
+               ttft_ms=ttft * 1e3, tokens=tok)
 
     # scoring-path memory gate (same discipline as loss_zoo_memory)
     from repro.launch.serve import check_scoring_memory_class
     ok = check_scoring_memory_class(cfg, impl="cce_jax", quiet=True)
     row(f"serve/{arch}/scoring_memclass", 0,
         "O(N.D+V.D) OK" if ok else "NxV MATERIALIZED!")
+    record("serve", "scoring", geometry=geom,
+           memory_class="O(N·D + V·D)" if ok else "O(N·V)")
     if not ok:
         raise AssertionError(
             "scoring path materialized an NxV buffer — the CCE lowering "

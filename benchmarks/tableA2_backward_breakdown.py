@@ -129,10 +129,11 @@ def run():
         f"{max(0.0, (f_bwd - 3*mm))/f_bwd:.2%} "
         f"(softmax+softcap chain; paper: ~10%)")
     row("tableA2/fwd_GFLOP", 0, f"{f_fwd/1e9:.1f} (1x NVD matmul + LSE)")
-    record("tableA2", "scan_twin_fwd", flops=f_fwd,
+    paper_geom = f"N={N} D={D} V={V}"
+    record("tableA2", "scan_twin_fwd", geometry=paper_geom, flops=f_fwd,
            memory_class="O(N·D + V·D)")
-    record("tableA2", "scan_twin_bwd_full", flops=f_bwd,
-           memory_class="O(N·D + V·D)")
+    record("tableA2", "scan_twin_bwd_full", geometry=paper_geom,
+           flops=f_bwd, memory_class="O(N·D + V·D)")
 
     # ---- four-way bwd strategy comparison (executed-FLOP model) ----------
     E, C, x, g = ref.peaked_problem(MN, MD, MV, hot=96, seed=0)
@@ -162,7 +163,8 @@ def run():
             f"{fl/1e9:.1f} GFLOP / ~{traffic[(bwd, stats)]/1e9:.1f} GB HBM "
             f"@ paper geometry; wall {w*1e3:.0f}ms (interpret, reduced "
             f"geometry)")
-        record("tableA2", f"bwd={bwd},filter_stats={stats}", flops=fl,
+        record("tableA2", f"bwd={bwd},filter_stats={stats}",
+               geometry=paper_geom, flops=fl,
                wall_s=w, memory_class="O(N·D + V·D)",
                hbm_bytes=traffic[(bwd, stats)],
                live_frac=f_bm if stats == "fwd_bitmap" else f_rec)
@@ -197,10 +199,11 @@ def run():
     row("tableA2/fwd_bitmap_overhead", 0,
         f"bitmap adds {(-(-MN // MBN)) * nvb * 4} bytes / "
         f"{(w1-w0)*1e3:+.0f}ms interpret wall")
-    record("tableA2", "fwd_pallas", wall_s=w0, flops=f_fwd,
-           memory_class="O(N·D + V·D)")
-    record("tableA2", "fwd_pallas+bitmap", wall_s=w1, flops=f_fwd,
-           memory_class="O(N·D + V·D)")
+    reduced_geom = f"N={MN} D={MD} V={MV} bn={MBN} bv={MBV}"
+    record("tableA2", "fwd_pallas", geometry=reduced_geom, wall_s=w0,
+           flops=f_fwd, memory_class="O(N·D + V·D)")
+    record("tableA2", "fwd_pallas+bitmap", geometry=reduced_geom,
+           wall_s=w1, flops=f_fwd, memory_class="O(N·D + V·D)")
 
 
 if __name__ == "__main__":

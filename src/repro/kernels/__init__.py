@@ -10,7 +10,9 @@ Layout per repo convention:
 from repro.kernels.ops import (  # noqa: F401
     CCEConfig,
     choose_blocks,
+    kernel_plan,
     linear_cross_entropy_pallas,
+    live_block_bitmap,
     lse_and_pick_pallas,
     lse_pick_sum_pallas,
     vmem_working_set,

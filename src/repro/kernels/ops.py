@@ -355,6 +355,58 @@ def lse_pick_sum_pallas(E, C, x, cfg: CCEConfig | None = None, **overrides):
     return _flatten_call(E, C, x, cfg, True)
 
 
+# ----------------------------------------------------------------------------
+# Kernel observables (repro.obs): the quantities the paper plots, exposed as
+# cheap probes a metrics registry can gauge — live-block fraction (Fig. 3's
+# softmax sparsity as a live training metric), the resolved block plan, and
+# its VMEM working set.
+# ----------------------------------------------------------------------------
+
+def kernel_plan(n_tokens: int, vocab: int, d: int, itemsize: int = 4,
+                cfg: CCEConfig | None = None,
+                want_sum: bool = False) -> dict:
+    """The static execution plan the kernels would use at this geometry:
+    resolved ``(block_n, block_v)``, backward strategy, and the VMEM
+    working set :func:`choose_blocks` charged — what
+    ``repro.obs.kernels.record_cce_gauges`` exports."""
+    cfg = cfg or CCEConfig()
+    plan = _bwd_plan(cfg, want_sum)
+    bn, bv = _resolve_blocks(cfg, n_tokens, vocab, d, itemsize, want_sum)
+    ws = vmem_working_set(
+        bn, bv, d, itemsize, accum_rows=2 if plan.fused else 1,
+        with_sum=want_sum, emit_bitmap=plan.emit_bitmap, vocab=vocab,
+        kahan=cfg.accum == "bf16_kahan")
+    return {"block_n": bn, "block_v": bv, "fused": plan.fused,
+            "emit_bitmap": plan.emit_bitmap,
+            "vmem_working_set_bytes": ws,
+            "vmem_budget_bytes": _VMEM_BUDGET}
+
+
+def live_block_bitmap(E, C, x, cfg: CCEConfig | None = None):
+    """Run the forward kernel with bitmap emission and return
+    ``(bitmap, (block_n, block_v))`` — ``bitmap`` a boolean
+    ``(cdiv(N, block_n), cdiv(V, block_v))`` array, True where the
+    backward would visit the block (the conservative superset of paper
+    Alg. 4's ``max|S - onehot| >= eps`` statistic; see DESIGN.md §7).
+
+    ``bitmap.mean()`` is the live-block fraction — paper Fig. 3's softmax
+    sparsity, observable during training without materializing softmax.
+    """
+    cfg = cfg or CCEConfig()
+    if E.ndim == 3:
+        E = E.reshape(-1, E.shape[-1])
+        x = x.reshape(-1)
+    n_tokens, d = E.shape
+    vocab = C.shape[0]
+    bn, bv = _resolve_blocks(cfg, n_tokens, vocab, d, E.dtype.itemsize)
+    safe_x = jnp.where(x == IGNORE_INDEX, 0, x)
+    *_, bitmap = cce_fwd.cce_forward_pallas(
+        E, C, safe_x, softcap=cfg.softcap, block_n=bn, block_v=bv,
+        emit_bitmap=True, filter_eps=cfg.filter_eps,
+        interpret=cfg.resolved_interpret())
+    return bitmap != 0, (bn, bv)
+
+
 def linear_cross_entropy_pallas(E, C, x, cfg: CCEConfig | None = None,
                                 **overrides):
     """Per-token NLL, shape x.shape, f32, via the CCE Pallas kernels;

@@ -1,0 +1,54 @@
+"""Shared ``--metrics-*`` CLI flags -> a wired-up observability stack.
+
+Used by ``launch/serve`` and ``launch/train`` (same idiom as
+``launch/cce_flags``):
+
+  --metrics-jsonl PATH   flight-recorder JSONL trace: per-request/step
+                         spans + events while running, one final metrics
+                         snapshot at shutdown (repro.obs.trace format).
+  --metrics-port N       Prometheus scrape endpoint at
+                         http://127.0.0.1:N/metrics for the lifetime of
+                         the process (N=0 picks a free port and prints it).
+
+``obs_from_args`` returns ``(metrics, tracer, finish)`` — registry/tracer
+are ``None`` when no flag was given (subsystems then run their free no-op
+path), and ``finish()`` flushes the final snapshot and closes the sink.
+"""
+
+from __future__ import annotations
+
+from repro.obs import JsonlSink, Registry, Tracer, start_http_server
+
+
+def add_obs_args(ap) -> None:
+    g = ap.add_argument_group("observability")
+    g.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                   help="write metrics snapshots + trace spans to this "
+                        "JSONL file (flight recorder)")
+    g.add_argument("--metrics-port", type=int, default=None, metavar="N",
+                   help="serve Prometheus text exposition at "
+                        "http://127.0.0.1:N/metrics (0 = pick a port)")
+
+
+def obs_from_args(args):
+    """(metrics, tracer, finish) from parsed args; (None, None, no-op)
+    when observability was not requested."""
+    if args.metrics_jsonl is None and args.metrics_port is None:
+        return None, None, lambda: None
+    registry = Registry()
+    sink = JsonlSink(args.metrics_jsonl) if args.metrics_jsonl else None
+    tracer = Tracer(sink)
+    server = None
+    if args.metrics_port is not None:
+        server = start_http_server(registry, args.metrics_port)
+        print(f"# metrics: http://127.0.0.1:"
+              f"{server.server_address[1]}/metrics")
+
+    def finish():
+        tracer.snapshot(registry)
+        if sink is not None:
+            sink.close()
+        if server is not None:
+            server.shutdown()
+
+    return registry, tracer, finish

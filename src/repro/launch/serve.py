@@ -17,6 +17,14 @@ Decode (default mode) — sampled generation over the slot scheduler:
   and submits each request when the engine reaches its ``arrive_step`` —
   requests join mid-flight, finished rows leave and their slot is reused.
 
+  Observability: ``--metrics-jsonl trace.jsonl`` records per-request
+  spans (submit -> retire, with slot/TTFT attribution), queue/slot
+  gauges, TTFT + inter-token-latency histograms and a final metrics
+  snapshot — all derived from the engine's existing one-sync-per-step
+  status pull, so enabling it adds zero device transfers (asserted by
+  tests/test_serve.py). ``--metrics-port N`` additionally serves live
+  Prometheus text at ``/metrics``.
+
 Scoring (--score) — rank candidate completions by log p(completion|prompt)
 through the CCE primitive (no (B, S, V) logits at any point):
 
@@ -38,6 +46,7 @@ import jax
 
 import repro.configs as configs
 from repro import backends
+from repro.launch.obs_flags import add_obs_args, obs_from_args
 from repro.models import transformer as T
 from repro.serve import Engine, SamplingParams, scoring
 
@@ -87,9 +96,11 @@ def _decode_mode(args, cfg, params):
         sys.exit(f"--sync-every must be >= 1, got {args.sync_every}")
     if args.prefill_chunk < 1:
         sys.exit(f"--prefill-chunk must be >= 1, got {args.prefill_chunk}")
+    metrics, tracer, obs_finish = obs_from_args(args)
     eng = Engine(cfg, params, max_len=args.max_len,
                  batch_size=args.batch_size,
-                 prefill_chunk=args.prefill_chunk)
+                 prefill_chunk=args.prefill_chunk,
+                 metrics=metrics, tracer=tracer)
     base = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                           top_p=args.top_p, seed=args.seed)
     pending = []          # [(arrive_step, submit_kwargs)]
@@ -120,6 +131,13 @@ def _decode_mode(args, cfg, params):
         arrive, prompt = rids[rid]
         print(f"req {rid} (arrived step {arrive}) prompt {prompt} -> "
               f"{c.tokens}  [{c.finish_reason}]")
+    if metrics is not None:
+        fin = metrics.total("serve_requests_finished_total")
+        gen = metrics.total("serve_generated_tokens_total")
+        h = metrics.histogram("serve_ttft_seconds")
+        print(f"# telemetry: {fin:.0f} finished, {gen:.0f} tokens "
+              f"generated, mean TTFT {1e3 * h.mean:.1f} ms")
+    obs_finish()
     return 0
 
 
@@ -224,6 +242,7 @@ def main():
     ap.add_argument("--check-memory-class", action="store_true",
                     help="fail unless the scorer HLO stays out of the "
                          "N×V memory class (CI gate)")
+    add_obs_args(ap)
     args = ap.parse_args()
 
     cfg = (configs.get_reduced_config(args.arch) if args.reduced

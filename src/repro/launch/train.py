@@ -7,7 +7,13 @@
       [--loss-kwargs '{"eps": 0.1}'] \
       [--cce-sort-vocab] [--cce-filter-mode-e filtered|full] \
       [--cce-filter-mode-c filtered|full] [--cce-accum f32|bf16_kahan|bf16] \
-      [--cce-bwd two_pass|fused] [--cce-filter-stats recompute|fwd_bitmap]
+      [--cce-bwd two_pass|fused] [--cce-filter-stats recompute|fwd_bitmap] \
+      [--metrics-jsonl trace.jsonl] [--metrics-port N]
+
+``--metrics-jsonl`` turns on the flight recorder: one structured
+``train_step`` record per log boundary (loss, grad norm, step wall,
+device-side tokens/s) plus a final metrics snapshot; ``--metrics-port``
+serves the same registry as live Prometheus text at ``/metrics``.
 
 The training loss comes from the ``repro.losses`` registry — every entry
 lowers onto the CCE (lse, pick[, sum]) primitive, so switching losses never
@@ -28,6 +34,7 @@ import repro.configs as configs
 from repro import backends
 from repro.configs.base import TrainConfig
 from repro.launch.cce_flags import add_cce_args, cce_config_from_args
+from repro.launch.obs_flags import add_obs_args, obs_from_args
 from repro.losses import LossConfig, list_losses
 from repro.train import Trainer
 
@@ -53,6 +60,7 @@ def main():
                          '\'{"z_weight": 1e-4}\'')
     ap.add_argument("--dtype", default=None)
     add_cce_args(ap)
+    add_obs_args(ap)
     args = ap.parse_args()
 
     cfg = (configs.get_reduced_config(args.arch) if args.reduced
@@ -66,13 +74,16 @@ def main():
                        warmup_steps=max(args.steps // 20, 1),
                        microbatch=args.microbatch,
                        loss=loss_cfg.name, loss_kwargs=loss_cfg.kwargs)
+    metrics, tracer, obs_finish = obs_from_args(args)
     tr = Trainer(cfg, tcfg, checkpoint_dir=args.ckpt, seq_len=args.seq,
                  global_batch=args.batch,
-                 cce_cfg=cce_config_from_args(args))
+                 cce_cfg=cce_config_from_args(args),
+                 metrics=metrics, tracer=tracer)
     tr.install_signal_handlers()
     tr.run(num_steps=args.steps)
     if args.ckpt:
         tr.save()
+    obs_finish()
 
 
 if __name__ == "__main__":

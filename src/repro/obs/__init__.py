@@ -1,0 +1,36 @@
+"""repro.obs — flight-recorder observability: metrics + tracing.
+
+The paper's whole pitch is a measured claim (24 GB -> 1 MB for the loss,
+no throughput lost); this package makes the system answer "what is
+tokens/s, TTFT, or the live-block fraction *right now*" without an ad-hoc
+benchmark run. Three pieces (DESIGN.md §8):
+
+  * :mod:`repro.obs.metrics` — counters/gauges/histograms behind a
+    :class:`Registry`; the :data:`NULL` registry is the disabled path
+    (no-op methods, zero recompiles, zero branches in hot loops).
+  * :mod:`repro.obs.trace` — span-based tracing into a JSONL event sink
+    (:class:`JsonlSink`); keyed spans cover lifecycles that cross frames
+    (a serve request from admission to retirement).
+  * :mod:`repro.obs.prom` — Prometheus text exposition + an optional
+    ``/metrics`` scrape endpoint (stdlib-only).
+  * :mod:`repro.obs.kernels` — the CCE observables the paper plots
+    (live-block fraction, VMEM working set, per-backend memory class)
+    recorded as gauges.
+
+Instrumented layers: ``serve.engine``/``serve.scheduler`` (per-step
+telemetry piggybacked on the engine's single host sync — metrics add zero
+``device_get``s), ``train.trainer`` (structured step records), and the
+kernel probes above. Hard invariant, asserted by tests/test_serve.py:
+enabling metrics never adds a host sync or a jit recompile.
+"""
+
+from repro.obs.metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    NULL,
+    NullRegistry,
+    Registry,
+)
+from repro.obs.prom import exposition, start_http_server  # noqa: F401
+from repro.obs.trace import JsonlSink, Tracer, read_jsonl  # noqa: F401

@@ -1,0 +1,211 @@
+"""Low-overhead metrics: counters, gauges, histograms behind one registry.
+
+Design constraints (DESIGN.md §8):
+
+  * **Zero-sync**: instruments only ever record values the host already
+    holds — a metric call must never force a ``device_get``. The serve
+    engine piggybacks all of its telemetry on the single per-step status
+    sync it performs anyway; the trainer accumulates its one extra scalar
+    device-side and materializes it only at log boundaries.
+  * **Disabled is free**: the no-op twin (:data:`NULL`) implements the
+    whole surface with empty methods, so instrumented code is written
+    unconditionally (``self.metrics.counter(...)``) and a disabled engine
+    runs the identical jitted computation — no recompiles, no branches in
+    hot loops (asserted by tests/test_serve.py).
+  * **Host-only**: pure Python floats/ints; nothing here imports JAX.
+
+Instruments are memoized by ``(name, labels)``, so ``registry.counter("x")``
+in a loop is a dict hit, not an allocation. Exposition formats live in
+:mod:`repro.obs.prom` (Prometheus text) and :mod:`repro.obs.trace`
+(JSONL snapshots).
+"""
+
+from __future__ import annotations
+
+import bisect
+import threading
+import time
+
+# Prometheus-style default buckets, extended down to 100us: serve steps at
+# reduced-config sizes land in the 1-50ms range and TTFT in 10ms-2s.
+DEFAULT_BUCKETS = (.0001, .00025, .0005, .001, .0025, .005, .01, .025,
+                   .05, .1, .25, .5, 1.0, 2.5, 5.0, 10.0)
+
+
+class Counter:
+    """Monotonically increasing value (events, tokens, requests)."""
+
+    __slots__ = ("name", "labels", "value")
+
+    def __init__(self, name: str, labels: tuple = ()):
+        self.name, self.labels, self.value = name, labels, 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        if amount < 0:
+            raise ValueError(f"counter {self.name} cannot decrease "
+                             f"(inc({amount}))")
+        self.value += amount
+
+
+class Gauge:
+    """Last-written value (queue depth, occupancy, live-block fraction)."""
+
+    __slots__ = ("name", "labels", "value")
+
+    def __init__(self, name: str, labels: tuple = ()):
+        self.name, self.labels, self.value = name, labels, 0.0
+
+    def set(self, value: float) -> None:
+        self.value = float(value)
+
+    def inc(self, amount: float = 1.0) -> None:
+        self.value += amount
+
+    def dec(self, amount: float = 1.0) -> None:
+        self.value -= amount
+
+
+class Histogram:
+    """Cumulative-bucket histogram (Prometheus semantics: each bucket
+    counts observations <= its upper bound; +Inf is implicit via
+    ``count``). ``observe`` is two list lookups and three adds."""
+
+    __slots__ = ("name", "labels", "buckets", "counts", "sum", "count")
+
+    def __init__(self, name: str, labels: tuple = (),
+                 buckets: tuple = DEFAULT_BUCKETS):
+        self.name, self.labels = name, labels
+        self.buckets = tuple(sorted(buckets))
+        self.counts = [0] * len(self.buckets)
+        self.sum, self.count = 0.0, 0
+
+    def observe(self, value: float) -> None:
+        i = bisect.bisect_left(self.buckets, value)
+        if i < len(self.counts):
+            self.counts[i] += 1
+        self.sum += value
+        self.count += 1
+
+    def cumulative(self) -> list:
+        """[(upper_bound, cumulative_count)] in Prometheus ``le`` order."""
+        out, acc = [], 0
+        for ub, c in zip(self.buckets, self.counts):
+            acc += c
+            out.append((ub, acc))
+        return out
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+
+def _label_key(labels: dict | None) -> tuple:
+    return tuple(sorted((str(k), str(v)) for k, v in (labels or {}).items()))
+
+
+class Registry:
+    """The metric namespace: memoizing factory + snapshot/exposition root.
+
+    One registry per subsystem instance (an :class:`~repro.serve.engine.
+    Engine`, a :class:`~repro.train.trainer.Trainer`) or one per process —
+    both work; names are only required to be unique *within* a registry
+    (same name + same labels returns the same instrument; same name with a
+    different type raises).
+    """
+
+    enabled = True
+
+    def __init__(self):
+        self._metrics: dict = {}
+        self._lock = threading.Lock()
+
+    def _get(self, cls, name: str, labels: dict | None, **kw):
+        key = (name, _label_key(labels))
+        m = self._metrics.get(key)
+        if m is None:
+            with self._lock:
+                m = self._metrics.get(key)
+                if m is None:
+                    m = cls(name, key[1], **kw)
+                    self._metrics[key] = m
+        if type(m) is not cls:
+            raise TypeError(
+                f"metric {name!r} already registered as "
+                f"{type(m).__name__}, requested {cls.__name__}")
+        return m
+
+    def counter(self, name: str, labels: dict | None = None) -> Counter:
+        return self._get(Counter, name, labels)
+
+    def gauge(self, name: str, labels: dict | None = None) -> Gauge:
+        return self._get(Gauge, name, labels)
+
+    def histogram(self, name: str, labels: dict | None = None,
+                  buckets: tuple = DEFAULT_BUCKETS) -> Histogram:
+        return self._get(Histogram, name, labels, buckets=buckets)
+
+    def collect(self) -> list:
+        """All instruments, sorted by (name, labels) — the stable order
+        both exposition formats share."""
+        return [self._metrics[k] for k in sorted(self._metrics)]
+
+    def snapshot(self, ts: float | None = None) -> dict:
+        """One JSON-ready record of every instrument's current value —
+        the payload :class:`repro.obs.trace.JsonlSink` writes as a
+        ``{"type": "metrics"}`` event."""
+        out = {"type": "metrics",
+               "ts": time.time() if ts is None else ts, "metrics": []}
+        for m in self.collect():
+            rec = {"name": m.name, "labels": dict(m.labels)}
+            if isinstance(m, Histogram):
+                rec.update(kind="histogram", sum=m.sum, count=m.count,
+                           buckets=[[ub, c] for ub, c in m.cumulative()])
+            else:
+                rec.update(kind=type(m).__name__.lower(), value=m.value)
+            out["metrics"].append(rec)
+        return out
+
+    def value(self, name: str, labels: dict | None = None) -> float:
+        """Test/debug convenience: current value of a counter/gauge."""
+        return self._metrics[(name, _label_key(labels))].value
+
+    def total(self, name: str) -> float:
+        """Sum of a counter/gauge across all of its label sets (0.0 when
+        the name was never registered)."""
+        return sum(m.value for (n, _), m in self._metrics.items()
+                   if n == name)
+
+
+class _NullInstrument:
+    """One shared do-nothing instrument: every mutator is a no-op."""
+
+    __slots__ = ()
+    name, labels, value, sum, count, mean = "", (), 0.0, 0.0, 0, 0.0
+
+    def inc(self, amount: float = 1.0) -> None: pass
+    def dec(self, amount: float = 1.0) -> None: pass
+    def set(self, value: float) -> None: pass
+    def observe(self, value: float) -> None: pass
+    def cumulative(self) -> list: return []
+
+
+class NullRegistry(Registry):
+    """The disabled path: hands out one shared no-op instrument, collects
+    nothing. Instrumented code holds a registry unconditionally and pays a
+    method call that does no work — never a branch, never an allocation."""
+
+    enabled = False
+    _NULL_INSTRUMENT = _NullInstrument()
+
+    def __init__(self):
+        super().__init__()
+
+    def _get(self, cls, name, labels, **kw):
+        return self._NULL_INSTRUMENT
+
+    def collect(self) -> list:
+        return []
+
+
+#: Shared no-op registry; ``metrics or NULL`` is the canonical default.
+NULL = NullRegistry()

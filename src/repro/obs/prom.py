@@ -1,0 +1,106 @@
+"""Prometheus text exposition (format 0.0.4) + optional scrape endpoint.
+
+``exposition(registry)`` renders every instrument in the registry:
+
+    # TYPE serve_ttft_seconds histogram
+    serve_ttft_seconds_bucket{le="0.01"} 3
+    ...
+    serve_ttft_seconds_sum 0.042
+    serve_ttft_seconds_count 5
+    # TYPE serve_queue_depth gauge
+    serve_queue_depth 2
+
+``start_http_server(registry, port)`` serves it at ``/metrics`` from a
+daemon thread (stdlib ``http.server`` only — no dependency; this is a
+debug/scrape endpoint, not a production ingress). Returns the server so
+callers can read the bound port (``server.server_address[1]``, useful with
+``port=0``) and ``shutdown()`` it.
+"""
+
+from __future__ import annotations
+
+import http.server
+import threading
+
+from repro.obs.metrics import Counter, Gauge, Histogram, Registry
+
+
+def _fmt_value(v: float) -> str:
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return repr(float(v))
+
+
+def _fmt_labels(labels: tuple, extra: tuple = ()) -> str:
+    items = tuple(labels) + tuple(extra)
+    if not items:
+        return ""
+    body = ",".join(
+        '%s="%s"' % (k, str(v).replace("\\", r"\\").replace('"', r"\""))
+        for k, v in items)
+    return "{%s}" % body
+
+
+def exposition(registry: Registry) -> str:
+    """Render the whole registry in Prometheus text format."""
+    lines: list = []
+    seen_type: set = set()
+    for m in registry.collect():
+        if isinstance(m, Histogram):
+            kind = "histogram"
+        elif isinstance(m, Counter):
+            kind = "counter"
+        elif isinstance(m, Gauge):
+            kind = "gauge"
+        else:                                   # pragma: no cover
+            continue
+        if m.name not in seen_type:
+            lines.append(f"# TYPE {m.name} {kind}")
+            seen_type.add(m.name)
+        if isinstance(m, Histogram):
+            for ub, c in m.cumulative():
+                lines.append(
+                    f"{m.name}_bucket"
+                    f"{_fmt_labels(m.labels, (('le', _fmt_value(ub)),))}"
+                    f" {c}")
+            lines.append(f"{m.name}_bucket"
+                         f"{_fmt_labels(m.labels, (('le', '+Inf'),))}"
+                         f" {m.count}")
+            lines.append(f"{m.name}_sum{_fmt_labels(m.labels)} "
+                         f"{_fmt_value(m.sum)}")
+            lines.append(f"{m.name}_count{_fmt_labels(m.labels)} "
+                         f"{m.count}")
+        else:
+            lines.append(f"{m.name}{_fmt_labels(m.labels)} "
+                         f"{_fmt_value(m.value)}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+class _MetricsHandler(http.server.BaseHTTPRequestHandler):
+    registry: Registry = None       # set per server subclass
+
+    def do_GET(self):               # noqa: N802 (stdlib naming)
+        if self.path.rstrip("/") not in ("", "/metrics"):
+            self.send_error(404)
+            return
+        body = exposition(self.registry).encode()
+        self.send_response(200)
+        self.send_header("Content-Type",
+                         "text/plain; version=0.0.4; charset=utf-8")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, *args):   # quiet: scrapes are not stdout news
+        pass
+
+
+def start_http_server(registry: Registry, port: int = 0,
+                      addr: str = "127.0.0.1"):
+    """Serve ``exposition(registry)`` at /metrics from a daemon thread."""
+    handler = type("Handler", (_MetricsHandler,), {"registry": registry})
+    server = http.server.ThreadingHTTPServer((addr, port), handler)
+    thread = threading.Thread(target=server.serve_forever, daemon=True,
+                              name="repro-obs-metrics")
+    thread.start()
+    return server

@@ -1,0 +1,146 @@
+"""Span-based tracing with a JSONL event sink (DESIGN.md §8).
+
+Event stream format — one JSON object per line, every record carrying a
+``type`` and a ``ts`` (unix seconds, float):
+
+  {"type": "event", "ts": ..., "name": ..., ...attrs}
+  {"type": "span",  "ts": <start>, "dur": <seconds>, "name": ..., ...attrs}
+  {"type": "metrics", "ts": ..., "metrics": [...]}   (registry snapshots)
+
+Spans come in two shapes:
+
+  * lexical — ``with tracer.span("scorer"):`` for work enclosed by one
+    frame;
+  * keyed — ``tracer.begin("request", key)`` ... ``tracer.end(key)`` for
+    lifecycles that cross function boundaries (a serve request lives from
+    admission to retirement across many engine steps). ``annotate`` adds
+    attributes mid-flight; ``end`` emits the single ``span`` record, with
+    an optional explicit ``ts_end`` so the emitter can attribute the end
+    to a reconstructed device-step time instead of "now" (how the engine
+    keeps per-request spans honest under ``--sync-every > 1``).
+
+The sink is explicitly flushed per record by default: a crashed run keeps
+its flight-recorder tail, which is the point of having one. A ``Tracer``
+with no sink is a no-op (cheap enough to leave in production paths), so
+callers hold a tracer unconditionally, mirroring ``metrics.NULL``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import threading
+import time
+
+
+class JsonlSink:
+    """Append-only JSONL writer; thread-safe, one ``write()`` per event."""
+
+    def __init__(self, path, *, flush_every: int = 1):
+        self._f = open(path, "a")
+        self.path = path
+        self._lock = threading.Lock()
+        self._flush_every = max(1, int(flush_every))
+        self._pending = 0
+
+    def write(self, record: dict) -> None:
+        line = json.dumps(record, separators=(",", ":"), sort_keys=True,
+                          default=float)
+        with self._lock:
+            self._f.write(line + "\n")
+            self._pending += 1
+            if self._pending >= self._flush_every:
+                self._f.flush()
+                self._pending = 0
+
+    def close(self) -> None:
+        with self._lock:
+            self._f.flush()
+            self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class Tracer:
+    """Emits event/span records to a sink; no sink -> every call no-ops."""
+
+    def __init__(self, sink: JsonlSink | None = None, *, clock=time.time):
+        self.sink = sink
+        self._clock = clock
+        self._open: dict = {}          # key -> (name, t_start, attrs)
+
+    @property
+    def enabled(self) -> bool:
+        return self.sink is not None
+
+    def emit(self, record: dict) -> None:
+        if self.sink is not None:
+            self.sink.write(record)
+
+    def event(self, name: str, ts: float | None = None, **attrs) -> None:
+        if self.sink is None:
+            return
+        self.emit({"type": "event", "name": name,
+                   "ts": self._clock() if ts is None else ts, **attrs})
+
+    @contextlib.contextmanager
+    def span(self, name: str, **attrs):
+        if self.sink is None:
+            yield self
+            return
+        t0 = self._clock()
+        try:
+            yield self
+        finally:
+            self.emit({"type": "span", "name": name, "ts": t0,
+                       "dur": self._clock() - t0, **attrs})
+
+    # -- keyed spans (cross-frame lifecycles) ---------------------------
+
+    def begin(self, name: str, key, ts: float | None = None,
+              **attrs) -> None:
+        if self.sink is None:
+            return
+        self._open[key] = (name, self._clock() if ts is None else ts,
+                           dict(attrs))
+
+    def annotate(self, key, **attrs) -> None:
+        if self.sink is None or key not in self._open:
+            return
+        self._open[key][2].update(attrs)
+
+    def end(self, key, ts_end: float | None = None, **attrs) -> None:
+        if self.sink is None:
+            return
+        entry = self._open.pop(key, None)
+        if entry is None:
+            return
+        name, t0, acc = entry
+        acc.update(attrs)
+        t1 = self._clock() if ts_end is None else ts_end
+        self.emit({"type": "span", "name": name, "ts": t0,
+                   "dur": t1 - t0, **acc})
+
+    def snapshot(self, registry) -> None:
+        """Write the registry's current metric values as one record."""
+        if self.sink is not None:
+            self.emit(registry.snapshot(ts=self._clock()))
+
+
+#: Shared disabled tracer — the ``tracer or trace.NULL`` default.
+NULL = Tracer(None)
+
+
+def read_jsonl(path) -> list:
+    """Load a trace back (tests, offline analysis): list of dict records."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out

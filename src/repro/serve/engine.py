@@ -40,6 +40,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import transformer as T
+from repro.obs import metrics as M
+from repro.obs import trace as Tr
 from repro.serve import scheduler as sched
 from repro.serve.sampling import GREEDY, SamplingParams
 
@@ -103,12 +105,20 @@ class Engine:
     enc_out: optional encoder output for encoder-decoder models, shared by
         all rows (use a fresh engine per enc_out batch; rows map to slots
         in submission order).
+    metrics / tracer: a :class:`repro.obs.Registry` and
+        :class:`repro.obs.Tracer` for per-step telemetry (TTFT/ITL
+        histograms, queue/slot gauges, token-split counters, per-request
+        spans). All of it piggybacks on the ONE per-step host sync the
+        engine performs anyway — enabling metrics adds zero
+        ``device_get``s and zero jit recompiles (asserted by
+        tests/test_serve.py). Default: disabled (no-op twins).
     """
 
     def __init__(self, cfg, params, *, max_len: int = 512,
                  batch_size: int = 8, max_prompt_len: int | None = None,
                  max_new_cap: int | None = None, prefill_chunk: int = 1,
-                 enc_out=None):
+                 enc_out=None, metrics: M.Registry | None = None,
+                 tracer: Tr.Tracer | None = None):
         if enc_out is not None and enc_out.shape[0] != batch_size:
             raise ValueError(
                 f"enc_out has {enc_out.shape[0]} rows but the engine has "
@@ -123,9 +133,12 @@ class Engine:
         self.batch_size = batch_size
         self.prefill_chunk = int(prefill_chunk)
         self.enc_out = enc_out
+        self.metrics = metrics if metrics is not None else M.NULL
+        self.tracer = tracer if tracer is not None else Tr.NULL
+        self.metrics.gauge("serve_slots_total").set(batch_size)
         self.scheduler = sched.Scheduler(
             batch_size, max_prompt_len or max_len, max_new_cap or max_len,
-            cfg.vocab_size)
+            cfg.vocab_size, metrics=self.metrics, tracer=self.tracer)
         self.state = sched.init_state(batch_size,
                                       self.scheduler.max_prompt_len,
                                       self.scheduler.max_new_cap)
@@ -195,12 +208,16 @@ class Engine:
         """
         if substeps < 1:
             raise ValueError(f"substeps must be >= 1, got {substeps}")
-        self._times.append((self.step_count, time.time()))
+        t_start = time.time()
+        self._times.append((self.step_count, t_start))
         self.state, self.cache, rows = self.scheduler.admit(
             self.state, self.cache)
         for i in rows:
             self._prefill_left[i] = len(self.scheduler.slots[i].prompt)
             self.scheduler.slots[i].admit_step = self.step_count
+            self.tracer.annotate(self.scheduler.slots[i].rid,
+                                 admit_step=self.step_count)
+        prefill_toks = 0
         for _ in range(substeps):
             if self.prefill_chunk > 1 and any(
                     left > 1 for left in self._prefill_left):
@@ -216,11 +233,25 @@ class Engine:
                 used = 1
             for i, req in enumerate(self.scheduler.slots):
                 if req is not None and self._prefill_left[i] > 0:
-                    self._prefill_left[i] -= min(used,
-                                                 self._prefill_left[i])
+                    consumed = min(used, self._prefill_left[i])
+                    self._prefill_left[i] -= consumed
+                    prefill_toks += consumed
             self.step_count += 1
-        self._times.append((self.step_count, time.time()))
+        t_end = time.time()
+        self._times.append((self.step_count, t_end))
         self._prune_times()
+        # per-step telemetry from host-side bookkeeping only: the prompt
+        # token split mirrors the deterministic prefill ledger (the device
+        # consumed exactly these tokens), the wall histogram spans the
+        # sync window this call just timed. Generated-token counts are
+        # exact at retirement (scheduler.retire), so no status beyond the
+        # usual _sync is ever pulled.
+        mets = self.metrics
+        if mets.enabled:
+            mets.counter("serve_engine_steps_total").inc(substeps)
+            mets.counter("serve_prefill_tokens_total").inc(prefill_toks)
+            mets.histogram("serve_step_wall_seconds").observe(
+                (t_end - t_start) / substeps)
         return self._sync()
 
     def _step_time(self, s: int) -> float:

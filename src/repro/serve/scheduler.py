@@ -33,6 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as T
+from repro.obs import metrics as M
+from repro.obs import trace as Tr
 from repro.serve import sampling as S
 
 NO_EOS = -1
@@ -215,11 +217,19 @@ class Scheduler:
     """Host-side request lifecycle: admission queue + slot bookkeeping."""
 
     def __init__(self, batch_size: int, max_prompt_len: int,
-                 max_new_cap: int, vocab_size: int):
+                 max_new_cap: int, vocab_size: int,
+                 metrics: M.Registry | None = None,
+                 tracer: Tr.Tracer | None = None):
         self.batch_size = batch_size
         self.max_prompt_len = max_prompt_len
         self.max_new_cap = max_new_cap
         self.vocab_size = vocab_size
+        # host-only telemetry (repro.obs): queue/slot gauges, request
+        # lifecycle counters + spans. Everything recorded here is state
+        # the scheduler already holds — never a device sync. The NULL
+        # registry/tracer make the disabled path free.
+        self.metrics = metrics if metrics is not None else M.NULL
+        self.tracer = tracer if tracer is not None else Tr.NULL
         self.queue: collections.deque = collections.deque()
         self.slots: List[Optional[Request]] = [None] * batch_size
         self._rid = itertools.count()
@@ -251,6 +261,11 @@ class Scheduler:
         req.rid = next(self._rid)
         req.submit_time = time.time()
         self.queue.append(req)
+        self.metrics.counter("serve_requests_submitted_total").inc()
+        self.metrics.gauge("serve_queue_depth").set(len(self.queue))
+        self.tracer.begin("request", req.rid, ts=req.submit_time,
+                          rid=req.rid, prompt_len=len(req.prompt),
+                          max_new=req.max_new_tokens)
         return req.rid
 
     @property
@@ -300,6 +315,16 @@ class Scheduler:
             rows.append(i)
             reqs.append(r)
         self.queue = kept
+        if rows:
+            now = time.time()
+            mets = self.metrics
+            mets.counter("serve_requests_admitted_total").inc(len(rows))
+            mets.gauge("serve_queue_depth").set(len(self.queue))
+            mets.gauge("serve_slots_occupied").set(self.running)
+            wait = mets.histogram("serve_queue_wait_seconds")
+            for i, r in zip(rows, reqs):
+                wait.observe(now - r.submit_time)
+                self.tracer.annotate(r.rid, slot=i)
         if not rows:
             return state, cache, rows
 
@@ -338,10 +363,14 @@ class Scheduler:
         ``out_host``/``n_out_host``/``finish_host`` are host copies."""
         comps = []
         now = time.time()
+        mets = self.metrics
+        ttft_h = mets.histogram("serve_ttft_seconds")
+        itl_h = mets.histogram("serve_itl_seconds")
+        gen_c = mets.counter("serve_generated_tokens_total")
         for i in rows:
             req = self.slots[i]
             n = int(n_out_host[i])
-            comps.append(Completion(
+            c = Completion(
                 rid=req.rid,
                 tokens=[int(t) for t in out_host[i][:n]],
                 prompt=req.prompt,
@@ -350,8 +379,27 @@ class Scheduler:
                 submit_time=req.submit_time,
                 first_token_time=req.first_token_time,
                 finish_time=now,
-            ))
+            )
+            comps.append(c)
             self.slots[i] = None
+            # telemetry from values already on host: TTFT attributed to
+            # the device-side first-token step (engine fills
+            # first_token_time before calling retire), ITL as the mean
+            # inter-token gap over the row's generated tokens.
+            gen_c.inc(n)
+            mets.counter("serve_requests_finished_total",
+                         {"reason": c.finish_reason}).inc()
+            ttft = None
+            if c.first_token_time is not None:
+                ttft = c.first_token_time - c.submit_time
+                ttft_h.observe(ttft)
+                if n > 1:
+                    itl_h.observe((now - c.first_token_time) / (n - 1))
+            self.tracer.end(
+                req.rid, ts_end=now, n_tokens=n,
+                finish_reason=c.finish_reason,
+                ttft_s=ttft, admit_step=req.admit_step)
+        mets.gauge("serve_slots_occupied").set(self.running)
         mask = np.zeros((self.batch_size,), bool)
         mask[rows] = True
         state = _apply_retirement(state, jnp.asarray(mask))

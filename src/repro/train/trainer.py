@@ -17,7 +17,10 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.kernels.ref import IGNORE_INDEX
 from repro.models import transformer as T
+from repro.obs import metrics as M
+from repro.obs import trace as Tr
 from repro.optim import adamw
 from repro.train.checkpoint import CheckpointManager
 
@@ -83,7 +86,13 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, loss_fn=None,
             grads, opt_state, params, lr=lr, b1=tcfg.beta1, b2=tcfg.beta2,
             eps=tcfg.eps, weight_decay=tcfg.weight_decay,
             grad_clip=tcfg.grad_clip)
-        metrics = {"loss": loss, "lr": lr, **om}
+        # n_tokens: the one extra scalar the observability layer rides on —
+        # valid (non-ignored) label count of this step, computed inside the
+        # already-compiled step so tokens/s accounting stays device-side
+        # and costs no extra sync (the Trainer accumulates it across steps
+        # and materializes the sum only at log boundaries).
+        n_tok = jnp.sum(batch["labels"] != IGNORE_INDEX).astype(jnp.float32)
+        metrics = {"loss": loss, "lr": lr, "n_tokens": n_tok, **om}
         return params, opt_state, metrics
 
     return step
@@ -101,8 +110,16 @@ class Trainer:
                  data: SyntheticLM | None = None, checkpoint_dir=None,
                  seq_len: int = 512, global_batch: int = 8, loss_fn=None,
                  loss_impl=None, mesh=None, vocab_axis: str = "model",
-                 token_axes=("data",), cce_cfg=None, jit: bool = True):
+                 token_axes=("data",), cce_cfg=None, jit: bool = True,
+                 metrics: M.Registry | None = None,
+                 tracer: Tr.Tracer | None = None):
         self.cfg, self.tcfg = cfg, tcfg
+        # observability (repro.obs): gauges/counters updated and one
+        # structured record emitted per log boundary — never per step, so
+        # enabling metrics adds no host syncs beyond the float() pulls
+        # the log line already performs.
+        self.metrics = metrics if metrics is not None else M.NULL
+        self.tracer = tracer if tracer is not None else Tr.NULL
         self.data = data or SyntheticLM(DataConfig(
             vocab_size=cfg.vocab_size, seq_len=seq_len,
             global_batch=global_batch, seed=tcfg.seed))
@@ -124,6 +141,7 @@ class Trainer:
         self.opt_state = adamw.adamw_init(self.params)
         self.step = 0
         self.history: list[dict] = []
+        self._tokens_total = 0.0
         if self.ckpt is not None:
             self._try_resume()
 
@@ -150,23 +168,63 @@ class Trainer:
 
     def run(self, num_steps: int | None = None, log_every: int = 10,
             log_fn=print):
+        """Drive the training loop, emitting one *structured* step record
+        per log boundary: ``{step, loss, lr, grad_norm, n_tokens,
+        step_wall_s, tokens_per_s, tokens_total}`` — appended to
+        ``self.history``, mirrored into the metrics registry (gauges +
+        counters + a step-wall histogram), written to the tracer sink as
+        a ``train_step`` event, and rendered through ``log_fn``.
+
+        Token accounting is device-side: each step's valid-label count is
+        one scalar in the jitted step output, accumulated on device and
+        materialized only here — logging adds no per-step host syncs.
+        """
         total = num_steps or self.tcfg.total_steps
+        tok_acc = jnp.zeros((), jnp.float32)    # device-side window sum
+        tokens_total = self._tokens_total
+        win_t0, win_step0 = time.time(), self.step
         while self.step < total and not self._preempted:
             batch = self.data.batch_at(self.step)
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
             self.params, self.opt_state, metrics = self.step_fn(
                 self.params, self.opt_state, batch, self.step)
+            tok_acc = tok_acc + metrics["n_tokens"]
             self.step += 1
             if self.step % log_every == 0 or self.step == total:
                 m = {k: float(v) for k, v in metrics.items()}
                 m["step"] = self.step
+                now = time.time()
+                wall = now - win_t0
+                n_win = self.step - win_step0
+                win_toks = float(tok_acc)
+                tokens_total += win_toks
+                m["step_wall_s"] = wall / max(n_win, 1)
+                m["tokens_per_s"] = win_toks / wall if wall > 0 else 0.0
+                m["tokens_total"] = tokens_total
                 self.history.append(m)
+                self._record(m, n_win, win_toks)
                 if log_fn:
-                    log_fn(f"step {self.step:5d} loss {m['loss']:.4f} "
-                           f"lr {m['lr']:.2e} gnorm {m['grad_norm']:.3f}")
+                    log_fn(f"step {m['step']:5d} loss {m['loss']:.4f} "
+                           f"lr {m['lr']:.2e} gnorm {m['grad_norm']:.3f} "
+                           f"{m['tokens_per_s']:.0f} tok/s")
+                tok_acc = jnp.zeros((), jnp.float32)
+                win_t0, win_step0 = now, self.step
             if (self.ckpt is not None and self.tcfg.checkpoint_every
                     and self.step % self.tcfg.checkpoint_every == 0):
                 self.save()
+        self._tokens_total = tokens_total
         if self._preempted:
             self.save()   # preemption-safe final checkpoint
         return self.history
+
+    def _record(self, m: dict, n_win: int, win_toks: float) -> None:
+        """Mirror one structured step record into the obs layer."""
+        mets = self.metrics
+        if mets.enabled:
+            for k in ("loss", "lr", "grad_norm", "tokens_per_s"):
+                mets.gauge(f"train_{k}").set(m[k])
+            mets.counter("train_steps_total").inc(n_win)
+            mets.counter("train_tokens_total").inc(win_toks)
+            mets.histogram("train_step_wall_seconds").observe(
+                m["step_wall_s"])
+        self.tracer.event("train_step", **m)

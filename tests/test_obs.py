@@ -1,0 +1,269 @@
+"""Observability subsystem (repro.obs): metrics semantics, the no-op
+disabled path, Prometheus exposition, the JSONL flight recorder, and the
+kernel/train instrumentation contracts (DESIGN.md §8)."""
+
+import json
+import threading
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.obs import (NULL, Counter, Gauge, Histogram, JsonlSink,
+                       NullRegistry, Registry, Tracer, exposition,
+                       read_jsonl, start_http_server)
+from repro.obs import kernels as obs_kernels
+
+
+# ---------------------------------------------------------------------------
+# Instruments + registry.
+# ---------------------------------------------------------------------------
+
+def test_counter_monotonic():
+    r = Registry()
+    c = r.counter("reqs")
+    c.inc()
+    c.inc(2.5)
+    assert r.value("reqs") == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_gauge_set_inc_dec():
+    g = Registry().gauge("depth")
+    g.set(4)
+    g.inc()
+    g.dec(2)
+    assert g.value == 3.0
+
+
+def test_histogram_cumulative_buckets():
+    h = Registry().histogram("lat", buckets=(0.01, 0.1, 1.0))
+    for v in (0.005, 0.05, 0.05, 0.5, 50.0):
+        h.observe(v)
+    # Prometheus le semantics: each bound counts observations <= it;
+    # the 50.0 lands only in the implicit +Inf (count)
+    assert h.cumulative() == [(0.01, 1), (0.1, 3), (1.0, 4)]
+    assert h.count == 5
+    assert h.sum == pytest.approx(50.605)
+    assert h.mean == pytest.approx(50.605 / 5)
+
+
+def test_registry_memoizes_and_labels():
+    r = Registry()
+    assert r.counter("x") is r.counter("x")
+    a = r.counter("x", {"impl": "cce"})
+    b = r.counter("x", {"impl": "dense"})
+    assert a is not b
+    a.inc(1)
+    b.inc(2)
+    assert r.value("x", {"impl": "cce"}) == 1
+    assert r.total("x") == 3          # across label sets (+ the bare one)
+    assert r.total("never_registered") == 0.0
+
+
+def test_registry_type_conflict_raises():
+    r = Registry()
+    r.counter("x")
+    with pytest.raises(TypeError):
+        r.gauge("x")
+
+
+def test_registry_snapshot_shape():
+    r = Registry()
+    r.counter("c").inc()
+    r.histogram("h", buckets=(1.0,)).observe(0.5)
+    snap = r.snapshot(ts=123.0)
+    assert snap["type"] == "metrics" and snap["ts"] == 123.0
+    by_name = {m["name"]: m for m in snap["metrics"]}
+    assert by_name["c"]["kind"] == "counter" and by_name["c"]["value"] == 1
+    assert by_name["h"]["kind"] == "histogram"
+    assert by_name["h"]["buckets"] == [[1.0, 1]]
+    json.dumps(snap)                  # JSON-ready, no numpy leakage
+
+
+def test_null_registry_is_inert():
+    assert NULL.enabled is False and isinstance(NULL, NullRegistry)
+    i = NULL.counter("x")
+    i.inc()
+    i.set(5)
+    i.observe(1.0)
+    assert NULL.collect() == [] and NULL.total("x") == 0.0
+    # instrumented code pattern: same call sites, zero registrations
+    assert NULL.histogram("h") is NULL.gauge("g")
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition + HTTP endpoint.
+# ---------------------------------------------------------------------------
+
+def test_exposition_format():
+    r = Registry()
+    r.counter("serve_tokens_total", {"kind": "gen"}).inc(5)
+    r.gauge("depth").set(2)
+    r.histogram("lat", buckets=(0.1, 1.0)).observe(0.05)
+    text = exposition(r)
+    assert '# TYPE serve_tokens_total counter' in text
+    assert 'serve_tokens_total{kind="gen"} 5' in text
+    assert "depth 2" in text
+    assert 'lat_bucket{le="0.1"} 1' in text
+    assert 'lat_bucket{le="+Inf"} 1' in text
+    assert "lat_count 1" in text
+
+
+def test_metrics_http_endpoint():
+    r = Registry()
+    r.counter("up").inc()
+    server = start_http_server(r, port=0)
+    try:
+        port = server.server_address[1]
+        body = urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/metrics", timeout=5).read().decode()
+        assert "up 1" in body
+    finally:
+        server.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Flight recorder: JSONL sink + tracer.
+# ---------------------------------------------------------------------------
+
+def test_jsonl_sink_roundtrip(tmp_path):
+    p = tmp_path / "t.jsonl"
+    with JsonlSink(p) as sink:
+        sink.write({"type": "event", "name": "a", "ts": 1.0})
+        sink.write({"type": "event", "name": "b", "ts": 2.0})
+    recs = read_jsonl(p)
+    assert [r["name"] for r in recs] == ["a", "b"]
+
+
+def test_tracer_lexical_and_keyed_spans(tmp_path):
+    p = tmp_path / "t.jsonl"
+    t = [0.0]
+    tr = Tracer(JsonlSink(p), clock=lambda: t[0])
+    with tr.span("compile", arch="x"):
+        t[0] = 2.0
+    tr.begin("request", key=7, ts=10.0, rid=7)
+    tr.annotate(7, slot=1)
+    tr.annotate(999)                        # unknown key: ignored
+    tr.end(7, ts_end=13.5, n_tokens=4)
+    tr.end(7)                               # double-end: ignored
+    tr.event("tick", step=3)
+    tr.sink.close()
+    spans = {r["name"]: r for r in read_jsonl(p)}
+    assert spans["compile"]["dur"] == pytest.approx(2.0)
+    assert spans["compile"]["arch"] == "x"
+    req = spans["request"]
+    assert (req["ts"], req["dur"]) == (10.0, 3.5)
+    assert req["slot"] == 1 and req["n_tokens"] == 4 and req["rid"] == 7
+    assert spans["tick"]["type"] == "event"
+
+
+def test_tracer_without_sink_is_noop():
+    tr = Tracer(None)
+    assert not tr.enabled
+    with tr.span("x"):
+        pass
+    tr.begin("a", 1)
+    tr.annotate(1, z=1)
+    tr.end(1)
+    tr.event("e")
+    tr.snapshot(Registry())                 # nothing to write, no error
+
+
+def test_sink_is_thread_safe(tmp_path):
+    p = tmp_path / "t.jsonl"
+    sink = JsonlSink(p)
+
+    def work(i):
+        for j in range(50):
+            sink.write({"type": "event", "name": f"w{i}", "j": j})
+
+    ts = [threading.Thread(target=work, args=(i,)) for i in range(4)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    sink.close()
+    assert len(read_jsonl(p)) == 200        # no torn/interleaved lines
+
+
+# ---------------------------------------------------------------------------
+# Kernel gauges: Fig. 3's sparsity as a live metric (acceptance criterion:
+# the gauge must match the kernels/ref.ref_block_live oracle on the
+# peaked problem).
+# ---------------------------------------------------------------------------
+
+def test_cce_gauges_match_alg4_oracle():
+    from repro.kernels import CCEConfig, ref
+
+    E, C, x, _ = ref.peaked_problem(128, 64, 1024, hot=96, seed=0)
+    cfg = CCEConfig(block_n=32, block_v=128)
+    reg = Registry()
+    vals = obs_kernels.record_cce_gauges(reg, E, C, x, cfg,
+                                         alg4_oracle=True)
+    # the gauge IS the bitmap fraction, and the opt-in oracle gauge IS the
+    # exact paper-Alg.-4 statistic — recompute both independently here
+    from repro.kernels import cce_bwd, ops
+    bm, (bn, bv) = ops.live_block_bitmap(E, C, x, cfg)
+    assert reg.value("cce_live_block_fraction") == pytest.approx(
+        float(np.asarray(bm).mean()))
+    rec = ref.ref_block_live(E, C, x, bn, bv, cfg.filter_eps
+                             if cfg.filter_eps is not None
+                             else cce_bwd.DEFAULT_FILTER_EPS,
+                             softcap=cfg.softcap)
+    assert reg.value("cce_live_block_fraction_alg4") == pytest.approx(
+        float(rec.mean()))
+    # superset contract: bitmap keeps everything Alg. 4 keeps
+    assert not np.any(rec & ~np.asarray(bm))
+    # the peaked problem must actually filter something, and the plan
+    # gauges must reflect the resolved blocks
+    assert 0.0 < vals["cce_live_block_fraction"] < 1.0
+    assert (vals["cce_block_n"], vals["cce_block_v"]) == (32, 128)
+    assert 0 < vals["cce_vmem_working_set_bytes"] \
+        <= vals["cce_vmem_budget_bytes"]
+
+
+def test_backend_memory_gauges_classify():
+    reg = Registry()
+    elems = obs_kernels.record_backend_memory_gauges(
+        reg, n=2048, d=256, v=16384, impls=("cce_jax", "dense"))
+    budget = reg.value("cce_backend_budget_elems")
+    assert reg.value("cce_backend_in_class", {"impl": "cce_jax"}) == 1.0
+    assert reg.value("cce_backend_in_class", {"impl": "dense"}) == 0.0
+    assert elems["cce_jax"] <= budget < elems["dense"]
+
+
+# ---------------------------------------------------------------------------
+# Trainer structured records.
+# ---------------------------------------------------------------------------
+
+def test_trainer_emits_structured_records(tmp_path):
+    import dataclasses
+
+    import repro.configs as configs
+    from repro.configs.base import TrainConfig
+    from repro.train import Trainer
+
+    cfg = dataclasses.replace(configs.get_reduced_config("gemma_2b"),
+                              dtype="float32")
+    reg = Registry()
+    sink = JsonlSink(tmp_path / "train.jsonl")
+    tr = Trainer(cfg, TrainConfig(total_steps=4, warmup_steps=1),
+                 seq_len=16, global_batch=2, metrics=reg,
+                 tracer=Tracer(sink))
+    hist = tr.run(num_steps=4, log_every=2, log_fn=None)
+    sink.close()
+
+    assert len(hist) == 2                  # steps 2 and 4
+    for m in hist:
+        for k in ("step", "loss", "lr", "grad_norm", "n_tokens",
+                  "step_wall_s", "tokens_per_s", "tokens_total"):
+            assert k in m, k
+    # 4 steps x 2 rows x 16 tokens, no ignored labels in synthetic data
+    assert reg.value("train_tokens_total") == hist[-1]["tokens_total"] \
+        == 4 * 2 * 16
+    assert reg.value("train_steps_total") == 4
+    assert reg.value("train_loss") == pytest.approx(hist[-1]["loss"])
+    assert reg.histogram("train_step_wall_seconds").count == 2
+    events = [r for r in read_jsonl(tmp_path / "train.jsonl")
+              if r.get("name") == "train_step"]
+    assert [e["step"] for e in events] == [2, 4]

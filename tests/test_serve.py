@@ -600,3 +600,73 @@ def test_cce_cli_flags_validate_against_dataclass():
         ap.parse_args(["--cce-accum", "f64"])   # not a CCEConfig choice
     with pytest.raises(SystemExit):
         ap.parse_args(["--cce-bwd", "atomic"])  # not a CCEConfig choice
+
+
+# ---------------------------------------------------------------------------
+# Observability: metrics must ride the existing per-step sync for free.
+# ---------------------------------------------------------------------------
+
+def test_one_host_transfer_per_step_with_metrics(model, monkeypatch,
+                                                 tmp_path):
+    """Enabling the full observability stack (registry + JSONL tracer)
+    must not add host transfers: still exactly one device_get per step
+    (2 on finishing steps) — the zero-sync invariant of DESIGN.md §8."""
+    from repro.obs import JsonlSink, Registry, Tracer, read_jsonl
+
+    cfg, params = model
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get",
+                        lambda x: calls.append(1) or real(x))
+    reg = Registry()
+    sink = JsonlSink(tmp_path / "serve.jsonl")
+    eng = Engine(cfg, params, max_len=64, batch_size=2,
+                 metrics=reg, tracer=Tracer(sink))
+    for p in PROMPTS[:2]:
+        eng.submit(p, max_new_tokens=4)
+    calls.clear()
+    comps = {}
+    while eng.has_work():
+        before = len(calls)
+        done = eng.step()
+        comps.update({c.rid: c for c in done})
+        assert len(calls) - before == (2 if done else 1), \
+            "metrics added host transfers to the decode loop"
+    sink.close()
+
+    # ...and the telemetry recorded through that one sync is right
+    assert reg.value("serve_generated_tokens_total") == 8       # 2 x 4
+    assert reg.total("serve_requests_finished_total") == 2
+    assert reg.value("serve_requests_finished_total",
+                     {"reason": "length"}) == 2
+    assert reg.histogram("serve_ttft_seconds").count == 2
+    assert reg.value("serve_slots_occupied") == 0               # all done
+    assert reg.value("serve_slots_total") == 2
+    assert reg.value("serve_prefill_tokens_total") == \
+        len(PROMPTS[0]) + len(PROMPTS[1])
+    spans = [r for r in read_jsonl(tmp_path / "serve.jsonl")
+             if r["type"] == "span" and r["name"] == "request"]
+    assert sorted(s["rid"] for s in spans) == sorted(comps)
+    for s in spans:
+        assert s["n_tokens"] == 4 and s["finish_reason"] == "length"
+        assert s["dur"] >= 0 and s["ttft_s"] >= 0
+
+
+def test_metrics_do_not_recompile_engine_step(model):
+    """The disabled->enabled transition must not touch the jitted step:
+    metrics are host-side only, so the module-level _engine_step cache
+    gains no entries when an instrumented engine reuses a warm config."""
+    from repro.obs import Registry
+    from repro.serve import engine as engine_mod
+
+    cfg, params = model
+    Engine(cfg, params, max_len=64, batch_size=2).generate(
+        PROMPTS[:2], 2)                                   # warm the cache
+    before = engine_mod._engine_step._cache_size()
+    eng = Engine(cfg, params, max_len=64, batch_size=2,
+                 metrics=Registry())
+    out = eng.generate(PROMPTS[:2], 2)
+    assert engine_mod._engine_step._cache_size() == before, \
+        "enabling metrics recompiled the engine step"
+    assert out == Engine(cfg, params, max_len=64,
+                         batch_size=2).generate(PROMPTS[:2], 2)
