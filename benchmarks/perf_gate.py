@@ -4,7 +4,7 @@ baseline (the in-repo perf trajectory, BENCH_kernels.json / BENCH_serve.json).
   PYTHONPATH=src python -m benchmarks.perf_gate BASELINE FRESH \
       [--wall-tol 1.5] [--strict-wall]
 
-Rows are matched by identity key ``(bench, config, geometry)``. Two checks
+Rows are matched by identity key ``(bench, config, geometry)``. Checks
 per matched pair:
 
   * **memory_class** — HARD FAIL (exit 1) on any regression. Classes are
@@ -15,6 +15,9 @@ per matched pair:
     noisy (and the kernels run in interpret mode on CPU), so a fresh wall
     beyond ``--wall-tol`` x baseline prints a warning; ``--strict-wall``
     upgrades it to a failure for controlled machines.
+  * **prefix_hit_rate** — HARD FAIL when a baseline row carries a
+    positive hit rate and the fresh row's is zero/absent: shared-prefix
+    page reuse went silently dead.
 
 Baseline rows with no fresh counterpart are reported (the fresh run may
 legitimately have been restricted via ``--only``); fresh rows with no
@@ -58,6 +61,15 @@ def compare(baseline: list[dict], fresh: list[dict], *,
             out["warnings"].append(
                 f"{name}: wall_s {bw:.4g} -> {fw:.4g} "
                 f"({fw / bw:.2f}x > {wall_tol:.2f}x tolerance)")
+        # prefix reuse — HARD FAIL when a baseline row demonstrated
+        # copy-free prefix hits and the fresh run shows none: the kvpool
+        # registry silently matching nothing is a correctness-adjacent
+        # perf cliff, not CI noise
+        bh, fh = b.get("prefix_hit_rate"), f.get("prefix_hit_rate")
+        if bh and not fh:
+            out["failures"].append(
+                f"{name}: prefix_hit_rate regressed {bh:.3g} -> "
+                f"{fh if fh is not None else 'absent'} (prefix reuse lost)")
     out["missing"] = ["/".join(k for k in key if k)
                       for key in sorted(set(base) - set(new))]
     out["new"] = ["/".join(k for k in key if k)

@@ -115,13 +115,16 @@ def _bench_lockstep(cfg, params, reqs, max_len, slots):
 
 
 def _bench_continuous(cfg, params, reqs, max_len, slots,
-                      prefill_chunk=1):
+                      prefill_chunk=1, engine_kw=None):
+    # warmup on a THROWAWAY engine: the step/admission jits are module-
+    # level so the timed engine inherits the compilations, while its pool
+    # stats and prefix registry start clean (warmup traffic must not
+    # pollute the measured hit rate)
+    warm = Engine(cfg, params, max_len=max_len, batch_size=slots,
+                  prefill_chunk=prefill_chunk, **(engine_kw or {}))
+    warm.generate([[1, 2] * max(1, prefill_chunk)] * len(reqs), 2)
     eng = Engine(cfg, params, max_len=max_len, batch_size=slots,
-                 prefill_chunk=prefill_chunk)
-    # warmup: same request count as the timed run, so the step jit AND the
-    # admission path's small host->device update ops are all compiled —
-    # prompts long enough to compile the chunked-prefill jit too
-    eng.generate([[1, 2] * max(1, prefill_chunk)] * len(reqs), 2)
+                 prefill_chunk=prefill_chunk, **(engine_kw or {}))
     rids = [eng.submit(p, max_new_tokens=m) for p, m in reqs]
     t0 = time.time()
     comps = eng.run()
@@ -129,7 +132,21 @@ def _bench_continuous(cfg, params, reqs, max_len, slots,
     total = sum(len(comps[r].tokens) for r in rids)
     ttfts = [comps[r].first_token_time - comps[r].submit_time
              for r in rids if comps[r].first_token_time]
-    return total, dt, float(np.mean(ttfts))
+    return total, dt, float(np.mean(ttfts)), eng
+
+
+def _prefix_workload(vocab, n_requests=12, prefix_len=24, tail_lo=4,
+                     tail_hi=9, seed=1):
+    """Many requests sharing one long system prompt — the dominant traffic
+    shape at scale, and the one copy-free prefix reuse targets."""
+    rng = np.random.default_rng(seed)
+    sys_prompt = list(rng.integers(1, vocab, size=prefix_len))
+    reqs = []
+    for _ in range(n_requests):
+        tail = list(rng.integers(1, vocab,
+                                 size=int(rng.integers(tail_lo, tail_hi))))
+        reqs.append((sys_prompt + tail, int(rng.integers(4, 9))))
+    return reqs
 
 
 def run(arch="llama3_2_3b", n_requests=12, slots=4, max_len=80,
@@ -140,9 +157,9 @@ def run(arch="llama3_2_3b", n_requests=12, slots=4, max_len=80,
     reqs = _workload(cfg.vocab_size, n_requests=n_requests)
 
     tl, dl, fl = _bench_lockstep(cfg, params, reqs, max_len, slots)
-    tc, dc, fc = _bench_continuous(cfg, params, reqs, max_len, slots)
-    tp, dp, fp = _bench_continuous(cfg, params, reqs, max_len, slots,
-                                   prefill_chunk=prefill_chunk)
+    tc, dc, fc, _ = _bench_continuous(cfg, params, reqs, max_len, slots)
+    tp, dp, fp, _ = _bench_continuous(cfg, params, reqs, max_len, slots,
+                                      prefill_chunk=prefill_chunk)
     row(f"serve/{arch}/lockstep", dl / max(tl, 1) * 1e6,
         f"{tl / dl:.1f} tok/s ttft={fl * 1e3:.0f}ms "
         f"({n_requests} reqs, {slots} slots)")
@@ -162,6 +179,36 @@ def run(arch="llama3_2_3b", n_requests=12, slots=4, max_len=80,
         record("serve", config, geometry=geom, wall_s=dt,
                memory_class="O(N·D + V·D)", tok_s=tok / dt,
                ttft_ms=ttft * 1e3, tokens=tok)
+
+    # shared-prefix workload: dense vs paged-with-prefix-reuse, both with
+    # chunked prefill so the TTFT delta isolates the reuse itself (the
+    # paged engine skips already-resident prefix pages at admission)
+    page = 8
+    preqs = _prefix_workload(cfg.vocab_size, n_requests=n_requests)
+    ts, ds, fs, _ = _bench_continuous(cfg, params, preqs, max_len, slots,
+                                      prefill_chunk=prefill_chunk)
+    tg, dg, fg, peng = _bench_continuous(
+        cfg, params, preqs, max_len, slots, prefill_chunk=prefill_chunk,
+        engine_kw={"kv_page_size": page})
+    st = peng.pool.stats()
+    assert st["prefix_hit_rate"] > 0, (
+        "shared-prefix workload produced no prefix-page reuse — the kvpool "
+        "prefix registry regressed")
+    row(f"serve/{arch}/shared_prefix_dense", ds / max(ts, 1) * 1e6,
+        f"{ts / ds:.1f} tok/s ttft={fs * 1e3:.0f}ms")
+    row(f"serve/{arch}/shared_prefix_paged", dg / max(tg, 1) * 1e6,
+        f"{tg / dg:.1f} tok/s ttft={fg * 1e3:.0f}ms "
+        f"hit_rate={st['prefix_hit_rate']:.2f} "
+        f"peak_pages={st['peak_pages']}/{peng.pool.num_pages} "
+        f"ttft_cut={fs / max(fg, 1e-9):.2f}x")
+    record("serve", "shared_prefix_dense", geometry=geom, wall_s=ds,
+           memory_class="O(N·D + V·D)", tok_s=ts / ds,
+           ttft_ms=fs * 1e3, tokens=ts)
+    record("serve", f"shared_prefix_paged@{page}", geometry=geom,
+           wall_s=dg, memory_class="O(N·D + V·D)", tok_s=tg / dg,
+           ttft_ms=fg * 1e3, tokens=tg,
+           prefix_hit_rate=st["prefix_hit_rate"],
+           peak_kv_pages=st["peak_pages"])
 
     # scoring-path memory gate (same discipline as loss_zoo_memory)
     from repro.launch.serve import check_scoring_memory_class

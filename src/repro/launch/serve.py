@@ -17,6 +17,19 @@ Decode (default mode) — sampled generation over the slot scheduler:
   and submits each request when the engine reaches its ``arrive_step`` —
   requests join mid-flight, finished rows leave and their slot is reused.
 
+  Shared prefixes: a definition line {"prefix_id": "sys", "prefix":
+  [5,6,7]} names a token prefix; a request line carrying {"prefix_id":
+  "sys", ...} gets it prepended to its prompt. With paging enabled
+  (below) requests sharing a prefix reuse its page-aligned KV pages
+  copy-free instead of re-prefilling them.
+
+  Paged KV cache: ``--kv-page-size P`` switches the full-attention KV
+  layout from dense per-slot rows to a block-paged pool
+  (repro.serve.kvpool) of ``--kv-pages`` pages (default: the dense-
+  equivalent batch_size * ceil(max_len / P)). Admission gains a
+  page-budget gate; shared page-aligned prompt prefixes are refcounted
+  and reused copy-free. Default off (dense layout).
+
   Observability: ``--metrics-jsonl trace.jsonl`` records per-request
   spans (submit -> retire, with slot/TTFT attribution), queue/slot
   gauges, TTFT + inter-token-latency histograms and a final metrics
@@ -64,8 +77,14 @@ def _parse_prompt_list(s: str) -> list:
 
 
 def _load_requests(path: str) -> list:
-    """JSONL request stream -> [(arrive_step, kwargs)] sorted by arrival."""
-    reqs = []
+    """JSONL request stream -> [(arrive_step, kwargs)] sorted by arrival.
+
+    Lines with a "prefix" token list *define* a named shared prefix
+    ({"prefix_id": "sys", "prefix": [...]}); request lines referencing a
+    "prefix_id" get that prefix prepended to their prompt. Definitions
+    apply in file order and must precede their first use.
+    """
+    reqs, prefixes = [], {}
     with open(path) as f:
         for ln, line in enumerate(f, 1):
             line = line.strip()
@@ -75,9 +94,25 @@ def _load_requests(path: str) -> list:
                 r = json.loads(line)
             except json.JSONDecodeError as e:
                 sys.exit(f"{path}:{ln}: not valid JSON ({e})")
+            if "prefix" in r:
+                if not isinstance(r["prefix"], list):
+                    sys.exit(f"{path}:{ln}: 'prefix' must be a token list")
+                if "prefix_id" not in r:
+                    sys.exit(f"{path}:{ln}: a prefix definition needs a "
+                             f"'prefix_id' name")
+                prefixes[str(r["prefix_id"])] = [int(t) for t in
+                                                 r["prefix"]]
+                continue
             if "prompt" not in r or not isinstance(r["prompt"], list):
                 sys.exit(f"{path}:{ln}: each request needs a 'prompt' "
                          f"token list")
+            if "prefix_id" in r:
+                pid = str(r["prefix_id"])
+                if pid not in prefixes:
+                    sys.exit(f"{path}:{ln}: unknown prefix_id {pid!r} "
+                             f"(define it first with a "
+                             f'{{"prefix_id": ..., "prefix": [...]}} line)')
+                r = dict(r, prompt=prefixes[pid] + list(r["prompt"]))
             reqs.append((int(r.get("arrive_step", 0)), r))
     reqs.sort(key=lambda p: p[0])
     return reqs
@@ -96,11 +131,18 @@ def _decode_mode(args, cfg, params):
         sys.exit(f"--sync-every must be >= 1, got {args.sync_every}")
     if args.prefill_chunk < 1:
         sys.exit(f"--prefill-chunk must be >= 1, got {args.prefill_chunk}")
+    if args.kv_pages is not None and args.kv_page_size is None:
+        sys.exit("--kv-pages requires --kv-page-size")
+    if args.kv_page_size is not None and args.kv_page_size < 1:
+        sys.exit(f"--kv-page-size must be >= 1, got {args.kv_page_size}")
+    if args.kv_pages is not None and args.kv_pages < 1:
+        sys.exit(f"--kv-pages must be >= 1, got {args.kv_pages}")
     metrics, tracer, obs_finish = obs_from_args(args)
     eng = Engine(cfg, params, max_len=args.max_len,
                  batch_size=args.batch_size,
                  prefill_chunk=args.prefill_chunk,
-                 metrics=metrics, tracer=tracer)
+                 metrics=metrics, tracer=tracer,
+                 kv_page_size=args.kv_page_size, kv_pages=args.kv_pages)
     base = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                           top_p=args.top_p, seed=args.seed)
     pending = []          # [(arrive_step, submit_kwargs)]
@@ -137,6 +179,12 @@ def _decode_mode(args, cfg, params):
         h = metrics.histogram("serve_ttft_seconds")
         print(f"# telemetry: {fin:.0f} finished, {gen:.0f} tokens "
               f"generated, mean TTFT {1e3 * h.mean:.1f} ms")
+    if eng.pool is not None:
+        st = eng.pool.stats()
+        print(f"# kvpool: {st['num_pages']} pages x {st['page_size']} "
+              f"tok, peak {st['peak_pages']}, prefix pages reused "
+              f"{st['reused_pages_total']}/{st['prompt_pages_total']} "
+              f"(hit rate {st['prefix_hit_rate']:.2f})")
     obs_finish()
     return 0
 
@@ -229,6 +277,13 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eos", type=int, default=None,
                     help="stop generation at this token id")
+    ap.add_argument("--kv-page-size", type=int, default=None,
+                    help="block-paged KV cache: tokens per page "
+                         "(default: dense per-slot layout)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="physical pages in the shared KV pool (default: "
+                         "dense-equivalent batch_size * ceil(max_len / "
+                         "page_size); requires --kv-page-size)")
     # scoring mode
     ap.add_argument("--score", action="store_true",
                     help="rank --completions under --prompt via the "

@@ -225,7 +225,7 @@ def _masked_row_update(buf, upd, tgt, write):
 def multi_head_attention(params, x, *, num_heads, num_kv_heads, head_dim,
                          cos_sin=None, causal=True, window=None,
                          softcap=None, kv_x=None, cache=None,
-                         cache_index=None, valid_len=None):
+                         cache_index=None, valid_len=None, page_table=None):
     """Self- or cross-attention with optional KV cache (decode).
 
     cache: dict(k=(B, S_cache, Hkv, hd), v=...) updated at ``cache_index``
@@ -234,6 +234,14 @@ def multi_head_attention(params, x, *, num_heads, num_kv_heads, head_dim,
     prefill) each row writes ``valid_len`` (B,) KV positions — tail tokens
     past a row's valid length are padding: never cached, and causally
     invisible to valid queries. Returns (out, new_cache).
+
+    Paged variant: cache holds page *pools* ``k_pages``/``v_pages`` of
+    shape (num_pages, page_size, Hkv, hd) shared by all rows, and
+    ``page_table`` (B, n_logical) int32 maps each row's logical pages to
+    physical ones (-1 = unmapped; see repro.serve.kvpool). Reads gather a
+    per-row logical KV view through the table; writes scatter into the
+    flattened pool. Unmapped/unwritten logical slots are masked via
+    kv_pos and causality exactly like ring caches.
     """
     b, sq, _ = x.shape
     kv_in = x if kv_x is None else kv_x
@@ -253,7 +261,43 @@ def multi_head_attention(params, x, *, num_heads, num_kv_heads, head_dim,
     if cache is not None:
         causal = True
         q_offset = cache_index
-        if "pos" in cache and sq == 1:
+        if "k_pages" in cache:
+            # Block-paged cache: one pool of pages shared by every row,
+            # indirected through ``page_table``. A shared-prefix page is
+            # mapped by several rows at once but written by none of them
+            # (rows write only from their private ``cache_index`` onward),
+            # so scatter targets are unique and copy-free reuse is safe.
+            kp, vp = cache["k_pages"], cache["v_pages"]
+            n_phys, psize = kp.shape[0], kp.shape[1]
+            pt = page_table                              # (B, n_logical)
+            ci = jnp.broadcast_to(
+                jnp.asarray(cache_index, jnp.int32).reshape(-1), (b,))
+            n = (jnp.full((b,), sq, jnp.int32) if valid_len is None
+                 else jnp.broadcast_to(
+                     jnp.asarray(valid_len, jnp.int32), (b,)))
+            j = jnp.arange(sq)[None]
+            abs_pos = ci[:, None] + j                    # (B, Sq)
+            lpage = jnp.clip(abs_pos // psize, 0, pt.shape[1] - 1)
+            phys = jnp.take_along_axis(pt, lpage, axis=1)
+            write = (j < n[:, None]) & (phys >= 0)
+            tgt = phys * psize + abs_pos % psize         # flat pool index
+            safe = jnp.where(write, tgt, n_phys * psize)
+            kp_flat = kp.reshape((n_phys * psize,) + kp.shape[2:])
+            vp_flat = vp.reshape((n_phys * psize,) + vp.shape[2:])
+            kp_flat = kp_flat.at[safe].set(k, mode="drop")
+            vp_flat = vp_flat.at[safe].set(v, mode="drop")
+            new_cache = {"k_pages": kp_flat.reshape(kp.shape),
+                         "v_pages": vp_flat.reshape(vp.shape)}
+            # gather the row-logical KV view (B, L, Hkv, hd); unmapped
+            # pages read page 0 but are masked off via kv_pos = -1, and
+            # mapped-but-unwritten positions are causally invisible
+            jj = jnp.arange(pt.shape[1] * psize)
+            phys_all = pt[:, jj // psize]                # (B, L)
+            src = jnp.clip(phys_all, 0, n_phys - 1) * psize + jj % psize
+            k = kp_flat[src]
+            v = vp_flat[src]
+            kv_pos = jnp.where(phys_all >= 0, jj[None], -1)
+        elif "pos" in cache and sq == 1:
             # Ring buffer (sliding-window cache, length W << context): write
             # at slot t mod W; the mask comes from the stored absolute
             # positions (B, W), so RoPE'd keys stay valid and each row can

@@ -151,12 +151,16 @@ def _rope_for(cfg, positions, kv_positions=None):
 
 
 def _apply_block(params, x, kind, cfg, cos_sin, cache, cache_index, decode,
-                 valid_len=None):
+                 valid_len=None, page_table=None):
     """One (mixer + MLP) block with pre-norms. Returns (x, new_cache, aux).
 
     valid_len (B,), decode only: per-row count of valid tokens in a
     chunked-prefill step — tail positions past it are padding and must
     not enter the KV cache or the recurrent states.
+
+    page_table (B, n_logical) int32, decode only: logical->physical page
+    map for block-paged attention caches (repro.serve.kvpool). One table
+    serves every layer; non-attention mixers ignore it.
     """
     aux = jnp.zeros((), jnp.float32)
     h = L.rmsnorm(params["ln1"], x, cfg.norm_eps)
@@ -167,7 +171,7 @@ def _apply_block(params, x, kind, cfg, cos_sin, cache, cache_index, decode,
             num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
             cos_sin=cos_sin, causal=True, window=window,
             softcap=cfg.attn_softcap, cache=cache, cache_index=cache_index,
-            valid_len=valid_len)
+            valid_len=valid_len, page_table=page_table)
     elif kind == "rglru":
         out, new_cache = R.rglru_block(params["mixer"], h, cfg.ssm,
                                        state=cache, decode=decode,
@@ -241,6 +245,9 @@ def lm_hidden(params, cfg, batch, cache=None, cache_index=None,
     aux_total = jnp.zeros((), jnp.float32)
 
     cross_params = params.get("cross")
+    # one page table serves every paged layer; it is loop-invariant, so it
+    # rides into the scan as a closure, not as scanned xs
+    page_table = cache.get("pt") if decode else None
 
     def group_body(carry, xs):
         x, aux = carry
@@ -252,7 +259,8 @@ def lm_hidden(params, cfg, batch, cache=None, cache_index=None,
             c = block_caches[pos] if block_caches is not None else None
             x, nc, a = _apply_block(block_params[pos], x, kind, cfg, cos_sin,
                                     c, cache_index, decode,
-                                    valid_len=valid_len)
+                                    valid_len=valid_len,
+                                    page_table=page_table)
             if cross_p is not None:
                 x = _apply_cross(jax.tree.map(lambda a: a[pos], cross_p),
                                  x, cfg, enc_out)
@@ -287,12 +295,17 @@ def lm_hidden(params, cfg, batch, cache=None, cache_index=None,
         ys = {}
 
     new_cache = {"groups": ys.get("cache")} if decode else None
+    if decode and page_table is not None:
+        # the table itself is host-managed (kvpool); the model only reads
+        # it, so it passes through unchanged
+        new_cache["pt"] = page_table
 
     for i, kind in enumerate(tail):
         c = cache["tail"][i] if decode else None
         x, nc, a = _apply_block(params["tail"][i], x, kind, cfg, cos_sin,
                                 c, cache_index, decode,
-                                valid_len=valid_len)
+                                valid_len=valid_len,
+                                page_table=page_table)
         aux_total = aux_total + a
         if decode:
             new_cache.setdefault("tail", []).append(nc)
@@ -407,23 +420,49 @@ def train_loss(params, cfg, batch, loss_impl=None, loss_fn=None,
     return loss_val
 
 
-def init_cache(cfg, batch_size, max_len, dtype=None):
+def init_cache(cfg, batch_size, max_len, dtype=None, kv_page_size=None,
+               kv_pages=None):
     """Decode cache pytree: stacked per group x pattern position.
 
     Every row's slot is independent: ring-buffer position metadata is kept
     per row, so a continuous-batching scheduler can run each row on its own
     timeline (per-row ``cache_index``) and recycle one row's slot without
     touching the others (``reset_cache_rows``).
+
+    kv_page_size / kv_pages: block-paged layout for *full-attention*
+    caches (repro.serve.kvpool). Each "attn" layer gets a page pool
+    ``k_pages``/``v_pages`` of shape (kv_pages, kv_page_size, hkv, hd)
+    instead of per-slot rows, and the cache gains one shared page table
+    ``pt`` (B, ceil(max_len / kv_page_size)) int32, -1 = unmapped.
+    kv_pages defaults to the dense-equivalent pool size. SWA ring buffers
+    and recurrent states are already O(1)-bounded per row and stay
+    slot-dense.
     """
     dt = jnp.dtype(dtype or cfg.dtype)
     pattern, n_groups, tail = _pattern_split(cfg)
     hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if kv_pages is not None and kv_page_size is None:
+        raise ValueError("kv_pages requires kv_page_size")
+    if kv_page_size is not None:
+        if kv_page_size < 1:
+            raise ValueError(f"kv_page_size must be >= 1, got "
+                             f"{kv_page_size}")
+        n_logical = -(-max_len // kv_page_size)
+        if kv_pages is None:
+            kv_pages = batch_size * n_logical
+        if kv_pages < 1:
+            raise ValueError(f"kv_pages must be >= 1, got {kv_pages}")
 
     def one(kind):
         if kind in ATTN_KINDS:
             length = max_len
             if kind == "swa" and cfg.sliding_window is not None:
                 length = min(max_len, cfg.sliding_window)
+            if kv_page_size is not None and kind == "attn":
+                return {"k_pages": jnp.zeros(
+                            (kv_pages, kv_page_size, hkv, hd), dt),
+                        "v_pages": jnp.zeros(
+                            (kv_pages, kv_page_size, hkv, hd), dt)}
             c = {"k": jnp.zeros((batch_size, length, hkv, hd), dt),
                  "v": jnp.zeros((batch_size, length, hkv, hd), dt)}
             if length < max_len:  # ring buffer: per-row absolute positions
@@ -442,6 +481,8 @@ def init_cache(cfg, batch_size, max_len, dtype=None):
         one(kind)) for kind in pattern]}
     if tail:
         cache["tail"] = [one(kind) for kind in tail]
+    if kv_page_size is not None:
+        cache["pt"] = jnp.full((batch_size, n_logical), -1, jnp.int32)
     return cache
 
 
@@ -452,6 +493,12 @@ def reset_cache_rows(cache, rows):
     Attention K/V and recurrent states re-init to zeros; ring-buffer
     ``pos`` metadata to -1 (the "never written" sentinel). Pure ``where``
     ops, so this jits and leaves the other rows' slots untouched.
+
+    Paged caches: the page pools (``k_pages``/``v_pages``) have no batch
+    axis and pages may be shared across rows, so zeroing them would
+    corrupt live neighbours — page freeing happens host-side in
+    :class:`repro.serve.kvpool.KVPool` instead, and recycling a slot here
+    only unmaps its page-table row (``pt`` -> -1).
     """
     def reset(leaf, batch_axis, fill):
         shape = [1] * leaf.ndim
@@ -461,7 +508,8 @@ def reset_cache_rows(cache, rows):
 
     def walk(tree, batch_axis):
         if isinstance(tree, dict):
-            return {k: (reset(v, batch_axis, -1) if k == "pos"
+            return {k: (v if k in ("k_pages", "v_pages")
+                        else reset(v, batch_axis, -1) if k == "pos"
                         else walk(v, batch_axis))
                     for k, v in tree.items()}
         if isinstance(tree, (list, tuple)):
@@ -472,6 +520,8 @@ def reset_cache_rows(cache, rows):
     out = {"groups": walk(cache["groups"], 1)}
     if "tail" in cache:
         out["tail"] = walk(cache["tail"], 0)
+    if "pt" in cache:
+        out["pt"] = reset(cache["pt"], 0, -1)
     return out
 
 

@@ -10,8 +10,13 @@
   * :mod:`repro.serve.scoring` — ``score(prompt, completions)`` lowered
     through ``cross_entropy(..., loss="seq_logprob")``: O(B·S·D + V·D)
     memory, never (B, S, V) logits.
+  * :mod:`repro.serve.kvpool` — block-paged KV allocator (free list,
+    refcounts, prefix registry) behind ``Engine(kv_page_size=...)``:
+    per-slot page tables replace dense per-slot KV rows, and page-aligned
+    shared prompt prefixes are reused copy-free across requests.
 """
 from repro.serve.engine import Engine  # noqa: F401
+from repro.serve.kvpool import KVPool  # noqa: F401
 from repro.serve.sampling import GREEDY, SamplingParams  # noqa: F401
 from repro.serve.scheduler import Completion, Request, Scheduler  # noqa: F401
 from repro.serve.scoring import rank, score, token_logprobs  # noqa: F401

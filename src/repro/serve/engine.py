@@ -42,6 +42,7 @@ import jax.numpy as jnp
 from repro.models import transformer as T
 from repro.obs import metrics as M
 from repro.obs import trace as Tr
+from repro.serve import kvpool as KP
 from repro.serve import scheduler as sched
 from repro.serve.sampling import GREEDY, SamplingParams
 
@@ -112,13 +113,24 @@ class Engine:
         engine performs anyway — enabling metrics adds zero
         ``device_get``s and zero jit recompiles (asserted by
         tests/test_serve.py). Default: disabled (no-op twins).
+    kv_page_size / kv_pages: block-paged KV layout for full-attention
+        caches (:mod:`repro.serve.kvpool`). ``kv_page_size`` tokens per
+        page; ``kv_pages`` physical pages shared by all slots (default:
+        the dense-equivalent ``batch_size * ceil(max_len/page_size)``).
+        Admission reserves a request's worst-case page span up front
+        (page-budget gate with FIFO backpressure) and maps already-
+        resident page-aligned prompt prefixes copy-free with a refcount
+        bump — chunked prefill skips straight past reused pages. Default
+        off (dense per-slot layout).
     """
 
     def __init__(self, cfg, params, *, max_len: int = 512,
                  batch_size: int = 8, max_prompt_len: int | None = None,
                  max_new_cap: int | None = None, prefill_chunk: int = 1,
                  enc_out=None, metrics: M.Registry | None = None,
-                 tracer: Tr.Tracer | None = None):
+                 tracer: Tr.Tracer | None = None,
+                 kv_page_size: int | None = None,
+                 kv_pages: int | None = None):
         if enc_out is not None and enc_out.shape[0] != batch_size:
             raise ValueError(
                 f"enc_out has {enc_out.shape[0]} rows but the engine has "
@@ -136,13 +148,30 @@ class Engine:
         self.metrics = metrics if metrics is not None else M.NULL
         self.tracer = tracer if tracer is not None else Tr.NULL
         self.metrics.gauge("serve_slots_total").set(batch_size)
+        self.pool = None
+        paged_kw = {}
+        if kv_pages is not None and kv_page_size is None:
+            raise ValueError("kv_pages requires kv_page_size")
+        if kv_page_size is not None:
+            if kv_page_size < 1:
+                raise ValueError(
+                    f"kv_page_size must be >= 1, got {kv_page_size}")
+            n_logical = KP.pages_for(max_len, kv_page_size)
+            pages = kv_pages if kv_pages is not None \
+                else batch_size * n_logical
+            if pages < 1:
+                raise ValueError(f"kv_pages must be >= 1, got {pages}")
+            self.pool = KP.KVPool(kv_page_size, pages,
+                                  metrics=self.metrics)
+            paged_kw = dict(kv_page_size=kv_page_size, kv_pages=pages)
         self.scheduler = sched.Scheduler(
             batch_size, max_prompt_len or max_len, max_new_cap or max_len,
-            cfg.vocab_size, metrics=self.metrics, tracer=self.tracer)
+            cfg.vocab_size, metrics=self.metrics, tracer=self.tracer,
+            pool=self.pool)
         self.state = sched.init_state(batch_size,
                                       self.scheduler.max_prompt_len,
                                       self.scheduler.max_new_cap)
-        self.cache = T.init_cache(cfg, batch_size, max_len)
+        self.cache = T.init_cache(cfg, batch_size, max_len, **paged_kw)
         self.step_count = 0
         # host mirror of each slot's unconsumed prompt tokens; prefill
         # progress is host-deterministic (stopping can only hit generated
@@ -172,6 +201,14 @@ class Engine:
                 f"({max_new_tokens}) needs {len(prompt) + max_new_tokens - 1} "
                 f"cache positions, exceeding the cache length "
                 f"(max_len={self.max_len})")
+        if self.pool is not None:
+            need = KP.pages_for(len(prompt) + max_new_tokens - 1,
+                                self.pool.page_size)
+            if need > self.pool.num_pages:
+                raise ValueError(
+                    f"request needs {need} KV pages worst-case but the "
+                    f"pool only has {self.pool.num_pages}; it could never "
+                    f"be admitted (raise kv_pages or shrink the request)")
         slot = None
         if self.enc_out is not None:
             if self._enc_submits >= self.batch_size:
@@ -213,10 +250,13 @@ class Engine:
         self.state, self.cache, rows = self.scheduler.admit(
             self.state, self.cache)
         for i in rows:
-            self._prefill_left[i] = len(self.scheduler.slots[i].prompt)
-            self.scheduler.slots[i].admit_step = self.step_count
-            self.tracer.annotate(self.scheduler.slots[i].rid,
-                                 admit_step=self.step_count)
+            req = self.scheduler.slots[i]
+            # a reused prefix is already resident in the KV pool — prefill
+            # starts past it (copy-free reuse; see repro.serve.kvpool)
+            self._prefill_left[i] = len(req.prompt) - req.reused_tokens
+            req.admit_step = self.step_count
+            self.tracer.annotate(req.rid, admit_step=self.step_count,
+                                 reused_tokens=req.reused_tokens)
         prefill_toks = 0
         for _ in range(substeps):
             if self.prefill_chunk > 1 and any(
@@ -240,6 +280,16 @@ class Engine:
         t_end = time.time()
         self._times.append((self.step_count, t_end))
         self._prune_times()
+        if self.pool is not None:
+            # publish full prompt pages whose K/V writes are now enqueued
+            # (the host prefill ledger is deterministic; device program
+            # order puts those writes before any later reuse). Must run
+            # before _sync retires rows, so a finishing row's prefix pages
+            # register before its references are dropped.
+            for i, req in enumerate(self.scheduler.slots):
+                if req is not None:
+                    self.pool.publish_upto(
+                        i, len(req.prompt) - self._prefill_left[i])
         # per-step telemetry from host-side bookkeeping only: the prompt
         # token split mirrors the deterministic prefill ledger (the device
         # consumed exactly these tokens), the wall histogram spans the

@@ -1,0 +1,324 @@
+"""Block-paged KV allocator with copy-free shared-prefix reuse.
+
+The serve engine's dense layout reserves a ``(B, max_len, ...)`` KV buffer
+per slot, so every request pays worst-case context memory and the number
+of concurrent slots is hard-coupled to ``max_len``. This module decouples
+them the same way the training losses decouple from the dense logit
+matrix: never materialize worst-case state you don't need.
+
+Physical layout (device side, built by ``transformer.init_cache``):
+
+  * every dense-attention layer holds a page *pool* ``(num_pages,
+    page_size, hkv, hd)`` instead of per-slot rows;
+  * ONE page table ``cache["pt"]`` of shape ``(B, ceil(max_len /
+    page_size))`` int32 is shared by all layers — entry ``pt[b, j]`` is
+    the physical page backing logical page ``j`` of slot ``b`` (``-1`` =
+    unmapped). A page id is valid in every layer's pool simultaneously,
+    so one logical allocation reserves the page across the whole stack.
+
+Host lifecycle (this module — pure Python, zero device syncs):
+
+  * every physical page is in exactly ONE of three states:
+      - **free**: on the free list;
+      - **in use**: mapped by >= 1 slot (``ref[p]`` = number of mapping
+        rows);
+      - **cached**: refcount zero but still registered in the prefix
+        registry — reusable by a future request, evictable (LRU) under
+        allocation pressure.
+  * admission reserves the row's whole worst-case page span
+    (``ceil((prompt_len + max_new - 1) / page_size)``) up front, so the
+    engine never allocates mid-flight — no extra device syncs, no
+    deadlock between running rows;
+  * **copy-free prefix reuse**: full page-aligned prompt prefixes are
+    hashed into a chained registry ``(parent_page_id, page_tokens) ->
+    page_id``. A new request walks the chain and maps already-resident
+    pages straight into its table with a refcount bump — no copy is
+    needed because a shared prefix occupies identical absolute positions
+    (RoPE'd K/V are position-dependent but prefix-identical), and the
+    row's own writes start strictly after the reused span;
+  * retirement decrefs the row's pages; registered pages stay cached,
+    private ones return to the free list. ``reset_cache_rows`` only
+    resets the row's page-table row — page freeing replaces row zeroing.
+
+Publication timing: a full prompt page becomes registry-visible only once
+the engine's host-side prefill mirror shows the row has consumed past it.
+Device program order then guarantees the page's K/V writes were enqueued
+before any later step that could read them through a reused mapping.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.obs import metrics as M
+
+
+def pages_for(n_positions: int, page_size: int) -> int:
+    """Pages needed to back ``n_positions`` KV slots."""
+    return -(-n_positions // page_size)
+
+
+@dataclasses.dataclass
+class _Pending:
+    """A not-yet-published full prompt page of a running row."""
+    page_id: int
+    tokens: Tuple[int, ...]
+    ready_at: int               # publish once this many prompt tokens are
+                                # resident in the cache
+
+
+class KVPool:
+    """Host-side page allocator: free list + refcounts + prefix registry.
+
+    All methods are O(pages touched); nothing here ever touches the
+    device. The engine owns exactly one pool and threads it into the
+    scheduler (admission/retirement) and its own step loop (publication).
+    """
+
+    def __init__(self, page_size: int, num_pages: int,
+                 metrics: M.Registry | None = None):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.ref: List[int] = [0] * num_pages
+        # prefix registry: (parent_page_id, page_tokens) -> page_id, with
+        # parent -1 for a prompt's first page. key_of is the reverse map;
+        # lru orders every registered page oldest-first for eviction.
+        self.registry: Dict[tuple, int] = {}
+        self.key_of: Dict[int, tuple] = {}
+        self.lru: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
+        self._rows: Dict[int, List[int]] = {}
+        self._pending: Dict[int, List[_Pending]] = {}
+        self._publish_parent: Dict[int, int] = {}
+        # cumulative stats (host floats; also exported as obs counters)
+        self.reused_pages_total = 0
+        self.published_pages_total = 0
+        self.evicted_pages_total = 0
+        self.hit_requests_total = 0
+        self.admitted_requests_total = 0
+        self.prompt_pages_total = 0     # full prompt pages across admits
+        self.peak_pages = 0             # max(in_use + cached) ever
+        self.metrics = metrics if metrics is not None else M.NULL
+        self.metrics.gauge("serve_kvpool_pages_total").set(num_pages)
+        self._export()
+
+    # -- bookkeeping helpers -------------------------------------------
+
+    def _export(self) -> None:
+        """Refresh occupancy gauges from host state (never a sync)."""
+        in_use = self.num_pages - len(self.free) - self.cached_pages
+        self.peak_pages = max(self.peak_pages, self.num_pages -
+                              len(self.free))
+        m = self.metrics
+        m.gauge("serve_kvpool_free_pages").set(len(self.free))
+        m.gauge("serve_kvpool_inuse_pages").set(in_use)
+        m.gauge("serve_kvpool_cached_pages").set(self.cached_pages)
+        m.gauge("serve_kvpool_peak_pages").set(self.peak_pages)
+
+    @property
+    def cached_pages(self) -> int:
+        return sum(1 for p in self.key_of if self.ref[p] == 0)
+
+    def _match(self, prompt, limit: int) -> List[int]:
+        """Walk the registry chain over the first ``limit`` prompt pages."""
+        P, parent, out = self.page_size, -1, []
+        for i in range(limit):
+            pid = self.registry.get((parent, tuple(prompt[i * P:
+                                                         (i + 1) * P])))
+            if pid is None:
+                break
+            out.append(pid)
+            parent = pid
+        return out
+
+    def _evict_one(self, keep: set) -> None:
+        """Drop the LRU cached page (refcount 0, not in ``keep``) back to
+        the free list, unregistering its prefix key."""
+        for p in self.lru:
+            if self.ref[p] == 0 and p not in keep:
+                del self.lru[p]
+                del self.registry[self.key_of.pop(p)]
+                self.free.append(p)
+                self.evicted_pages_total += 1
+                self.metrics.counter(
+                    "serve_kvpool_evicted_pages_total").inc()
+                return
+        raise RuntimeError("kvpool: eviction requested with no evictable "
+                           "page (capacity check is broken)")
+
+    # -- admission ------------------------------------------------------
+
+    def try_admit(self, row: int, prompt, total_positions: int
+                  ) -> Optional[Tuple[List[int], int]]:
+        """Reserve the full page span for a request needing
+        ``total_positions`` cache slots in slot ``row``.
+
+        Returns ``(page_ids, reused_tokens)`` — ``page_ids`` is the row's
+        logical->physical table (reused prefix pages first), and
+        ``reused_tokens`` is the page-aligned prefix length whose K/V is
+        already resident (prefill skips straight past it). Returns None
+        when the pool cannot supply the span — the scheduler treats that
+        as backpressure and stops admitting to preserve FIFO order.
+        """
+        if row in self._rows:
+            raise RuntimeError(f"kvpool: row {row} already mapped")
+        P = self.page_size
+        n_logical = pages_for(total_positions, P)
+        # reuse only full prompt pages, and always leave >= 1 prompt token
+        # to teacher-force (the last prompt position's logits produce the
+        # first generated token)
+        matched = self._match(prompt, min((len(prompt) - 1) // P,
+                                          n_logical))
+        keep = set(matched)
+        evictable = sum(1 for p in self.lru
+                        if self.ref[p] == 0 and p not in keep)
+        need = n_logical - len(matched)
+        if len(self.free) + evictable < need:
+            return None
+        for p in matched:
+            self.ref[p] += 1
+            self.lru.move_to_end(p)
+        alloc: List[int] = []
+        for _ in range(need):
+            if not self.free:
+                self._evict_one(keep)
+            p = self.free.pop()
+            self.ref[p] += 1
+            alloc.append(p)
+        pages = matched + alloc
+        self._rows[row] = pages
+        # queue publication of the remaining full prompt pages; ready once
+        # the engine reports the page's last token resident in the cache
+        full = len(prompt) // P
+        self._pending[row] = [
+            _Pending(pages[i], tuple(prompt[i * P:(i + 1) * P]),
+                     (i + 1) * P)
+            for i in range(len(matched), full)]
+        self._publish_parent[row] = matched[-1] if matched else -1
+        reused = len(matched) * P
+        self.admitted_requests_total += 1
+        self.prompt_pages_total += full
+        if matched:
+            self.hit_requests_total += 1
+            self.reused_pages_total += len(matched)
+            m = self.metrics
+            m.counter("serve_prefix_hit_requests_total").inc()
+            m.counter("serve_prefix_pages_reused_total").inc(len(matched))
+        self._export()
+        return pages, reused
+
+    # -- publication ----------------------------------------------------
+
+    def publish_upto(self, row: int, resident_tokens: int) -> None:
+        """Register the row's full prompt pages whose K/V writes the
+        engine has already enqueued (``resident_tokens`` = prompt tokens
+        consumed so far, including the reused span)."""
+        pend = self._pending.get(row)
+        if not pend:
+            return
+        done = 0
+        for e in pend:
+            if e.ready_at > resident_tokens:
+                break
+            key = (self._publish_parent[row], e.tokens)
+            cur = self.registry.get(key)
+            if cur is None:
+                self.registry[key] = e.page_id
+                self.key_of[e.page_id] = key
+                self.lru[e.page_id] = None
+                self._publish_parent[row] = e.page_id
+                self.published_pages_total += 1
+                self.metrics.counter(
+                    "serve_prefix_pages_published_total").inc()
+            else:
+                # a concurrent row published the same prefix page first;
+                # chain through theirs so future matches converge on one
+                # physical copy
+                self._publish_parent[row] = cur
+            done += 1
+        del pend[:done]
+        if done:
+            self._export()
+
+    # -- retirement -----------------------------------------------------
+
+    def release_row(self, row: int) -> None:
+        """Decref every page mapped by ``row``. Registered pages stay
+        cached for future prefix hits; private pages go back on the free
+        list. Page freeing is what replaces dense row zeroing."""
+        pages = self._rows.pop(row, [])
+        self._pending.pop(row, None)
+        self._publish_parent.pop(row, None)
+        for p in pages:
+            if self.ref[p] <= 0:
+                raise RuntimeError(f"kvpool: double free of page {p}")
+            self.ref[p] -= 1
+            if self.ref[p] == 0 and p not in self.key_of:
+                self.free.append(p)
+        self._export()
+
+    # -- introspection --------------------------------------------------
+
+    def row_pages(self, row: int) -> List[int]:
+        return list(self._rows.get(row, []))
+
+    def available_pages(self) -> int:
+        """Pages obtainable right now: free + evictable cached."""
+        return len(self.free) + self.cached_pages
+
+    def stats(self) -> dict:
+        in_use = self.num_pages - len(self.free) - self.cached_pages
+        return {
+            "page_size": self.page_size,
+            "num_pages": self.num_pages,
+            "free_pages": len(self.free),
+            "in_use_pages": in_use,
+            "cached_pages": self.cached_pages,
+            "peak_pages": self.peak_pages,
+            "reused_pages_total": self.reused_pages_total,
+            "published_pages_total": self.published_pages_total,
+            "evicted_pages_total": self.evicted_pages_total,
+            "hit_requests_total": self.hit_requests_total,
+            "admitted_requests_total": self.admitted_requests_total,
+            "prompt_pages_total": self.prompt_pages_total,
+            "prefix_hit_rate": (self.reused_pages_total /
+                                self.prompt_pages_total
+                                if self.prompt_pages_total else 0.0),
+        }
+
+    def check_invariants(self) -> None:
+        """Every page in exactly one of {free, in use, cached}; refcounts
+        equal the number of rows mapping each page; the registry and its
+        reverse map agree. Raises AssertionError on any violation."""
+        n = self.num_pages
+        free = set(self.free)
+        assert len(free) == len(self.free), "duplicate page on free list"
+        in_use = {p for p in range(n) if self.ref[p] > 0}
+        cached = {p for p in self.key_of if self.ref[p] == 0}
+        assert not (free & in_use), \
+            f"refcounted pages on free list: {sorted(free & in_use)}"
+        assert not (free & cached), \
+            f"cached pages on free list: {sorted(free & cached)}"
+        assert len(free) + len(in_use) + len(cached) == n, (
+            f"page leak: free={len(free)} in_use={len(in_use)} "
+            f"cached={len(cached)} != {n}")
+        assert set(self.key_of) == set(self.lru), \
+            "registry/LRU membership diverged"
+        assert all(self.registry[k] == p for p, k in self.key_of.items()), \
+            "registry reverse map diverged"
+        counts = collections.Counter(
+            p for pages in self._rows.values() for p in pages)
+        for p in range(n):
+            assert self.ref[p] == counts.get(p, 0), (
+                f"page {p}: refcount {self.ref[p]} != "
+                f"{counts.get(p, 0)} mapping rows")
+        for row, pages in self._rows.items():
+            assert len(pages) == len(set(pages)), \
+                f"row {row} maps a page twice"

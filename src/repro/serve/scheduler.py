@@ -52,6 +52,9 @@ class Request:
     submit_time: float = 0.0
     first_token_time: Optional[float] = None
     admit_step: int = -1                # engine step_count at admission
+    # page-aligned prompt prefix already resident in the KV pool at
+    # admission (copy-free reuse): prefill starts at this position
+    reused_tokens: int = 0
 
 
 @dataclasses.dataclass
@@ -209,6 +212,28 @@ def _apply_admission(state, cache, mask, new):
 
 
 @jax.jit
+def _apply_admission_paged(state, cache, mask, new, pt_rows):
+    """Admission for the paged cache: same batch-shaped update, plus the
+    admitted rows' logical->physical page tables (host-built, (B,
+    n_logical) int32 with -1 padding) land in ``cache["pt"]``."""
+    state, cache = _apply_admission(state, cache, mask, new)
+    cache = dict(cache)
+    cache["pt"] = jnp.where(mask[:, None], pt_rows, cache["pt"])
+    return state, cache
+
+
+@jax.jit
+def _advance_rng(key, n):
+    """Advance a PRNG key by ``n`` split-carries — the exact chain
+    ``advance_slots`` applies once per consumed token. Admission uses it
+    to pre-advance a row's stream past a reused prefix, so a request
+    admitted onto shared pages samples the identical tokens it would have
+    sampled after prefilling those positions itself."""
+    return jax.lax.fori_loop(
+        0, n, lambda _, k: jax.random.split(k, 2)[0], key)
+
+
+@jax.jit
 def _apply_retirement(state, mask):
     return dict(state, active=jnp.where(mask, False, state["active"]))
 
@@ -219,11 +244,16 @@ class Scheduler:
     def __init__(self, batch_size: int, max_prompt_len: int,
                  max_new_cap: int, vocab_size: int,
                  metrics: M.Registry | None = None,
-                 tracer: Tr.Tracer | None = None):
+                 tracer: Tr.Tracer | None = None,
+                 pool=None):
         self.batch_size = batch_size
         self.max_prompt_len = max_prompt_len
         self.max_new_cap = max_new_cap
         self.vocab_size = vocab_size
+        # optional repro.serve.kvpool.KVPool: admission gains a page-budget
+        # gate (a request admits only if its whole worst-case page span is
+        # reservable) and copy-free prefix reuse; retirement decrefs pages
+        self.pool = pool
         # host-only telemetry (repro.obs): queue/slot gauges, request
         # lifecycle counters + spans. Everything recorded here is state
         # the scheduler already holds — never a device sync. The NULL
@@ -288,8 +318,19 @@ class Scheduler:
         (state, cache, rows): ONE jitted device call (batch-shaped mask
         update + cache-row reset) regardless of how many requests are
         admitted. O(queue + slots·log slots), no mutation of the deque
-        mid-iteration."""
+        mid-iteration.
+
+        With a KV pool, admission also passes a page-budget gate: the
+        request's worst-case page span must be reservable (free +
+        evictable pages) after mapping any shared-prefix pages. A
+        page-starved request at the queue head stops the whole pass
+        (backpressure) rather than being overtaken — FIFO order is how
+        large requests stay starvation-free. Pinned requests waiting on a
+        *busy slot* still step aside without blocking the queue; the page
+        gate only ever fires for requests whose slot is available.
+        """
         rows, reqs = [], []
+        pages_of = {}
         free = [i for i in range(self.batch_size) if self.slots[i] is None]
         heapq.heapify(free)
         free_set = set(free)
@@ -305,12 +346,24 @@ class Scheduler:
                     kept.append(r)
                     continue
                 i = r.slot
-                free_set.remove(i)
             else:
                 i = heapq.heappop(free)     # lowest free index, FIFO fill
                 while i not in free_set:    # lazily skip pinned takeovers
                     i = heapq.heappop(free)
-                free_set.remove(i)
+            if self.pool is not None:
+                total = len(r.prompt) + r.max_new_tokens - 1
+                got = self.pool.try_admit(i, r.prompt, total)
+                if got is None:
+                    # backpressure: r keeps the queue head; nothing
+                    # behind it may jump ahead of a page-starved request
+                    if r.slot is None:
+                        heapq.heappush(free, i)
+                    kept.append(r)
+                    kept.extend(self.queue)
+                    self.queue.clear()
+                    break
+                pages_of[i], r.reused_tokens = got
+            free_set.remove(i)
             self.slots[i] = r
             rows.append(i)
             reqs.append(r)
@@ -333,8 +386,15 @@ class Scheduler:
         mask = np.zeros((b,), bool)
         for i, r in zip(rows, reqs):
             s = r.sampling.validate(self.vocab_size)
+            ru = r.reused_tokens
             mask[i] = True
-            new["tok"][i, 0] = r.prompt[0]
+            # with a reused prefix the row starts mid-prompt: its first
+            # forced token and cache position skip the resident span, and
+            # its PRNG stream is pre-advanced by the splits the skipped
+            # prefill steps would have consumed (sampled streams stay
+            # token-identical to a dense engine)
+            new["tok"][i, 0] = r.prompt[ru]
+            new["cache_index"][i] = ru
             new["active"][i] = True
             new["prompt_buf"][i, :len(r.prompt)] = r.prompt
             new["prompt_len"][i] = len(r.prompt)
@@ -343,10 +403,23 @@ class Scheduler:
             new["temperature"][i] = s.temperature
             new["top_k"][i] = s.top_k
             new["top_p"][i] = s.top_p
-            new["rng"][i] = np.asarray(jax.random.PRNGKey(s.seed))
-        state, cache = _apply_admission(
-            state, cache, jnp.asarray(mask),
-            {k: jnp.asarray(v) for k, v in new.items()})
+            key = jax.random.PRNGKey(s.seed)
+            if ru:
+                key = _advance_rng(key, jnp.int32(ru))
+            new["rng"][i] = np.asarray(key)
+        if self.pool is not None:
+            pth = np.full((b, cache["pt"].shape[1]), -1, np.int32)
+            for i in rows:
+                pg = pages_of[i]
+                pth[i, :len(pg)] = pg
+            state, cache = _apply_admission_paged(
+                state, cache, jnp.asarray(mask),
+                {k: jnp.asarray(v) for k, v in new.items()},
+                jnp.asarray(pth))
+        else:
+            state, cache = _apply_admission(
+                state, cache, jnp.asarray(mask),
+                {k: jnp.asarray(v) for k, v in new.items()})
         return state, cache, rows
 
     # -- retirement ----------------------------------------------------
@@ -382,6 +455,11 @@ class Scheduler:
             )
             comps.append(c)
             self.slots[i] = None
+            if self.pool is not None:
+                # decref the row's pages: registered prefix pages stay
+                # cached for future hits, private ones return to the
+                # free list — this replaces dense row zeroing
+                self.pool.release_row(i)
             # telemetry from values already on host: TTFT attributed to
             # the device-side first-token step (engine fills
             # first_token_time before calling retire), ITL as the mean

@@ -149,7 +149,17 @@ def cache_specs(cfg, cache, mesh, data_axes):
         name = keys[-1]
         stacked = keys[0] == "groups"   # leading n_groups axis
         shape = leaf.shape[1:] if stacked else leaf.shape
-        if name == "pos":
+        if name in ("k_pages", "v_pages"):
+            # (num_pages, page_size, hkv, hd) page pools: no batch axis
+            # (pages are shared across rows), so only head_dim can shard
+            spec = [None] * len(shape)
+            spec[-1] = _shard_if(mesh, shape[-1], MODEL_AXIS)
+        elif name == "pt":
+            # (B, n_logical) page table: batch over data, replicated on
+            # model (every TP shard gathers through the same table)
+            spec = [_shard_if(mesh, shape[0], dp)] + \
+                [None] * (len(shape) - 1)
+        elif name == "pos":
             # (B, W) per-row ring positions: batch-sharded with their K/V
             spec = [_shard_if(mesh, shape[0], dp)] + \
                 [None] * (len(shape) - 1)

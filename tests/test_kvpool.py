@@ -1,0 +1,290 @@
+"""KVPool unit tests: allocation/refcount/registry lifecycle, LRU
+eviction, backpressure, and a hypothesis sequence test asserting the
+no-page-leak invariant across random submit/publish/retire interleavings.
+
+These are pure host-side tests (no device, no jax) — the engine-level
+token-identity tests for paged serving live in tests/test_serve.py.
+"""
+
+import pytest
+
+from repro.serve.kvpool import KVPool, pages_for
+
+P = 4   # page size used throughout
+
+
+def _pool(num_pages=16, **kw):
+    return KVPool(P, num_pages, **kw)
+
+
+def _admit_publish(pool, row, prompt, max_new=4):
+    """Admit + immediately publish the whole prompt (as the engine does
+    once prefill has consumed it)."""
+    got = pool.try_admit(row, prompt, len(prompt) + max_new - 1)
+    assert got is not None
+    pool.publish_upto(row, len(prompt))
+    return got
+
+
+def test_pages_for():
+    assert pages_for(1, P) == 1
+    assert pages_for(P, P) == 1
+    assert pages_for(P + 1, P) == 2
+    assert pages_for(10 * P, P) == 10
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        KVPool(0, 4)
+    with pytest.raises(ValueError):
+        KVPool(4, 0)
+
+
+def test_admit_release_round_trip():
+    pool = _pool()
+    got = pool.try_admit(0, [1, 2, 3], 3 + 4 - 1)    # 6 positions, 2 pages
+    assert got is not None
+    pages, reused = got
+    assert len(pages) == 2 and reused == 0
+    assert pool.stats()["free_pages"] == 14
+    assert pool.row_pages(0) == pages
+    pool.check_invariants()
+    pool.release_row(0)          # nothing published: pages go back free
+    assert pool.stats()["free_pages"] == 16
+    assert pool.row_pages(0) == []
+    pool.check_invariants()
+
+
+def test_prefix_reuse_after_publication():
+    pool = _pool()
+    prompt = list(range(1, 12))                      # 11 tokens, 2 full pages
+    (pages_a, reused_a) = _admit_publish(pool, 0, prompt)
+    assert reused_a == 0
+    pool.release_row(0)
+    # published pages stay cached, NOT free
+    assert pool.stats()["cached_pages"] == 2
+    assert pool.stats()["free_pages"] == 16 - 2
+    pool.check_invariants()
+
+    (pages_b, reused_b) = _admit_publish(pool, 1, prompt)
+    assert reused_b == 2 * P                          # both full pages hit
+    assert pages_b[:2] == pages_a[:2]                 # same physical pages
+    assert pool.hit_requests_total == 1
+    assert pool.stats()["prefix_hit_rate"] == pytest.approx(0.5)
+    pool.check_invariants()
+    pool.release_row(1)
+    pool.check_invariants()
+
+
+def test_shared_page_never_freed_while_mapped():
+    pool = _pool()
+    prompt = list(range(1, 10))                       # 2 full pages
+    _admit_publish(pool, 0, prompt)
+    (pages_b, reused) = _admit_publish(pool, 1, prompt)
+    assert reused == 2 * P
+    shared = set(pages_b[:2])
+    assert all(pool.ref[p] == 2 for p in shared)
+    pool.release_row(0)
+    # row 1 still maps the shared pages: refcount 1, not free, not cached
+    assert all(pool.ref[p] == 1 for p in shared)
+    assert not shared & set(pool.free)
+    pool.check_invariants()
+    pool.release_row(1)
+    # now cached (registered, ref 0) — still not free
+    assert not shared & set(pool.free)
+    assert shared <= set(pool.key_of)
+    pool.check_invariants()
+
+
+def test_partial_pages_and_teacher_forcing_boundary_never_match():
+    pool = _pool()
+    _admit_publish(pool, 0, [1, 2, 3])                # < 1 full page
+    assert pool.published_pages_total == 0
+    pool.release_row(0)
+    # an exactly-one-page prompt publishes nothing reusable either: its
+    # last token must be teacher-forced, so the match limit is 0 pages
+    _admit_publish(pool, 0, [1, 2, 3, 4])
+    pool.release_row(0)
+    got = pool.try_admit(1, [1, 2, 3, 4], 8)
+    assert got is not None and got[1] == 0            # no reuse
+    pool.release_row(1)
+    pool.check_invariants()
+
+
+def test_lru_eviction_under_pressure():
+    pool = _pool(num_pages=4)
+    _admit_publish(pool, 0, list(range(1, 10)))       # 3 pages, 2 published
+    pool.release_row(0)                               # 2 cached, 3 free
+    assert pool.stats()["cached_pages"] == 2
+    # a 4-page request must evict both cached pages (LRU) to fit
+    got = pool.try_admit(1, list(range(20, 33)), 13 + 4 - 1)
+    assert got is not None and len(got[0]) == 4
+    assert pool.stats()["cached_pages"] == 0
+    assert pool.evicted_pages_total == 2
+    assert pool.registry == {}                        # evicted = unregistered
+    pool.check_invariants()
+    pool.release_row(1)
+    pool.check_invariants()
+
+
+def test_matched_pages_survive_eviction_pressure():
+    """An admit that both hits the prefix cache AND needs eviction must
+    never evict the pages it just matched."""
+    pool = _pool(num_pages=4)
+    prompt = list(range(1, 10))                       # 3 pages, 2 published
+    _admit_publish(pool, 0, prompt)
+    pool.release_row(0)                               # 2 cached, 3 free
+    # same prefix + long tail: needs 2 matched + 2 fresh pages, and only
+    # 3 free — fine; matched pages stay pinned
+    got = pool.try_admit(1, prompt + [99] * 4, 9 + 4 + 4 - 1)
+    assert got is not None
+    pages, reused = got
+    assert reused == 2 * P
+    assert pool.evicted_pages_total == 0
+    pool.check_invariants()
+    pool.release_row(1)
+    pool.check_invariants()
+
+
+def test_backpressure_mutates_nothing():
+    pool = _pool(num_pages=2)
+    assert pool.try_admit(0, list(range(1, 10)), 12) is None   # needs 3
+    assert pool.stats()["free_pages"] == 2
+    assert pool._rows == {} and pool._pending == {}
+    pool.check_invariants()
+    # after freeing capacity the same admit succeeds
+    got = pool.try_admit(0, [1, 2], 2 + 4 - 1)
+    assert got is not None
+    pool.check_invariants()
+
+
+def test_double_free_and_double_admit_raise():
+    pool = _pool()
+    pool.try_admit(0, [1, 2], 4)
+    with pytest.raises(RuntimeError):
+        pool.try_admit(0, [3, 4], 4)                  # row already mapped
+    pool.release_row(0)
+    pool.release_row(0)                               # empty row: no-op
+    pool.try_admit(1, [1, 2], 4)
+    pool._rows[2] = list(pool._rows[1])               # forge a double map
+    pool.release_row(1)
+    with pytest.raises(RuntimeError):
+        pool.release_row(2)
+
+
+def test_concurrent_publication_converges():
+    """Two rows prefilling the same prompt concurrently (admitted before
+    either published) converge on ONE physical chain: the second publisher
+    chains through the first's pages, and a later request matches them."""
+    pool = _pool()
+    prompt = list(range(1, 10))                       # 2 full pages
+    got_a = pool.try_admit(0, prompt, 12)
+    got_b = pool.try_admit(1, prompt, 12)
+    assert got_a[1] == 0 and got_b[1] == 0            # nothing published yet
+    pool.publish_upto(0, len(prompt))
+    pool.publish_upto(1, len(prompt))                 # loses both races
+    assert pool.published_pages_total == 2            # one chain, not two
+    got_c = pool.try_admit(2, prompt, 12)
+    assert got_c[1] == 2 * P
+    assert got_c[0][:2] == got_a[0][:2]               # the winner's pages
+    pool.check_invariants()
+    for r in (0, 1, 2):
+        pool.release_row(r)
+    pool.check_invariants()
+
+
+def test_publication_waits_for_residency():
+    pool = _pool()
+    prompt = list(range(1, 10))
+    pool.try_admit(0, prompt, 12)
+    pool.publish_upto(0, P - 1)                       # page 0 not resident
+    assert pool.published_pages_total == 0
+    pool.publish_upto(0, P)                           # page 0 now resident
+    assert pool.published_pages_total == 1
+    pool.publish_upto(0, len(prompt))
+    assert pool.published_pages_total == 2
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Property test: no page leaks across random event interleavings.
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAS_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    _HAS_HYPOTHESIS = False
+
+if _HAS_HYPOTHESIS:
+    @st.composite
+    def _events(draw):
+        """A random interleaving of admit/publish/release events over a
+        small prompt alphabet (so prefix collisions are common)."""
+        n = draw(st.integers(3, 40))
+        out = []
+        for _ in range(n):
+            kind = draw(st.sampled_from(["admit", "publish", "release"]))
+            if kind == "admit":
+                plen = draw(st.integers(1, 14))
+                prompt = draw(st.lists(st.integers(1, 3), min_size=plen,
+                                       max_size=plen))
+                out.append(("admit", prompt, draw(st.integers(1, 6))))
+            else:
+                out.append((kind, draw(st.integers(0, 3))))
+        return out
+
+
+def test_no_page_leaks_across_interleavings():
+    """After EVERY event: free + in_use + cached == num_pages, refcounts
+    equal mapping rows, and no row's mapped page sits on the free list —
+    the full check_invariants battery, over hypothesis-driven random
+    event interleavings."""
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (requirements-dev.txt)")
+
+    @settings(max_examples=60, deadline=None)
+    @given(_events(), st.integers(4, 12))
+    def run(events, num_pages):
+        _check_interleaving(events, num_pages)
+
+    run()
+
+
+def _check_interleaving(events, num_pages):
+    pool = KVPool(P, num_pages)
+    slots = {}                        # row -> prompt_len (admitted rows)
+    for ev in events:
+        if ev[0] == "admit":
+            _, prompt, max_new = ev
+            row = next((r for r in range(4) if r not in slots), None)
+            total = len(prompt) + max_new - 1
+            if row is None or pages_for(total, P) > num_pages:
+                continue
+            got = pool.try_admit(row, prompt, total)
+            if got is not None:
+                pages, reused = got
+                assert len(pages) == pages_for(total, P)
+                assert reused <= max(0, len(prompt) - 1)
+                assert reused % P == 0
+                slots[row] = len(prompt)
+        elif ev[0] == "publish":
+            row = ev[1]
+            if row in slots:
+                # publish an arbitrary residency (engine only ever grows
+                # it, but the pool must tolerate any partial point)
+                pool.publish_upto(row, slots[row])
+        else:
+            row = ev[1]
+            if row in slots:
+                pool.release_row(row)
+                del slots[row]
+        pool.check_invariants()
+    for row in list(slots):
+        pool.release_row(row)
+    pool.check_invariants()
+    # with every row retired, nothing is in use: free + cached == all
+    st_ = pool.stats()
+    assert st_["in_use_pages"] == 0
+    assert st_["free_pages"] + st_["cached_pages"] == num_pages

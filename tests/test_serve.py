@@ -670,3 +670,229 @@ def test_metrics_do_not_recompile_engine_step(model):
         "enabling metrics recompiled the engine step"
     assert out == Engine(cfg, params, max_len=64,
                          batch_size=2).generate(PROMPTS[:2], 2)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV pool: Engine(kv_page_size=...) — token identity, prefix reuse,
+# page-budget backpressure, and the zero-extra-sync invariants.
+# ---------------------------------------------------------------------------
+
+# ten tokens = 2 full pages at kv_page_size=4: enough shared prefix for
+# page-aligned reuse with a teacher-forced tail left over
+SHARED_PREFIX = [3, 1, 4, 1, 5, 9, 2, 6, 5, 3]
+PREFIX_PROMPTS = [SHARED_PREFIX + tail
+                  for tail in ([7], [8, 9], [10, 11, 12], [13])]
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_3b", "gemma2_2b",
+                                  "recurrentgemma_9b", "rwkv6_3b",
+                                  "olmoe_1b_7b"])
+def test_paged_matches_dense_all_mixers(arch):
+    """The paged KV layout must replay dense token streams exactly for
+    every mixer family — dense attention reads/writes through the page
+    table, SWA rings and recurrent states stay slot-dense — including
+    mid-flight admission (4 requests through 2 slots) and chunked
+    prefill."""
+    cfg = _cfg(arch)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    ref = Engine(cfg, params, max_len=48, batch_size=2,
+                 prefill_chunk=3).generate(PROMPTS, 5)
+    out = Engine(cfg, params, max_len=48, batch_size=2, prefill_chunk=3,
+                 kv_page_size=4).generate(PROMPTS, 5)
+    assert out == ref
+
+
+def test_paged_sampled_streams_identical(model):
+    cfg, params = model
+    sp = SamplingParams(temperature=0.7, top_k=13, top_p=0.9, seed=5)
+    dense = Engine(cfg, params, max_len=64, batch_size=2,
+                   prefill_chunk=4).generate(PROMPTS, 6, sampling=sp)
+    paged = Engine(cfg, params, max_len=64, batch_size=2, prefill_chunk=4,
+                   kv_page_size=4).generate(PROMPTS, 6, sampling=sp)
+    assert paged == dense
+
+
+def test_paged_prefix_reuse_token_identity(model):
+    """Shared-prefix requests map resident prefix pages copy-free — and
+    still produce exactly the dense engine's tokens. The engine must
+    record real hits (the first wave publishes, the second reuses)."""
+    cfg, params = model
+    ref = _sequential(cfg, params, PREFIX_PROMPTS, 5)
+    eng = Engine(cfg, params, max_len=64, batch_size=2, prefill_chunk=4,
+                 kv_page_size=4)
+    out = eng.generate(PREFIX_PROMPTS, 5)
+    assert out == ref
+    st = eng.pool.stats()
+    assert st["hit_requests_total"] > 0
+    assert st["prefix_hit_rate"] > 0
+    assert eng.pool.reused_pages_total > 0
+    eng.pool.check_invariants()
+    assert st["in_use_pages"] == 0          # everything retired
+
+
+def test_paged_prefix_reuse_sampled_identity(model):
+    """A request admitted onto reused pages skips prefill steps — its
+    PRNG stream is pre-advanced past the skipped span, so SAMPLED tokens
+    are identical to the dense engine's too."""
+    cfg, params = model
+    sp = SamplingParams(temperature=0.8, top_k=20, seed=3)
+    dense = Engine(cfg, params, max_len=64, batch_size=2,
+                   prefill_chunk=4).generate(PREFIX_PROMPTS, 6, sampling=sp)
+    eng = Engine(cfg, params, max_len=64, batch_size=2, prefill_chunk=4,
+                 kv_page_size=4)
+    assert eng.generate(PREFIX_PROMPTS, 6, sampling=sp) == dense
+    assert eng.pool.reused_pages_total > 0
+
+
+def test_paged_encdec_matches_dense():
+    """Self-attention rows page; cross-attention stays slot-dense (it is
+    encoder-length, never grows) — streams must match the dense engine."""
+    cfg = _cfg("seamless_m4t_medium")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    enc = jax.random.normal(jax.random.PRNGKey(1), (2, 4, cfg.d_model)) * 0.5
+    prompts = [[1, 2, 3, 4, 5], [3, 4]]
+    ref = Engine(cfg, params, max_len=32, batch_size=2,
+                 enc_out=enc).generate(prompts, 3)
+    out = Engine(cfg, params, max_len=32, batch_size=2, kv_page_size=4,
+                 enc_out=enc).generate(prompts, 3)
+    assert out == ref
+
+
+def test_paged_one_host_transfer_per_step_with_metrics(model, monkeypatch):
+    """Paging + full metrics: the pool is host-side bookkeeping, so still
+    exactly one device_get per step (2 on finishing steps) — and the pool
+    gauges/counters recorded through it are right."""
+    from repro.obs import Registry
+
+    cfg, params = model
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get",
+                        lambda x: calls.append(1) or real(x))
+    reg = Registry()
+    eng = Engine(cfg, params, max_len=64, batch_size=2, prefill_chunk=4,
+                 kv_page_size=4, metrics=reg)
+    for p in PREFIX_PROMPTS:
+        eng.submit(p, max_new_tokens=4)
+    calls.clear()
+    while eng.has_work():
+        before = len(calls)
+        done = eng.step()
+        assert len(calls) - before == (2 if done else 1), \
+            "the KV pool added host transfers to the decode loop"
+    st = eng.pool.stats()
+    assert reg.value("serve_kvpool_pages_total") == eng.pool.num_pages
+    assert reg.value("serve_kvpool_free_pages") == st["free_pages"]
+    assert reg.value("serve_kvpool_cached_pages") == st["cached_pages"]
+    assert reg.value("serve_kvpool_peak_pages") == st["peak_pages"] > 0
+    assert reg.value("serve_prefix_pages_reused_total") == \
+        eng.pool.reused_pages_total > 0
+    assert reg.value("serve_prefix_hit_requests_total") == \
+        eng.pool.hit_requests_total > 0
+    assert reg.value("serve_prefix_pages_published_total") == \
+        eng.pool.published_pages_total > 0
+
+
+def test_paged_metrics_do_not_recompile_engine_step(model):
+    """Same no-recompile discipline on the paged path: enabling metrics on
+    a warm paged shape must not grow the module-level step cache."""
+    from repro.obs import Registry
+    from repro.serve import engine as engine_mod
+
+    cfg, params = model
+    ref = Engine(cfg, params, max_len=64, batch_size=2,
+                 kv_page_size=4).generate(PROMPTS[:2], 2)   # warm the cache
+    before = engine_mod._engine_step._cache_size()
+    out = Engine(cfg, params, max_len=64, batch_size=2, kv_page_size=4,
+                 metrics=Registry()).generate(PROMPTS[:2], 2)
+    assert engine_mod._engine_step._cache_size() == before, \
+        "enabling metrics recompiled the paged engine step"
+    assert out == ref
+
+
+def test_paged_page_budget_backpressure(model):
+    """A pool sized for one request at a time: the second request must
+    wait (admission backpressure, FIFO preserved), admit after the first
+    retires — evicting its cached prefix pages if needed — and still
+    produce its sequential-reference tokens."""
+    cfg, params = model
+    # each request: 7-token prompt + 5 new -> 11 positions -> 3 pages
+    eng = Engine(cfg, params, max_len=32, batch_size=2, kv_page_size=4,
+                 kv_pages=3)
+    ra = eng.submit(PROMPTS[0], max_new_tokens=5)               # 3 pages
+    rb = eng.submit([21, 22, 23, 24, 25, 26, 27], max_new_tokens=5)
+    eng.step()
+    sch = eng.scheduler
+    assert sch.slots[0].rid == ra
+    assert sch.slots[1] is None, "page-starved request was admitted"
+    assert [r.rid for r in sch.queue] == [rb]                   # FIFO kept
+    comps = eng.run()
+    assert set(comps) == {ra, rb}
+    ref = _sequential(cfg, params,
+                      [PROMPTS[0], [21, 22, 23, 24, 25, 26, 27]], 5)
+    assert [comps[ra].tokens, comps[rb].tokens] == ref
+    eng.pool.check_invariants()
+    assert eng.pool.stats()["in_use_pages"] == 0
+
+
+def test_paged_pinned_wait_does_not_starve_fifo(model):
+    """A slot-pinned request waiting on its BUSY slot steps aside without
+    tripping the page-budget backpressure break — later unpinned requests
+    that fit must still admit (the page gate only fires for requests whose
+    slot is actually available)."""
+    cfg, params = model
+    # pool of 5: ra takes 4 pages; rp (pinned to ra's slot) would need 5
+    eng = Engine(cfg, params, max_len=32, batch_size=2, kv_page_size=4,
+                 kv_pages=5)
+    sch = eng.scheduler
+    ra = eng.submit(PROMPTS[0], max_new_tokens=10)      # 16 pos -> 4 pages
+    eng.step()
+    assert sch.slots[0].rid == ra and sch.slots[1] is None
+    rp = sch.submit(sched_mod.Request(prompt=[3], max_new_tokens=20,
+                                      slot=0))          # busy slot, 5 pages
+    ru = eng.submit([4, 5], max_new_tokens=2)           # 3 pos -> 1 page
+    eng.state, eng.cache, rows = sch.admit(eng.state, eng.cache)
+    assert rows == [1] and sch.slots[1].rid == ru, \
+        "pinned request waiting on a busy slot starved FIFO admission"
+    assert [r.rid for r in sch.queue] == [rp]           # still first in line
+    for i in rows:      # mirror Engine.step's admission bookkeeping
+        eng._prefill_left[i] = len(sch.slots[i].prompt) - \
+            sch.slots[i].reused_tokens
+    comps = eng.run()
+    assert set(comps) == {ra, rp, ru}                   # rp eventually ran
+    eng.pool.check_invariants()
+
+
+def test_paged_submit_and_flag_validation(model):
+    cfg, params = model
+    with pytest.raises(ValueError):
+        Engine(cfg, params, max_len=32, batch_size=1, kv_pages=4)
+    with pytest.raises(ValueError):
+        Engine(cfg, params, max_len=32, batch_size=1, kv_page_size=0)
+    eng = Engine(cfg, params, max_len=32, batch_size=1, kv_page_size=4,
+                 kv_pages=2)
+    with pytest.raises(ValueError):     # needs 3 pages > pool's 2: never
+        eng.submit(PROMPTS[0], max_new_tokens=5)        # admittable
+    rid = eng.submit([1, 2, 3], max_new_tokens=4)       # 6 pos: fits
+    assert len(eng.run()[rid].tokens) == 4
+
+
+def test_reset_cache_rows_preserves_pool_pages(model):
+    """Recycling a slot must only unmap its page-table row — the shared
+    page pools hold other rows' (and cached prefixes') K/V and are never
+    zeroed. SWA rings/recurrent states stay slot-dense and DO reset."""
+    cfg, _ = model
+    cache = T.init_cache(cfg, 2, 32, kv_page_size=4)
+    poked = jax.tree.map(
+        lambda a: jnp.full_like(a, 7) if a.dtype != jnp.int32 else a, cache)
+    poked["pt"] = jnp.asarray([[0, 1, -1, -1, -1, -1, -1, -1],
+                               [2, 3, 4, -1, -1, -1, -1, -1]], jnp.int32)
+    out = T.reset_cache_rows(poked, jnp.asarray([True, False]))
+    entries = list(out["groups"]) + list(out.get("tail", []))
+    k_pages = [e["k_pages"] for e in entries
+               if isinstance(e, dict) and "k_pages" in e]
+    assert k_pages, "paged cache lost its page pools"
+    for kp in k_pages:
+        assert bool((kp == 7).all()), "reset zeroed shared pool pages"
+    np.testing.assert_array_equal(
+        out["pt"], [[-1] * 8, [2, 3, 4, -1, -1, -1, -1, -1]])
