@@ -18,4 +18,13 @@ from repro.kernels.ops import (  # noqa: F401
     vmem_working_set,
 )
 from repro.kernels.indexed_matmul import indexed_matmul_pallas  # noqa: F401
+# NOTE: the dispatcher function `decode_sample.decode_sample` is *not*
+# re-exported here — it would shadow the submodule attribute of the same
+# name. Import it from the submodule.
+from repro.kernels.decode_sample import (  # noqa: F401
+    choose_decode_blocks,
+    decode_sample_pallas,
+    decode_sample_ref,
+    decode_vmem_working_set,
+)
 from repro.kernels.ref import IGNORE_INDEX  # noqa: F401

@@ -1,0 +1,627 @@
+"""Fused projection->sample Pallas kernel: logit-free decode (DESIGN.md §10).
+
+The serve engine's decode step is the inference-time dual of the training
+problem this repo exists for: ``serve_step`` materializes the full
+``(B, V)`` logit matrix only so the sampler can immediately reduce it to
+one token id per row. This kernel streams ``C^T h`` blockwise over the
+vocabulary — reusing the online-LSE scratch discipline of
+:mod:`repro.kernels.cce_fwd` — and emits only ``(token, logprob)`` per
+row. The ``(B, V)`` logits never exist outside one ``(block_b, block_v)``
+VMEM tile.
+
+Per-row sampling policy (all vector params, mixed freely in one batch):
+
+  * **greedy** (``temperature == 0``) — a running argmax over the raw
+    (softcapped) logits carried in VMEM scratch; first-occurrence tie
+    semantics identical to ``jnp.argmax``. ``logprob`` is the winner's
+    raw logit minus the full online LSE.
+  * **temperature** — exact streaming Gumbel-max: per-(row, column)
+    Gumbel noise derived from the row's PRNG key by a counter-based hash
+    (below), running max of ``logit/τ + g``. Token-exact between the
+    Pallas kernel and the pure-JAX twin.
+  * **top-k / top-p** — the two-phase LSE-then-threshold scheme: a stats
+    sweep (online LSE + max/min + greedy argmax), a histogram sweep that
+    converts the suffix count/mass over ``n_buckets`` equal bins of the
+    scaled-logit range into per-row keep thresholds, then the filtered
+    Gumbel-max sweep with a kept-set LSE for the renormalized logprob.
+    The kept set is a conservative SUPERSET of the exact top-k/top-p
+    filter — see DESIGN.md §10 for the exactness contract.
+
+Noise: Pallas-TPU's ``pltpu.prng_*`` primitives have no interpret-mode
+lowering on CPU, so the Gumbel noise comes from a stateless counter-based
+hash (two multiply-xorshift finalizer rounds keyed by the row's PRNG key,
+counter = global column index) implemented in plain ``jnp`` uint32 ops.
+The same function runs inside the kernel, under interpret mode, and in
+the reference twin — the three paths are noise-identical by construction,
+which is what makes fused-vs-twin token equality testable at all.
+
+CPU execution dispatches to :func:`decode_sample_ref`, a blockwise
+``lax.fori_loop`` twin with identical per-tile math (the interpret-mode
+kernel is kept for parity tests; the twin is the fast CPU path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import _util
+from repro.kernels._util import sds
+from repro.kernels.ops import _VMEM_BUDGET, _is_cpu
+
+_NEG = float("-inf")
+#: Tokens with renormalized probability below this floor may be dropped
+#: from a top-k keep set that cannot reach them (DESIGN.md §10 contract).
+PROB_FLOOR = 1e-9
+_LOG_FLOOR = float(jnp.log(PROB_FLOOR))
+#: Default number of histogram bins for the threshold sweep.
+DEFAULT_BUCKETS = 256
+
+
+# ---------------------------------------------------------------------------
+# Counter-based noise + shared per-tile math (kernel AND twin run these).
+# ---------------------------------------------------------------------------
+
+def _fmix(x):
+    """murmur3 finalizer: full-avalanche mix of a uint32."""
+    x = (x ^ (x >> jnp.uint32(16))) * jnp.uint32(0x85EBCA6B)
+    x = (x ^ (x >> jnp.uint32(13))) * jnp.uint32(0xC2B2AE35)
+    return x ^ (x >> jnp.uint32(16))
+
+
+def _noise_bits(col, k0, k1):
+    """Stateless hash: (global column, row key) -> uint32.
+
+    Two full murmur3-fmix rounds, one per key word, so rows whose PRNG
+    keys differ in a single low bit (e.g. ``PRNGKey(i)`` for consecutive
+    ``i``) still get independent streams. Plain uint32 jnp ops only, so
+    the exact same bits come out of the compiled TPU kernel, the
+    interpreter, and the reference twin."""
+    x = col.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+    x = _fmix(x ^ k0)
+    return _fmix(x ^ k1)
+
+
+def _gumbel(col, k0, k1):
+    """Per-(row, column) standard Gumbel noise from the hash bits."""
+    bits = _noise_bits(col, k0, k1)
+    # top 24 bits -> u in (0, 1): exact in f32, never 0 or 1
+    u = ((bits >> jnp.uint32(8)).astype(jnp.int32).astype(jnp.float32)
+         * jnp.float32(2.0 ** -24) + jnp.float32(2.0 ** -25))
+    return -jnp.log(-jnp.log(u))
+
+
+def _tile_scores(h, c, vb, *, block_v, vocab, softcap, tau_safe):
+    """One (rows, block_v) tile of raw + scaled logits, never in HBM.
+
+    Returns (a, s, col, valid): raw softcapped logits (padded columns
+    -inf), temperature-scaled logits, global column ids, validity mask.
+    ``tau_safe`` is ``where(temperature > 0, temperature, 1)`` so greedy
+    rows score on the raw-logit scale (their LSE is the raw LSE);
+    ``tau_safe=None`` (the static all-greedy fast path) skips the scaled
+    copy entirely — ``s`` aliases ``a``."""
+    a = jax.lax.dot_general(h, c, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if softcap is not None:
+        a = softcap * jnp.tanh(a / softcap)
+    col = vb * block_v + jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+    valid = col < vocab
+    a = jnp.where(valid, a, _NEG)
+    s = a if tau_safe is None else jnp.where(valid, a / tau_safe, _NEG)
+    return a, s, col, valid
+
+
+def _block_argmax(x, col):
+    """(rows,) max + the FIRST column attaining it (jnp.argmax ties)."""
+    bm = jnp.max(x, axis=1, keepdims=True)
+    bi = jnp.min(jnp.where(x == bm, col, jnp.int32(2 ** 30)),
+                 axis=1, keepdims=True)
+    return bm, bi
+
+
+def _online_lse(m_old, s_old, tile):
+    """One streaming-LSE update step (cce_fwd's recurrence)."""
+    bmax = jnp.max(tile, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_old, bmax)
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    s_new = (s_old * jnp.exp(m_old - m_safe)
+             + jnp.sum(jnp.exp(tile - m_safe), axis=1, keepdims=True))
+    return m_new, s_new
+
+
+def _hist_update(hist_c, hist_m, s, valid, fl, wd, lse, *, n_buckets):
+    """Accumulate this tile into the per-row count/mass histograms.
+
+    Bucket j spans scaled logits ``[fl + j·wd/NH, fl + (j+1)·wd/NH)``;
+    tokens below ``fl`` (prob < PROB_FLOOR, see contract) are dropped."""
+    rel = (s - fl) / wd * n_buckets
+    q = jnp.floor(rel).astype(jnp.int32)
+    keep = valid & (q >= 0)
+    q = jnp.clip(q, 0, n_buckets - 1)
+    oh = ((q[:, :, None]
+           == jax.lax.broadcasted_iota(jnp.int32,
+                                       q.shape + (n_buckets,), 2))
+          & keep[:, :, None]).astype(jnp.float32)
+    w = jnp.where(keep, jnp.exp(s - lse), 0.0)
+    return (hist_c + jnp.sum(oh, axis=1),
+            hist_m + jnp.sum(oh * w[:, :, None], axis=1))
+
+
+def _thresholds(hist_c, hist_m, fl, wd, kf, pf, *, n_buckets):
+    """Histogram -> per-row keep threshold θ (−inf when no filter).
+
+    ``suffix[j] = count/mass of tokens with s >= bucket-j lower edge``
+    via one matmul with a constant lower-triangular matrix; θ_k is the
+    LOWEST bucket edge whose suffix count still reaches k (a superset of
+    exact top-k), θ_p likewise for mass p. Disabled filters (k <= 0,
+    p >= 1) contribute −inf; θ = max of the enabled ones."""
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (n_buckets, n_buckets), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (n_buckets, n_buckets),
+                                       1)).astype(jnp.float32)
+    sc = jax.lax.dot_general(hist_c, tri, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    sm = jax.lax.dot_general(hist_m, tri, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    step = wd / n_buckets
+    jk = jnp.sum((sc >= kf).astype(jnp.float32), axis=1,
+                 keepdims=True) - 1.0
+    jp = jnp.sum((sm >= pf).astype(jnp.float32), axis=1,
+                 keepdims=True) - 1.0
+    th_k = fl + jnp.clip(jk, 0.0, n_buckets - 1) * step
+    th_p = fl + jnp.clip(jp, 0.0, n_buckets - 1) * step
+    th_k = jnp.where(kf > 0.5, th_k, _NEG)
+    th_p = jnp.where(pf < 1.0, th_p, _NEG)
+    return jnp.maximum(th_k, th_p)
+
+
+def _gumbel_update(pm, pi, pv, s_kept, col, k0, k1):
+    """One streaming Gumbel-max step: perturb the kept scaled logits,
+    keep the best (perturbed max, token id, unperturbed scaled logit)."""
+    pert = jnp.where(s_kept > _NEG, s_kept + _gumbel(col, k0, k1), _NEG)
+    bm, bi = _block_argmax(pert, col)
+    bv_ = jnp.sum(jnp.where((pert == bm) & (col == bi), s_kept, 0.0),
+                  axis=1, keepdims=True)
+    upd = bm > pm
+    return (jnp.maximum(pm, bm), jnp.where(upd, bi, pi),
+            jnp.where(upd, bv_, pv))
+
+
+# ---------------------------------------------------------------------------
+# VMEM accounting (the choose_blocks discipline, decode-shaped).
+# ---------------------------------------------------------------------------
+
+def decode_vmem_working_set(block_b: int, block_v: int, d: int,
+                            itemsize: int, *, with_filter: bool = True,
+                            n_buckets: int = DEFAULT_BUCKETS) -> int:
+    """Estimated VMEM bytes one grid step of the decode kernel keeps live:
+    double-buffered h/C tiles, the f32 logit tile, ~12 per-row scratch
+    columns, and (filtered only) the two histograms, the rank-3 one-hot
+    temporary of the histogram sweep, and the constant suffix-sum
+    matrix."""
+    ws = (2 * (block_b + block_v) * d * itemsize
+          + 2 * block_b * block_v * 4          # raw + scaled logit tiles
+          + 12 * block_b * 4)
+    if with_filter:
+        ws += (2 * block_b * n_buckets * 4
+               + block_b * block_v * n_buckets * 4
+               + n_buckets * n_buckets * 4)
+    return ws
+
+
+def choose_decode_blocks(batch: int, vocab: int, d: int, itemsize: int,
+                         *, with_filter: bool = True,
+                         n_buckets: int = DEFAULT_BUCKETS
+                         ) -> tuple[int, int]:
+    """Pick (block_b, block_v) multiples of the (8, 128) TPU tile with
+    :func:`decode_vmem_working_set` under the shared VMEM budget.
+    ``block_b`` stays small (decode batches are narrow); ``block_v``
+    starts wide and halves until the working set fits."""
+    bb = max(8, min(32, _round_up(batch, 8)))
+    bv = 512
+    while bv > 128 and decode_vmem_working_set(
+            bb, bv, d, itemsize, with_filter=with_filter,
+            n_buckets=n_buckets) > _VMEM_BUDGET:
+        bv //= 2
+    while bb > 8 and decode_vmem_working_set(
+            bb, bv, d, itemsize, with_filter=with_filter,
+            n_buckets=n_buckets) > _VMEM_BUDGET:
+        bb //= 2
+    return bb, max(128, min(bv, _round_up(vocab, 128)))
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel.
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(h_ref, k_ref, t_ref, tk_ref, tp_ref, c_ref,
+                   tok_ref, lp_ref, *scr,
+                   softcap, vocab, block_v, nv, with_filter, with_sample,
+                   n_buckets):
+    (m_acc, s_acc, mn_acc, l_acc, gm_acc, th_acc, fl_acc, wd_acc,
+     pm_acc, pv_acc, gi_acc, pi_acc) = scr[:12]
+    hc_acc, hm_acc = (scr[12], scr[13]) if with_filter else (None, None)
+
+    v = pl.program_id(1)
+    vb = jax.lax.rem(v, nv)
+    phase = v // nv
+
+    tau = t_ref[...]                                     # (block_b, 1)
+    tau_safe = jnp.where(tau > 0.0, tau, 1.0) if with_sample else None
+    h = h_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    a, s, col, valid = _tile_scores(
+        h, c, vb, block_v=block_v, vocab=vocab, softcap=softcap,
+        tau_safe=tau_safe)
+    k0 = k_ref[:, 0:1]
+    k1 = k_ref[:, 1:2]
+
+    if not with_filter:
+        # Single sweep: online LSE + greedy argmax (+ Gumbel-max when any
+        # row samples; an all-greedy batch skips the noise hash and the
+        # perturbed-max recurrence entirely — with_sample is static, like
+        # with_filter, chosen host-side from the admitted requests).
+        @pl.when(vb == 0)
+        def _init():
+            m_acc[...] = jnp.full_like(m_acc, _NEG)
+            s_acc[...] = jnp.zeros_like(s_acc)
+            gm_acc[...] = jnp.full_like(gm_acc, _NEG)
+            gi_acc[...] = jnp.zeros_like(gi_acc)
+            if with_sample:
+                pm_acc[...] = jnp.full_like(pm_acc, _NEG)
+                pi_acc[...] = jnp.zeros_like(pi_acc)
+                pv_acc[...] = jnp.zeros_like(pv_acc)
+
+        m_acc[...], s_acc[...] = _online_lse(m_acc[...], s_acc[...], s)
+        bm, bi = _block_argmax(a, col)
+        upd = bm > gm_acc[...]
+        gi_acc[...] = jnp.where(upd, bi, gi_acc[...])
+        gm_acc[...] = jnp.maximum(gm_acc[...], bm)
+        if with_sample:
+            pm_acc[...], pi_acc[...], pv_acc[...] = _gumbel_update(
+                pm_acc[...], pi_acc[...], pv_acc[...], s, col, k0, k1)
+
+        @pl.when(vb == nv - 1)
+        def _done():
+            lse = m_acc[...] + jnp.log(s_acc[...])
+            if with_sample:
+                g = tau <= 0.0
+                tok_ref[...] = jnp.where(g, gi_acc[...], pi_acc[...])
+                lp_ref[...] = jnp.where(g, gm_acc[...] - lse,
+                                        pv_acc[...] - lse)
+            else:
+                tok_ref[...] = gi_acc[...]
+                lp_ref[...] = gm_acc[...] - lse
+        return
+
+    # -- phase 0: stats sweep (full LSE, scaled max/min, greedy argmax) --
+    @pl.when(phase == 0)
+    def _stats():
+        @pl.when(vb == 0)
+        def _init():
+            m_acc[...] = jnp.full_like(m_acc, _NEG)
+            s_acc[...] = jnp.zeros_like(s_acc)
+            mn_acc[...] = jnp.full_like(mn_acc, jnp.inf)
+            gm_acc[...] = jnp.full_like(gm_acc, _NEG)
+            gi_acc[...] = jnp.zeros_like(gi_acc)
+
+        m_acc[...], s_acc[...] = _online_lse(m_acc[...], s_acc[...], s)
+        mn_acc[...] = jnp.minimum(
+            mn_acc[...],
+            jnp.min(jnp.where(valid, s, jnp.inf), axis=1, keepdims=True))
+        bm, bi = _block_argmax(a, col)
+        upd = bm > gm_acc[...]
+        gi_acc[...] = jnp.where(upd, bi, gi_acc[...])
+        gm_acc[...] = jnp.maximum(gm_acc[...], bm)
+
+        @pl.when(vb == nv - 1)
+        def _fin():
+            lse = m_acc[...] + jnp.log(s_acc[...])
+            l_acc[...] = lse
+            fl = jnp.maximum(mn_acc[...], lse + _LOG_FLOOR)
+            fl_acc[...] = fl
+            wd_acc[...] = jnp.maximum(m_acc[...] - fl, 1e-6)
+
+    # -- phase 1: histogram sweep -> per-row keep threshold --------------
+    @pl.when(phase == 1)
+    def _hist():
+        @pl.when(vb == 0)
+        def _init():
+            hc_acc[...] = jnp.zeros_like(hc_acc)
+            hm_acc[...] = jnp.zeros_like(hm_acc)
+
+        hc_acc[...], hm_acc[...] = _hist_update(
+            hc_acc[...], hm_acc[...], s, valid, fl_acc[...], wd_acc[...],
+            l_acc[...], n_buckets=n_buckets)
+
+        @pl.when(vb == nv - 1)
+        def _fin():
+            th_acc[...] = _thresholds(
+                hc_acc[...], hm_acc[...], fl_acc[...], wd_acc[...],
+                tk_ref[...], tp_ref[...], n_buckets=n_buckets)
+
+    # -- phase 2: filtered Gumbel-max + kept-set LSE ---------------------
+    @pl.when(phase == 2)
+    def _sample():
+        @pl.when(vb == 0)
+        def _init():
+            # m/s are free again (full LSE saved in l_acc): reuse for the
+            # kept-set LSE of the renormalized filtered distribution
+            m_acc[...] = jnp.full_like(m_acc, _NEG)
+            s_acc[...] = jnp.zeros_like(s_acc)
+            pm_acc[...] = jnp.full_like(pm_acc, _NEG)
+            pi_acc[...] = jnp.zeros_like(pi_acc)
+            pv_acc[...] = jnp.zeros_like(pv_acc)
+
+        s_kept = jnp.where(s >= th_acc[...], s, _NEG)
+        m_acc[...], s_acc[...] = _online_lse(m_acc[...], s_acc[...],
+                                             s_kept)
+        pm_acc[...], pi_acc[...], pv_acc[...] = _gumbel_update(
+            pm_acc[...], pi_acc[...], pv_acc[...], s_kept, col, k0, k1)
+
+        @pl.when(vb == nv - 1)
+        def _done():
+            kept_lse = m_acc[...] + jnp.log(s_acc[...])
+            g = tau <= 0.0
+            tok_ref[...] = jnp.where(g, gi_acc[...], pi_acc[...])
+            lp_ref[...] = jnp.where(g, gm_acc[...] - l_acc[...],
+                                    pv_acc[...] - kept_lse)
+
+
+def decode_sample_pallas(h, C, keys, temperature, top_k, top_p, *,
+                         vocab: int, softcap: float | None = None,
+                         with_filter: bool = True,
+                         with_sample: bool = True,
+                         block_b: int = 8, block_v: int = 512,
+                         n_buckets: int = DEFAULT_BUCKETS,
+                         interpret: bool = False):
+    """Fused projection->sample: (token (B,), logprob (B,)) per row.
+
+    h: (B, D); C: (V_pad, D) classifier rows (``vocab`` <= V_pad real
+    columns); keys: (B, 2) uint32 per-row PRNG keys; temperature/top_p:
+    (B,) f32; top_k: (B,) int. ``with_filter`` is static: the False
+    variant is a single vocab sweep (greedy + pure-temperature rows), the
+    True variant runs the stats/histogram/sample three-sweep scheme.
+    ``with_sample=False`` (requires an all-greedy batch: every
+    ``temperature == 0``) additionally drops the noise hash and the
+    Gumbel-max recurrence — the sweep is a pure streaming argmax + LSE.
+    """
+    b, d = h.shape
+    vpad, d2 = C.shape
+    assert d == d2, (h.shape, C.shape)
+    if not with_sample:
+        with_filter = False      # filters only exist for sampled rows
+    nb, nv = pl.cdiv(b, block_b), pl.cdiv(vpad, block_v)
+    phases = 3 if with_filter else 1
+    grid = (nb, phases * nv)
+
+    keys = jnp.asarray(keys, jnp.uint32).reshape(b, 2)
+    t2 = jnp.asarray(temperature, jnp.float32).reshape(b, 1)
+    tk2 = jnp.asarray(top_k, jnp.float32).reshape(b, 1)
+    tp2 = jnp.asarray(top_p, jnp.float32).reshape(b, 1)
+
+    kernel = functools.partial(
+        _decode_kernel, softcap=softcap, vocab=vocab, block_v=block_v,
+        nv=nv, with_filter=with_filter, with_sample=with_sample,
+        n_buckets=n_buckets)
+
+    row_spec = lambda w: pl.BlockSpec((block_b, w), lambda nb_, v: (nb_, 0))
+    scratch = ([pltpu.VMEM((block_b, 1), jnp.float32)
+                for _ in range(10)]
+               + [pltpu.VMEM((block_b, 1), jnp.int32) for _ in range(2)])
+    if with_filter:
+        scratch += [pltpu.VMEM((block_b, n_buckets), jnp.float32)
+                    for _ in range(2)]
+    tok, lp = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            row_spec(d),                                  # h
+            row_spec(2),                                  # keys
+            row_spec(1), row_spec(1), row_spec(1),        # tau / k / p
+            pl.BlockSpec((block_v, d),
+                         lambda nb_, v: (jax.lax.rem(v, nv), 0)),   # C
+        ],
+        out_specs=[row_spec(1), row_spec(1)],
+        out_shape=[sds((b, 1), jnp.int32, h, C),
+                   sds((b, 1), jnp.float32, h, C)],
+        scratch_shapes=scratch,
+        compiler_params=_util.compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(h, keys, t2, tk2, tp2, C)
+    return tok[:, 0], lp[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Pure-JAX reference twin (the CPU execution path).
+# ---------------------------------------------------------------------------
+
+def decode_sample_ref(h, C, keys, temperature, top_k, top_p, *,
+                      vocab: int, softcap: float | None = None,
+                      with_filter: bool = True, with_sample: bool = True,
+                      block_v: int = 512, block_b: int = 8,
+                      n_buckets: int = DEFAULT_BUCKETS):
+    """Blockwise twin of the kernel: identical per-tile math and noise,
+    so tokens are bit-identical to the Pallas kernel. Never materializes
+    ``(B, V)``: rows go through ``lax.map`` in ``block_b`` chunks (rows
+    are independent, so chunking is numerically free) and the vocab is a
+    ``fori_loop`` over ``block_v`` tiles — the widest live arrays are one
+    ``(block_b, block_v)`` tile and the ``(block_b, block_v, n_buckets)``
+    histogram temporary, mirroring the kernel's VMEM footprint."""
+    b, d = h.shape
+    if not with_sample:
+        with_filter = False      # filters only exist for sampled rows
+    vpad = C.shape[0]
+    pad = (-vpad) % block_v
+    if pad:
+        C = jnp.pad(C, ((0, pad), (0, 0)))
+    nv = (vpad + pad) // block_v
+    h = h.astype(jnp.float32)
+    keys = jnp.asarray(keys, jnp.uint32).reshape(b, 2)
+    tau_v = jnp.asarray(temperature, jnp.float32).reshape(b)
+    kf_v = jnp.asarray(top_k, jnp.float32).reshape(b)
+    pf_v = jnp.asarray(top_p, jnp.float32).reshape(b)
+
+    def one_chunk(args):
+        hc, kc, tau, kf, pf = args
+        bb = hc.shape[0]
+        k0, k1 = kc[:, 0:1], kc[:, 1:2]
+        tau = tau[:, None]
+        kf = kf[:, None]
+        pf = pf[:, None]
+        tau_safe = jnp.where(tau > 0.0, tau, 1.0) if with_sample else None
+
+        def tile(vb):
+            c = jax.lax.dynamic_slice_in_dim(C, vb * block_v, block_v, 0)
+            return _tile_scores(hc, c.astype(jnp.float32), vb,
+                                block_v=block_v, vocab=vocab,
+                                softcap=softcap, tau_safe=tau_safe)
+
+        col1 = jnp.zeros((bb, 1), jnp.float32)
+        coli = jnp.zeros((bb, 1), jnp.int32)
+
+        def sweep(body, init):
+            # single-tile sweeps run straight-line: a trip-count-1
+            # fori_loop is a fusion barrier on XLA:CPU, and the unrolled
+            # form is op-for-op identical
+            if nv == 1:
+                return body(0, init)
+            return jax.lax.fori_loop(0, nv, body, init)
+
+        def stats_body(vb, carry):
+            m, se, mn, gm, gi = carry
+            a, s, col, valid = tile(vb)
+            m, se = _online_lse(m, se, s)
+            mn = jnp.minimum(mn, jnp.min(jnp.where(valid, s, jnp.inf),
+                                         axis=1, keepdims=True))
+            bm, bi = _block_argmax(a, col)
+            upd = bm > gm
+            return m, se, mn, jnp.maximum(gm, bm), jnp.where(upd, bi, gi)
+
+        m, se, mn, gm, gi = sweep(
+            stats_body,
+            (col1 + _NEG, col1, col1 + jnp.inf, col1 + _NEG, coli))
+        lse = m + jnp.log(se)
+
+        if with_filter:
+            fl = jnp.maximum(mn, lse + _LOG_FLOOR)
+            wd = jnp.maximum(m - fl, 1e-6)
+
+            def hist_body(vb, carry):
+                hc_, hm_ = carry
+                _, s, _, valid = tile(vb)
+                return _hist_update(hc_, hm_, s, valid, fl, wd, lse,
+                                    n_buckets=n_buckets)
+
+            hcnt, hmass = sweep(
+                hist_body,
+                (jnp.zeros((bb, n_buckets), jnp.float32),
+                 jnp.zeros((bb, n_buckets), jnp.float32)))
+            th = _thresholds(hcnt, hmass, fl, wd, kf, pf,
+                             n_buckets=n_buckets)
+        else:
+            th = col1 + _NEG
+
+        if not with_sample:
+            # all-greedy batch: no noise hash, no Gumbel recurrence — the
+            # stats sweep above already holds the argmax and the LSE
+            return gi[:, 0], (gm - lse)[:, 0]
+
+        def sample_body(vb, carry):
+            km, ks, pm, pi, pv = carry
+            _, s, col, _ = tile(vb)
+            s_kept = jnp.where(s >= th, s, _NEG)
+            km, ks = _online_lse(km, ks, s_kept)
+            pm, pi, pv = _gumbel_update(pm, pi, pv, s_kept, col, k0, k1)
+            return km, ks, pm, pi, pv
+
+        km, ks, pm, pi, pv = sweep(
+            sample_body,
+            (col1 + _NEG, col1, col1 + _NEG, coli, col1))
+        kept_lse = km + jnp.log(ks)
+
+        g = tau <= 0.0
+        tok = jnp.where(g, gi, pi)
+        lp = jnp.where(g, gm - lse, pv - kept_lse)
+        return tok[:, 0], lp[:, 0]
+
+    rpad = (-b) % block_b
+    if rpad:
+        h = jnp.pad(h, ((0, rpad), (0, 0)))
+        keys = jnp.pad(keys, ((0, rpad), (0, 0)))
+        tau_v = jnp.pad(tau_v, (0, rpad))
+        kf_v = jnp.pad(kf_v, (0, rpad))
+        pf_v = jnp.pad(pf_v, (0, rpad), constant_values=1.0)
+    nb = (b + rpad) // block_b
+    if nb == 1:
+        # one chunk: skip the lax.map scan wrapper (another fusion
+        # barrier) — identical math, straight-line
+        tok, lp = one_chunk((h, keys, tau_v, kf_v, pf_v))
+        return tok[:b], lp[:b]
+    chunked = (h.reshape(nb, block_b, d),
+               keys.reshape(nb, block_b, 2),
+               tau_v.reshape(nb, block_b),
+               kf_v.reshape(nb, block_b),
+               pf_v.reshape(nb, block_b))
+    tok, lp = jax.lax.map(one_chunk, chunked)
+    return tok.reshape(-1)[:b], lp.reshape(-1)[:b]
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher.
+# ---------------------------------------------------------------------------
+
+def decode_sample(h, C, keys, temperature, top_k, top_p, *, vocab: int,
+                  softcap: float | None = None, with_filter: bool = True,
+                  with_sample: bool = True,
+                  block_b: int | None = None, block_v: int | None = None,
+                  n_buckets: int = DEFAULT_BUCKETS,
+                  use_kernel: bool | None = None,
+                  interpret: bool | None = None):
+    """Fused logit-free decode sampling; auto-dispatches TPU kernel vs
+    pure-JAX twin (twin on CPU — the pltpu PRNG-free noise makes them
+    token-identical, so the choice is pure performance)."""
+    b, d = h.shape
+    if not with_sample:
+        with_filter = False
+    if use_kernel is None:
+        use_kernel = not _is_cpu()
+    if block_b is None or block_v is None:
+        if use_kernel:
+            cb, cv = choose_decode_blocks(b, C.shape[0], d,
+                                          h.dtype.itemsize,
+                                          with_filter=with_filter,
+                                          n_buckets=n_buckets)
+        else:
+            # the twin has no VMEM ceiling — tiny TPU tiles only
+            # serialize XLA:CPU into a slow fori_loop. Unfiltered, one
+            # full-vocab tile makes the sweep a single fused
+            # matmul+reduce (the live tile is (block_b, V_pad), still
+            # never (B, V)); filtered, the (block_b, block_v, n_buckets)
+            # histogram one-hot bounds the tile at 2048 columns (~16 MB
+            # of f32 temp at the default 256 buckets).
+            cb = min(8, b)
+            cv = C.shape[0] if not with_filter \
+                else min(C.shape[0], 2048)
+        block_b = block_b or cb
+        block_v = block_v or cv
+    if use_kernel:
+        return decode_sample_pallas(
+            h, C, keys, temperature, top_k, top_p, vocab=vocab,
+            softcap=softcap, with_filter=with_filter,
+            with_sample=with_sample, block_b=block_b,
+            block_v=block_v, n_buckets=n_buckets,
+            interpret=_is_cpu() if interpret is None else interpret)
+    return decode_sample_ref(
+        h, C, keys, temperature, top_k, top_p, vocab=vocab,
+        softcap=softcap, with_filter=with_filter,
+        with_sample=with_sample, block_v=block_v,
+        block_b=block_b, n_buckets=n_buckets)

@@ -142,7 +142,8 @@ def _decode_mode(args, cfg, params):
                  batch_size=args.batch_size,
                  prefill_chunk=args.prefill_chunk,
                  metrics=metrics, tracer=tracer,
-                 kv_page_size=args.kv_page_size, kv_pages=args.kv_pages)
+                 kv_page_size=args.kv_page_size, kv_pages=args.kv_pages,
+                 decode_kernel=args.decode_kernel)
     base = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                           top_p=args.top_p, seed=args.seed)
     pending = []          # [(arrive_step, submit_kwargs)]
@@ -270,6 +271,12 @@ def main():
                     help="prompt tokens ingested per step while a row "
                          "prefills (1 = one-token teacher forcing); "
                          "larger chunks cut TTFT without changing tokens")
+    ap.add_argument("--decode-kernel", choices=["fused", "dense"],
+                    default="fused",
+                    help="fused: logit-free projection->sample kernel "
+                         "(never materializes (B, V) logits); dense: "
+                         "explicit logits + device sampler (fallback and "
+                         "golden oracle)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy")
     ap.add_argument("--top-k", type=int, default=0, help="0 = off")

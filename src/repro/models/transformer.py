@@ -525,7 +525,37 @@ def reset_cache_rows(cache, rows):
     return out
 
 
-def serve_step(params, cfg, cache, tokens, cache_index, enc_out=None):
+def _lm_head(h_last, params, cfg, *, return_logits, sample, with_filter,
+             with_sample=True):
+    """Shared classifier tail for the serve entry points.
+
+    ``return_logits=True`` (dense path, the golden oracle): projects the
+    (B, D) last hidden states through the full classifier and returns
+    (B, V) logits. ``return_logits=False`` routes through the fused
+    projection->sample kernel instead — ``sample`` must then be a
+    ``(keys, temperature, top_k, top_p)`` tuple of per-row vectors and the
+    return value is ``(tokens (B,), logprobs (B,))``; the (B, V) logit
+    matrix never exists and ``logit_softcap`` is applied inside the
+    kernel's block loop.
+    """
+    C = classifier_matrix(params, cfg)
+    if return_logits:
+        logits = h_last.astype(jnp.float32) @ C.astype(jnp.float32).T
+        if cfg.logit_softcap is not None:
+            logits = cfg.logit_softcap * jnp.tanh(
+                logits / cfg.logit_softcap)
+        return logits[:, :cfg.vocab_size]
+    from repro.serve import sampling  # deferred: serve imports this module
+    keys, temperature, top_k, top_p = sample
+    return sampling.sample_tokens_fused(
+        h_last, C, keys, temperature, top_k, top_p,
+        vocab=cfg.vocab_size, softcap=cfg.logit_softcap,
+        with_filter=with_filter, with_sample=with_sample)
+
+
+def serve_step(params, cfg, cache, tokens, cache_index, enc_out=None, *,
+               return_logits=True, sample=None, with_filter=True,
+               with_sample=True):
     """One decode step: tokens (B, 1) -> (logits (B, V), new cache).
 
     ``cache_index`` is a scalar (all rows share one timeline — the legacy
@@ -533,24 +563,27 @@ def serve_step(params, cfg, cache, tokens, cache_index, enc_out=None):
     batching: each row writes its KV slot and builds its causal mask at its
     own absolute time).
 
-    The full vocab distribution for a *single* position is O(B·V) — the
-    memory-cheap case the paper notes is already fine at inference (§3.2).
-    For *scoring* candidate completions the (N, V) matrix reappears at
-    inference; that path goes through ``repro.serve.scoring`` instead,
-    which lowers it onto the CCE primitive.
+    With ``return_logits=False`` the step never materializes the (B, V)
+    logits: ``sample=(keys, temperature, top_k, top_p)`` is fed into the
+    fused projection->sample kernel (``kernels.decode_sample``) and the
+    step returns ``((tokens, logprobs), new cache)`` instead — the
+    serving-side dual of CCE. The dense mode stays the fallback and the
+    golden oracle; the paper's §3.2 "inference is memory-cheap" claim
+    only covers a single sequence's final position, not a full slot
+    batch paying (B, V) every step.
     """
     batch = {"tokens": tokens}
     hidden, new_cache, _ = lm_hidden(params, cfg, batch, cache=cache,
                                      cache_index=cache_index, enc_out=enc_out)
-    C = classifier_matrix(params, cfg)
-    logits = hidden[:, -1].astype(jnp.float32) @ C.astype(jnp.float32).T
-    if cfg.logit_softcap is not None:
-        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
-    return logits[:, :cfg.vocab_size], new_cache
+    out = _lm_head(hidden[:, -1], params, cfg, return_logits=return_logits,
+                   sample=sample, with_filter=with_filter,
+                   with_sample=with_sample)
+    return out, new_cache
 
 
 def serve_prefill(params, cfg, cache, tokens, cache_index, valid_len,
-                  enc_out=None):
+                  enc_out=None, *, return_logits=True, sample=None,
+                  with_filter=True, with_sample=True):
     """Chunked prefill: consume up to S tokens per row in ONE call.
 
     tokens (B, S); cache_index (B,) per-row absolute write position;
@@ -561,7 +594,9 @@ def serve_prefill(params, cfg, cache, tokens, cache_index, valid_len,
     position, new cache) — exactly the logits ``valid_len`` one-token
     ``serve_step`` calls would have ended on, so a scheduler can fuse
     prompt ingestion for some rows with single-token decode for others
-    (valid_len == 1) in the same jit.
+    (valid_len == 1) in the same jit. ``return_logits=False`` swaps the
+    classifier tail for the fused projection->sample kernel exactly as in
+    :func:`serve_step` (returns ``((tokens, logprobs), new cache)``).
     """
     if cfg.moe is not None:
         # serve must be drop-free: one-token decode never drops a token
@@ -579,8 +614,7 @@ def serve_prefill(params, cfg, cache, tokens, cache_index, valid_len,
         cache_index=cache_index, enc_out=enc_out, valid_len=valid_len)
     last = jnp.clip(valid_len - 1, 0, s - 1)
     h_last = jnp.take_along_axis(hidden, last[:, None, None], axis=1)[:, 0]
-    C = classifier_matrix(params, cfg)
-    logits = h_last.astype(jnp.float32) @ C.astype(jnp.float32).T
-    if cfg.logit_softcap is not None:
-        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
-    return logits[:, :cfg.vocab_size], new_cache
+    out = _lm_head(h_last, params, cfg, return_logits=return_logits,
+                   sample=sample, with_filter=with_filter,
+                   with_sample=with_sample)
+    return out, new_cache

@@ -91,6 +91,63 @@ def _engine_prefill_step(params, cache, state, enc_out, *, cfg, max_len,
     return cache, state
 
 
+# Fused (logit-free) variants: the forward hands its last hidden states
+# straight to the projection->sample kernel (kernels.decode_sample) and
+# advance_slots consumes (token, logprob) — no (B, V) array exists
+# anywhere in these jits (census-asserted by tests/test_serve.py).
+# ``with_filter`` / ``with_sample`` are static: the engine picks both
+# host-side from the live requests' SamplingParams, so an unfiltered
+# batch never pays the histogram-threshold sweeps and an all-greedy
+# batch never pays the Gumbel noise hash.
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "max_len", "with_filter",
+                                    "with_sample"),
+                   donate_argnums=(1, 2))
+def _engine_step_fused(params, cache, state, enc_out, *, cfg, max_len,
+                       with_filter, with_sample=True):
+    keys, rng_carry = sched.sample_keys(state)
+    (tok, lp), cache = T.serve_step(
+        params, cfg, cache, state["tok"], state["cache_index"],
+        enc_out=enc_out, return_logits=False,
+        sample=(keys, state["temperature"], state["top_k"],
+                state["top_p"]),
+        with_filter=with_filter, with_sample=with_sample)
+    state = sched.advance_slots(state, max_len=max_len,
+                                fused=(tok, lp, rng_carry))
+    return cache, state
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "max_len", "chunk",
+                                    "with_filter", "with_sample"),
+                   donate_argnums=(1, 2))
+def _engine_prefill_step_fused(params, cache, state, enc_out, *, cfg,
+                               max_len, chunk, with_filter,
+                               with_sample=True):
+    p = state["cache_index"]
+    live = state["active"] & ~state["done"]
+    in_prompt = live & (p < state["prompt_len"])
+    n_tok = jnp.where(in_prompt,
+                      jnp.minimum(chunk, state["prompt_len"] - p),
+                      1).astype(jnp.int32)
+    pcap = state["prompt_buf"].shape[1]
+    idx = jnp.clip(p[:, None] + jnp.arange(chunk), 0, pcap - 1)
+    ptoks = jnp.take_along_axis(state["prompt_buf"], idx, axis=1)
+    toks = jnp.where(in_prompt[:, None], ptoks,
+                     jnp.broadcast_to(state["tok"], ptoks.shape))
+    keys, rng_carry = sched.sample_keys(state, n_tok, chunk)
+    (tok, lp), cache = T.serve_prefill(
+        params, cfg, cache, toks, p, n_tok, enc_out=enc_out,
+        return_logits=False,
+        sample=(keys, state["temperature"], state["top_k"],
+                state["top_p"]),
+        with_filter=with_filter, with_sample=with_sample)
+    state = sched.advance_slots(state, max_len=max_len, n_tok=n_tok,
+                                chunk=chunk, fused=(tok, lp, rng_carry))
+    return cache, state
+
+
 class Engine:
     """Slot-based continuous-batching engine over ``serve_step``.
 
@@ -122,6 +179,14 @@ class Engine:
         resident page-aligned prompt prefixes copy-free with a refcount
         bump — chunked prefill skips straight past reused pages. Default
         off (dense per-slot layout).
+    decode_kernel: ``"dense"`` (explicit (B, V) logits + device sampler —
+        the fallback and golden oracle) or ``"fused"`` (logit-free:
+        ``kernels.decode_sample`` streams ``C^T h`` blockwise and the
+        step emits only (token, logprob) per row). Greedy decode is
+        token-identical between the two; sampled streams draw from the
+        same per-row distribution but different noise (streaming
+        Gumbel-max vs inverse-CDF). Default ``"dense"`` here; the serve
+        CLI defaults to ``"fused"``.
     """
 
     def __init__(self, cfg, params, *, max_len: int = 512,
@@ -130,7 +195,12 @@ class Engine:
                  enc_out=None, metrics: M.Registry | None = None,
                  tracer: Tr.Tracer | None = None,
                  kv_page_size: int | None = None,
-                 kv_pages: int | None = None):
+                 kv_pages: int | None = None,
+                 decode_kernel: str = "dense"):
+        if decode_kernel not in ("fused", "dense"):
+            raise ValueError(
+                f"decode_kernel must be 'fused' or 'dense', "
+                f"got {decode_kernel!r}")
         if enc_out is not None and enc_out.shape[0] != batch_size:
             raise ValueError(
                 f"enc_out has {enc_out.shape[0]} rows but the engine has "
@@ -143,6 +213,7 @@ class Engine:
         self.params = params
         self.max_len = max_len
         self.batch_size = batch_size
+        self.decode_kernel = decode_kernel
         self.prefill_chunk = int(prefill_chunk)
         self.enc_out = enc_out
         self.metrics = metrics if metrics is not None else M.NULL
@@ -167,7 +238,7 @@ class Engine:
         self.scheduler = sched.Scheduler(
             batch_size, max_prompt_len or max_len, max_new_cap or max_len,
             cfg.vocab_size, metrics=self.metrics, tracer=self.tracer,
-            pool=self.pool)
+            pool=self.pool, decode_kernel=decode_kernel)
         self.state = sched.init_state(batch_size,
                                       self.scheduler.max_prompt_len,
                                       self.scheduler.max_new_cap)
@@ -258,18 +329,46 @@ class Engine:
             self.tracer.annotate(req.rid, admit_step=self.step_count,
                                  reused_tokens=req.reused_tokens)
         prefill_toks = 0
+        fused = self.decode_kernel == "fused"
+        # with_filter is a static jit arg picked from host-side request
+        # state: True iff any live slot's SamplingParams filters. A row
+        # finishing mid-substep can only leave with_filter conservatively
+        # True — never incorrectly False.
+        wf = fused and any(
+            r is not None and (r.sampling.top_k > 0
+                               or r.sampling.top_p < 1.0)
+            for r in self.scheduler.slots)
+        # with_sample likewise: False only when every live slot decodes
+        # greedily — then the kernel sweep is a pure streaming argmax+LSE
+        # with no Gumbel noise hash at all
+        ws = fused and any(
+            r is not None and r.sampling.temperature > 0.0
+            for r in self.scheduler.slots)
         for _ in range(substeps):
             if self.prefill_chunk > 1 and any(
                     left > 1 for left in self._prefill_left):
-                self.cache, self.state = _engine_prefill_step(
-                    self.params, self.cache, self.state, self.enc_out,
-                    cfg=self.cfg, max_len=self.max_len,
-                    chunk=self.prefill_chunk)
+                if fused:
+                    self.cache, self.state = _engine_prefill_step_fused(
+                        self.params, self.cache, self.state, self.enc_out,
+                        cfg=self.cfg, max_len=self.max_len,
+                        chunk=self.prefill_chunk, with_filter=wf,
+                        with_sample=ws)
+                else:
+                    self.cache, self.state = _engine_prefill_step(
+                        self.params, self.cache, self.state, self.enc_out,
+                        cfg=self.cfg, max_len=self.max_len,
+                        chunk=self.prefill_chunk)
                 used = self.prefill_chunk
             else:
-                self.cache, self.state = _engine_step(
-                    self.params, self.cache, self.state, self.enc_out,
-                    cfg=self.cfg, max_len=self.max_len)
+                if fused:
+                    self.cache, self.state = _engine_step_fused(
+                        self.params, self.cache, self.state, self.enc_out,
+                        cfg=self.cfg, max_len=self.max_len,
+                        with_filter=wf, with_sample=ws)
+                else:
+                    self.cache, self.state = _engine_step(
+                        self.params, self.cache, self.state, self.enc_out,
+                        cfg=self.cfg, max_len=self.max_len)
                 used = 1
             for i, req in enumerate(self.scheduler.slots):
                 if req is not None and self._prefill_left[i] > 0:
@@ -300,8 +399,21 @@ class Engine:
         if mets.enabled:
             mets.counter("serve_engine_steps_total").inc(substeps)
             mets.counter("serve_prefill_tokens_total").inc(prefill_toks)
-            mets.histogram("serve_step_wall_seconds").observe(
+            mets.histogram(
+                "serve_step_wall_seconds",
+                {"decode_kernel": self.decode_kernel}).observe(
                 (t_end - t_start) / substeps)
+            if fused:
+                # HBM bytes the fused path did NOT move this step: the
+                # (B, V_pad) f32 logit write/read the dense path pays,
+                # minus the fused outputs (token + logprob = 8 B/row).
+                # Pure host arithmetic — no device sync.
+                avoided = self.batch_size * (
+                    self.cfg.padded_vocab_size * 4 - 8)
+                mets.gauge("serve_decode_hbm_bytes_avoided").set(avoided)
+                mets.counter(
+                    "serve_decode_hbm_bytes_avoided_total").inc(
+                    avoided * substeps)
         return self._sync()
 
     def _step_time(self, s: int) -> float:
@@ -341,9 +453,10 @@ class Engine:
         rows = self.scheduler.finished_rows(done, active)
         if not rows:
             return []
-        out_host, n_host, fin_host, gen_host = jax.device_get(
+        out_host, n_host, fin_host, gen_host, lp_host = jax.device_get(
             (self.state["out_buf"], self.state["n_out"],
-             self.state["finish"], self.state["gen_step"]))
+             self.state["finish"], self.state["gen_step"],
+             self.state["logprob_buf"]))
         for i in rows:
             if int(gen_host[i]) >= 0:
                 # gen_step is the 0-based index of the advance_slots call
@@ -352,7 +465,7 @@ class Engine:
                     int(gen_host[i]) + 1)
             self._prefill_left[i] = 0
         self.state, comps = self.scheduler.retire(
-            self.state, rows, out_host, n_host, fin_host)
+            self.state, rows, out_host, n_host, fin_host, lp_host)
         return comps
 
     def run(self, substeps: int = 1, max_steps: int | None = None):

@@ -6,11 +6,22 @@ nucleus sampling. ``temperature == 0`` selects greedy for that row — the
 whole policy surface lives in arrays, never in Python control flow, so the
 engine's decode step stays one jit with no per-row host sync.
 
-One descending sort of the (B, V) logits serves both the top-k threshold
-(k-th largest value per row, with per-row k) and the top-p nucleus cutoff
-(first prefix whose probability mass reaches p). That is O(B·V log V)
-device work against the O(B·V) logits the step already holds — the serve
-path where the paper notes full logits are cheap (§3.2).
+Two sampling paths share this policy surface:
+
+* **Fused (default serve path)** — :func:`sample_tokens_fused` routes the
+  last hidden state straight into ``kernels.decode_sample``: the ``(B, V)``
+  logit matrix is never materialized and the decode step's HBM traffic
+  drops by the whole vocab-logit write/read. This is the serving-side dual
+  of the paper's training claim: §3.2 only licenses full logits for a
+  *single* token's forward, and a continuous-batching engine pays that
+  `(B, V)` cost (plus an ``O(B·V log V)`` sort for top-k/top-p) on *every*
+  step — exactly the waste CCE eliminates from training.
+* **Dense (fallback + golden oracle)** — :func:`sample_tokens` keeps the
+  explicit-logits pipeline: one descending sort of the ``(B, V)`` logits
+  serves both the top-k threshold and the top-p nucleus cutoff. Batches
+  where no row filters (every ``top_k == 0`` and ``top_p >= 1``) skip the
+  sort entirely. Greedy decode is token-identical between the two paths;
+  the golden serve tests pin that.
 """
 
 from __future__ import annotations
@@ -19,6 +30,8 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.decode_sample import decode_sample as _decode_sample
 
 _NEG_INF = jnp.finfo(jnp.float32).min
 
@@ -81,30 +94,87 @@ def _filter_top_p(sorted_desc, scaled, top_p):
     return jnp.where(keep, scaled, _NEG_INF)
 
 
-def sample_tokens(logits, keys, temperature, top_k, top_p):
-    """One sampled token per row, fully on device.
+def sample_tokens(logits, keys, temperature, top_k, top_p, *,
+                  return_logprob: bool = False):
+    """One sampled token per row, fully on device (dense path).
 
     logits: (B, V) f32; keys: (B,) batch of PRNG keys (uint32 (B, 2));
     temperature/top_p: (B,) f32; top_k: (B,) int32. Rows with
     ``temperature == 0`` take the argmax (their PRNG key is ignored); an
     all-greedy batch skips the sort/filter pipeline entirely via
-    ``lax.cond`` (only the taken branch runs), so the default decode path
-    stays a plain argmax.
-    Returns (B,) int32.
+    ``lax.cond`` (only the taken branch runs), and a sampled batch where
+    no row filters (every ``top_k == 0`` and ``top_p >= 1``) skips the
+    ``O(B·V log V)`` sort the same way — pure-temperature decode is one
+    softmax draw.
+
+    Returns (B,) int32 tokens, or ``(tokens, logprobs)`` with
+    ``return_logprob=True``. Greedy logprobs are under the raw softmax;
+    filtered rows report the *renormalized* kept-set logprob (the same
+    contract as the fused kernel, DESIGN.md §10).
     """
     logits = logits.astype(jnp.float32)
     arg = greedy(logits)
+    b = logits.shape[0]
+    rows = jnp.arange(b)
+
+    def greedy_lp():
+        lsm = jax.nn.log_softmax(logits, axis=-1)
+        return lsm[rows, arg]
+
+    def greedy_only(_):
+        if not return_logprob:
+            return arg
+        return arg, greedy_lp()
 
     def drawn(_):
         scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
-        sorted_desc = -jnp.sort(-scaled, axis=-1)
-        filtered = _filter_top_k(sorted_desc, scaled, top_k)
-        # nucleus on the *already top-k-filtered* distribution would change
-        # the sorted prefix; following vLLM we apply both filters to the
-        # same temperature-scaled logits and intersect the keep sets.
-        filtered = _filter_top_p(sorted_desc, filtered, top_p)
+
+        def with_filters(_):
+            sorted_desc = -jnp.sort(-scaled, axis=-1)
+            filtered = _filter_top_k(sorted_desc, scaled, top_k)
+            # nucleus on the *already top-k-filtered* distribution would
+            # change the sorted prefix; following vLLM we apply both
+            # filters to the same temperature-scaled logits and intersect
+            # the keep sets.
+            return _filter_top_p(sorted_desc, filtered, top_p)
+
+        filtered = jax.lax.cond(
+            jnp.any((top_k > 0) | (top_p < 1.0)), with_filters,
+            lambda _: scaled, None)
         d = jax.vmap(jax.random.categorical)(keys, filtered)
-        return jnp.where(temperature <= 0.0, arg, d.astype(jnp.int32))
+        tok = jnp.where(temperature <= 0.0, arg, d.astype(jnp.int32))
+        if not return_logprob:
+            return tok
+        kept_lsm = jax.nn.log_softmax(filtered, axis=-1)
+        lp = jnp.where(temperature <= 0.0, greedy_lp(),
+                       kept_lsm[rows, tok])
+        return tok, lp
 
     return jax.lax.cond(jnp.any(temperature > 0.0), drawn,
-                        lambda _: arg, None)
+                        greedy_only, None)
+
+
+def sample_tokens_fused(hidden, C, keys, temperature, top_k, top_p, *,
+                        vocab: int, softcap: float | None = None,
+                        with_filter: bool = True,
+                        with_sample: bool = True,
+                        use_kernel: bool | None = None):
+    """Logit-free sampling: last hidden states straight to tokens.
+
+    hidden: (B, D) last-position hidden states; C: (V_pad, D) classifier
+    rows; remaining args as :func:`sample_tokens`. Streams ``C^T h``
+    blockwise through ``kernels.decode_sample`` — the ``(B, V)`` logits
+    never exist — and returns ``(tokens (B,) int32, logprobs (B,) f32)``.
+    ``with_filter`` and ``with_sample`` must be static Python bools: pass
+    ``with_filter=False`` when every sampled row in the batch has
+    ``top_k == 0`` and ``top_p >= 1`` to skip the histogram-threshold
+    sweeps, and ``with_sample=False`` when every row is greedy
+    (``temperature == 0``) to additionally skip the Gumbel noise hash —
+    the engine selects both host-side from the admitted requests'
+    :class:`SamplingParams`.
+    """
+    tok, lp = _decode_sample(
+        hidden, C, keys, temperature, top_k, top_p, vocab=vocab,
+        softcap=softcap, with_filter=with_filter,
+        with_sample=with_sample, use_kernel=use_kernel)
+    return tok, lp

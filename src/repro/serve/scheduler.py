@@ -67,6 +67,10 @@ class Completion:
     submit_time: float = 0.0
     first_token_time: Optional[float] = None
     finish_time: float = 0.0
+    # per generated token: log-probability under the distribution it was
+    # drawn from (raw softmax for greedy rows, renormalized kept-set
+    # distribution for filtered rows — DESIGN.md §10)
+    logprobs: List[float] = dataclasses.field(default_factory=list)
 
 
 def init_state(batch_size: int, max_prompt_len: int, max_new_cap: int):
@@ -80,6 +84,7 @@ def init_state(batch_size: int, max_prompt_len: int, max_new_cap: int):
         "prompt_buf": jnp.zeros((b, max_prompt_len), jnp.int32),
         "prompt_len": jnp.ones((b,), jnp.int32),
         "out_buf": jnp.zeros((b, max_new_cap), jnp.int32),
+        "logprob_buf": jnp.zeros((b, max_new_cap), jnp.float32),
         "n_out": jnp.zeros((b,), jnp.int32),
         "max_new": jnp.ones((b,), jnp.int32),
         "eos": jnp.full((b,), NO_EOS, jnp.int32),
@@ -100,22 +105,60 @@ def init_state(batch_size: int, max_prompt_len: int, max_new_cap: int):
     }
 
 
-def advance_slots(state, logits, *, max_len: int, n_tok=None,
-                  chunk: int = 1):
-    """One slot-state transition given this step's (B, V) logits.
+def sample_keys(state, n_tok=None, chunk: int = 1):
+    """This step's per-row sampling key + the advanced PRNG carry.
 
-    Pure function of (state, logits) — the engine fuses it with
-    ``serve_step``/``serve_prefill`` into a single jit. Per row: sample a
-    token, decide whether it is teacher-forced prompt or generated output,
-    record it, update EOS/length/capacity stop flags, and advance
+    Each row's PRNG stream advances by exactly ``n_tok`` splits and the
+    sample key is the one the ``n_tok``-th one-token step would have
+    used, so a chunked prefill replays the identical token sequence,
+    greedy or sampled. Factored out of :func:`advance_slots` because the
+    fused decode path needs the key *before* the forward (it goes into
+    the projection->sample kernel), while the dense path draws after.
+    """
+    b = state["rng"].shape[0]
+    if n_tok is None:
+        n_tok = jnp.ones((b,), jnp.int32)
+    if chunk == 1:
+        rng_next = jax.vmap(lambda k: jax.random.split(k, 2))(state["rng"])
+        return rng_next[:, 1], rng_next[:, 0]
+    carry, keys, carries = state["rng"], [], [state["rng"]]
+    for _ in range(chunk):          # static unroll: chunk is a jit const
+        nxt = jax.vmap(lambda k: jax.random.split(k, 2))(carry)
+        keys.append(nxt[:, 1])
+        carry = nxt[:, 0]
+        carries.append(carry)
+    keys = jnp.stack(keys, 1)                       # (B, chunk, 2)
+    carries = jnp.stack(carries, 1)                 # (B, chunk+1, 2)
+    sel = jnp.clip(n_tok - 1, 0, chunk - 1)
+    sample_key = jnp.take_along_axis(
+        keys, sel[:, None, None], axis=1)[:, 0]
+    rng_carry = jnp.take_along_axis(
+        carries, jnp.clip(n_tok, 0, chunk)[:, None, None],
+        axis=1)[:, 0]
+    return sample_key, rng_carry
+
+
+def advance_slots(state, logits=None, *, max_len: int, n_tok=None,
+                  chunk: int = 1, fused=None):
+    """One slot-state transition from this step's model output.
+
+    Pure function — the engine fuses it with ``serve_step``/
+    ``serve_prefill`` into a single jit. Per row: sample a token, decide
+    whether it is teacher-forced prompt or generated output, record it
+    (token + logprob), update EOS/length/capacity stop flags, and advance
     ``cache_index`` only for rows still running.
 
+    Two input modes:
+
+    * dense — ``logits`` is this step's (B, V) matrix; the sampler runs
+      here (:func:`sampling.sample_tokens`).
+    * fused — ``fused=(sampled, logprob, rng_carry)`` as produced by the
+      projection->sample kernel plus :func:`sample_keys`; no (B, V)
+      array ever reaches this function.
+
     n_tok (B,): tokens each row consumed this step (chunked prefill);
-    defaults to one. ``chunk`` is the static upper bound of ``n_tok`` —
-    each row's PRNG stream is advanced by exactly ``n_tok`` splits and the
-    sample is drawn with the key the ``n_tok``-th one-token step would
-    have used, so a chunked prefill replays the identical token sequence,
-    greedy or sampled.
+    defaults to one. ``chunk`` is the static upper bound of ``n_tok``
+    (see :func:`sample_keys` for the replay guarantee).
     """
     b, m = state["out_buf"].shape
     rows = jnp.arange(b)
@@ -123,28 +166,14 @@ def advance_slots(state, logits, *, max_len: int, n_tok=None,
     if n_tok is None:
         n_tok = jnp.ones((b,), jnp.int32)
 
-    if chunk == 1:
-        rng_next = jax.vmap(lambda k: jax.random.split(k, 2))(state["rng"])
-        sample_key = rng_next[:, 1]
-        rng_carry = rng_next[:, 0]
+    if fused is None:
+        sample_key, rng_carry = sample_keys(state, n_tok, chunk)
+        sampled, logprob = S.sample_tokens(
+            logits, sample_key, state["temperature"], state["top_k"],
+            state["top_p"], return_logprob=True)
     else:
-        carry, keys, carries = state["rng"], [], [state["rng"]]
-        for _ in range(chunk):      # static unroll: chunk is a jit const
-            nxt = jax.vmap(lambda k: jax.random.split(k, 2))(carry)
-            keys.append(nxt[:, 1])
-            carry = nxt[:, 0]
-            carries.append(carry)
-        keys = jnp.stack(keys, 1)                       # (B, chunk, 2)
-        carries = jnp.stack(carries, 1)                 # (B, chunk+1, 2)
-        sel = jnp.clip(n_tok - 1, 0, chunk - 1)
-        sample_key = jnp.take_along_axis(
-            keys, sel[:, None, None], axis=1)[:, 0]
-        rng_carry = jnp.take_along_axis(
-            carries, jnp.clip(n_tok, 0, chunk)[:, None, None],
-            axis=1)[:, 0]
-    sampled = S.sample_tokens(logits, sample_key,
-                              state["temperature"], state["top_k"],
-                              state["top_p"])
+        sampled, logprob, rng_carry = fused
+        sampled = sampled.astype(jnp.int32)
 
     cur_pos = state["cache_index"]
     nxt_pos = cur_pos + n_tok
@@ -162,6 +191,9 @@ def advance_slots(state, logits, *, max_len: int, n_tok=None,
     cur_val = state["out_buf"][rows, slot]
     out_buf = state["out_buf"].at[rows, slot].set(
         jnp.where(gen, sampled, cur_val))
+    cur_lp = state["logprob_buf"][rows, slot]
+    logprob_buf = state["logprob_buf"].at[rows, slot].set(
+        jnp.where(gen, logprob, cur_lp))
     n_out = state["n_out"] + gen
 
     hit_eos = gen & (state["eos"] != NO_EOS) & (sampled == state["eos"])
@@ -178,6 +210,7 @@ def advance_slots(state, logits, *, max_len: int, n_tok=None,
         cache_index=jnp.where(advance, nxt_pos, cur_pos),
         done=done,
         out_buf=out_buf,
+        logprob_buf=logprob_buf,
         n_out=n_out,
         rng=rng_carry,
         finish=jnp.where(
@@ -245,8 +278,11 @@ class Scheduler:
                  max_new_cap: int, vocab_size: int,
                  metrics: M.Registry | None = None,
                  tracer: Tr.Tracer | None = None,
-                 pool=None):
+                 pool=None, decode_kernel: str = "dense"):
         self.batch_size = batch_size
+        # which decode path feeds this scheduler ("fused" | "dense") —
+        # only a metrics label, so the two paths separate in traces
+        self.decode_kernel = decode_kernel
         self.max_prompt_len = max_prompt_len
         self.max_new_cap = max_new_cap
         self.vocab_size = vocab_size
@@ -431,14 +467,19 @@ class Scheduler:
                 and bool(done_host[i]) and bool(active_host[i])]
 
     def retire(self, state, rows, out_host, n_out_host,
-               finish_host) -> tuple:
+               finish_host, lp_host=None) -> tuple:
         """Free the slots of ``rows`` and return (new_state, completions).
-        ``out_host``/``n_out_host``/``finish_host`` are host copies."""
+        ``out_host``/``n_out_host``/``finish_host``/``lp_host`` are host
+        copies (``lp_host``: per-token logprobs, optional)."""
         comps = []
         now = time.time()
         mets = self.metrics
         ttft_h = mets.histogram("serve_ttft_seconds")
-        itl_h = mets.histogram("serve_itl_seconds")
+        # ITL/step-wall carry a decode_kernel label so the fused and
+        # dense paths separate in traces; TTFT stays unlabeled (it is
+        # admission-dominated, not decode-path-dominated)
+        itl_h = mets.histogram("serve_itl_seconds",
+                               {"decode_kernel": self.decode_kernel})
         gen_c = mets.counter("serve_generated_tokens_total")
         for i in rows:
             req = self.slots[i]
@@ -452,6 +493,8 @@ class Scheduler:
                 submit_time=req.submit_time,
                 first_token_time=req.first_token_time,
                 finish_time=now,
+                logprobs=([] if lp_host is None
+                          else [float(x) for x in lp_host[i][:n]]),
             )
             comps.append(c)
             self.slots[i] = None

@@ -1,0 +1,250 @@
+"""Tests for kernels/decode_sample.py — the fused projection->sample
+(logit-free decode) kernel and its pure-JAX reference twin.
+
+The twin is the CPU execution path and the Pallas kernel (interpret mode
+here) must be *token-identical* to it: both run the same per-tile math
+and the same counter-based hash noise, so every divergence is a bug, not
+tolerance. Distributional correctness is pinned against
+``jax.random.categorical``; the top-k/top-p histogram thresholds are
+checked against the conservative-superset contract of DESIGN.md §10.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import decode_sample as ds
+from repro.kernels.ops import _VMEM_BUDGET
+
+
+def _problem(b=8, d=64, vpad=512, vocab=500, seed=0):
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.standard_normal((b, d)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((vpad, d)), jnp.float32)
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(b))
+    return h, C, keys
+
+
+MIXED_TEMP = jnp.asarray([0.0, 1.0, 0.7, 0.0, 1.3, 1.0, 0.5, 2.0])
+MIXED_TOPK = jnp.asarray([0, 0, 5, 0, 50, 0, 3, 10], jnp.int32)
+MIXED_TOPP = jnp.asarray([1.0, 0.9, 1.0, 1.0, 0.95, 1.0, 1.0, 0.8])
+
+
+# ---------------------------------------------------------------------------
+# Kernel == twin (bit-exact tokens, close logprobs).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("with_filter", [False, True])
+@pytest.mark.parametrize("softcap", [None, 30.0])
+def test_kernel_matches_ref_twin(with_filter, softcap):
+    h, C, keys = _problem()
+    tk = MIXED_TOPK if with_filter else jnp.zeros(8, jnp.int32)
+    tp = MIXED_TOPP if with_filter else jnp.ones(8)
+    t_ref, l_ref = ds.decode_sample_ref(
+        h, C, keys, MIXED_TEMP, tk, tp, vocab=500, softcap=softcap,
+        with_filter=with_filter, block_v=128)
+    t_ker, l_ker = ds.decode_sample_pallas(
+        h, C, keys, MIXED_TEMP, tk, tp, vocab=500, softcap=softcap,
+        with_filter=with_filter, block_b=8, block_v=128, interpret=True)
+    np.testing.assert_array_equal(t_ref, t_ker)
+    np.testing.assert_allclose(l_ref, l_ker, rtol=1e-5, atol=1e-5)
+
+
+def test_twin_row_chunking_is_invisible():
+    """The twin processes rows in block_b chunks (lax.map); a non-multiple
+    row count and different chunk sizes must not change any row."""
+    h, C, keys = _problem(b=12)
+    temp = jnp.asarray([0.0, 0.9] * 6)
+    tk = jnp.asarray([0, 7] * 6, jnp.int32)
+    tp = jnp.asarray([1.0, 0.85] * 6)
+    a = ds.decode_sample_ref(h, C, keys, temp, tk, tp, vocab=500,
+                             block_v=128, block_b=8)
+    b_ = ds.decode_sample_ref(h, C, keys, temp, tk, tp, vocab=500,
+                              block_v=128, block_b=4)
+    np.testing.assert_array_equal(a[0], b_[0])
+    np.testing.assert_allclose(a[1], b_[1], rtol=1e-6)
+
+
+def test_block_v_is_invisible():
+    """The online-LSE / running-max recurrences must not depend on the
+    vocab tiling: tokens are identical across block_v choices."""
+    h, C, keys = _problem()
+    outs = [ds.decode_sample_ref(h, C, keys, MIXED_TEMP, MIXED_TOPK,
+                                 MIXED_TOPP, vocab=500, block_v=bv)[0]
+            for bv in (128, 256, 512)]
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+# ---------------------------------------------------------------------------
+# Greedy: token-identical to the dense argmax, logprob = log_softmax.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("softcap", [None, 20.0])
+def test_greedy_matches_dense(softcap):
+    h, C, keys = _problem()
+    logits = h @ C.T
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(jnp.arange(512) < 500, logits, -jnp.inf)
+    zero = jnp.zeros(8)
+    tok, lp = ds.decode_sample(
+        h, C, keys, zero, jnp.zeros(8, jnp.int32), jnp.ones(8),
+        vocab=500, softcap=softcap, with_filter=False)
+    np.testing.assert_array_equal(tok, jnp.argmax(logits, axis=1))
+    want = jax.nn.log_softmax(logits, axis=1)[jnp.arange(8), tok]
+    np.testing.assert_allclose(lp, want, rtol=1e-4, atol=1e-4)
+
+
+def test_greedy_unaffected_by_filter_params():
+    """Greedy rows (temperature 0) ignore top-k/top-p entirely — the
+    stats sweep runs their LSE on raw logits and the argmax is always in
+    the kept set."""
+    h, C, keys = _problem()
+    zero = jnp.zeros(8)
+    base, base_lp = ds.decode_sample_ref(
+        h, C, keys, zero, jnp.zeros(8, jnp.int32), jnp.ones(8),
+        vocab=500, with_filter=False)
+    filt, filt_lp = ds.decode_sample_ref(
+        h, C, keys, zero, jnp.full((8,), 3, jnp.int32), jnp.full((8,), .5),
+        vocab=500, with_filter=True)
+    np.testing.assert_array_equal(base, filt)
+    np.testing.assert_allclose(base_lp, filt_lp, rtol=1e-5, atol=1e-5)
+
+
+def test_greedy_with_sample_off_fast_path():
+    """``with_sample=False`` (the static all-greedy engine fast path —
+    no noise hash, no Gumbel recurrence, no scaled-logit copy) must be
+    output-identical to the default path on an all-greedy batch, in both
+    the twin and the interpret-mode kernel."""
+    h, C, keys = _problem()
+    zero = jnp.zeros(8)
+    tk0 = jnp.zeros(8, jnp.int32)
+    tp1 = jnp.ones(8)
+    base = ds.decode_sample_ref(h, C, keys, zero, tk0, tp1, vocab=500,
+                                with_filter=False, block_v=128)
+    fast = ds.decode_sample_ref(h, C, keys, zero, tk0, tp1, vocab=500,
+                                with_sample=False, block_v=128)
+    kfast = ds.decode_sample_pallas(h, C, keys, zero, tk0, tp1, vocab=500,
+                                    with_sample=False, block_b=8,
+                                    block_v=128, interpret=True)
+    np.testing.assert_array_equal(base[0], fast[0])
+    np.testing.assert_allclose(base[1], fast[1], rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(base[0], kfast[0])
+    np.testing.assert_allclose(base[1], kfast[1], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Streaming Gumbel-max: same distribution as jax.random.categorical.
+# ---------------------------------------------------------------------------
+
+def test_gumbel_matches_categorical_distribution():
+    """Empirical total-variation distance of the fused sampler from the
+    true softmax must match jax.random.categorical's at the same sample
+    count (both are fixed-seed, so this is deterministic)."""
+    rng = np.random.default_rng(1)
+    d, v, n, tau = 32, 256, 4000, 0.9
+    h1 = jnp.asarray(rng.standard_normal((1, d)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((v, d)), jnp.float32)
+    logits = (h1 @ C.T)[0]
+    p = np.asarray(jax.nn.softmax(logits / tau))
+
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(n))
+    tok, _ = jax.jit(lambda *a: ds.decode_sample_ref(
+        *a, vocab=v, with_filter=False, block_v=128))(
+        jnp.tile(h1, (n, 1)), C, keys, jnp.full((n,), tau),
+        jnp.zeros((n,), jnp.int32), jnp.ones((n,)))
+    emp = np.bincount(np.asarray(tok), minlength=v) / n
+    cat = jax.vmap(lambda k: jax.random.categorical(k, logits / tau))(keys)
+    emp_cat = np.bincount(np.asarray(cat), minlength=v) / n
+
+    tv_fused = 0.5 * np.abs(emp - p).sum()
+    tv_cat = 0.5 * np.abs(emp_cat - p).sum()
+    assert tv_fused <= tv_cat + 0.02, (tv_fused, tv_cat)
+
+
+def test_sampled_streams_deterministic_and_row_keyed():
+    """Same keys -> same tokens; distinct row keys -> (overwhelmingly)
+    distinct streams even for identical rows."""
+    h, C, keys = _problem()
+    h = jnp.tile(h[:1], (8, 1))          # identical rows, distinct keys
+    temp = jnp.full((8,), 1.0)
+    a = ds.decode_sample_ref(h, C, keys, temp, jnp.zeros(8, jnp.int32),
+                             jnp.ones(8), vocab=500, with_filter=False)
+    b = ds.decode_sample_ref(h, C, keys, temp, jnp.zeros(8, jnp.int32),
+                             jnp.ones(8), vocab=500, with_filter=False)
+    np.testing.assert_array_equal(a[0], b[0])
+    assert len(set(np.asarray(a[0]).tolist())) > 1
+
+
+# ---------------------------------------------------------------------------
+# top-k / top-p: conservative-superset contract (DESIGN.md §10).
+# ---------------------------------------------------------------------------
+
+def test_topk_topp_superset_contract():
+    """Every sampled token lies within width/n_buckets of the exact
+    filter cutoff — the kept set is a superset of the exact top-k/top-p
+    set, never tighter."""
+    rng = np.random.default_rng(3)
+    b, d, v = 8, 32, 256
+    h = jnp.asarray(rng.standard_normal((b, d)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((v, d)), jnp.float32)
+    temp = jnp.full((b,), 0.8)
+    tk = jnp.asarray([1, 2, 5, 10, 0, 3, 50, 0], jnp.int32)
+    tp = jnp.asarray([1.0, 1.0, 1.0, 1.0, 0.7, 0.9, 1.0, 0.5])
+    scaled = np.asarray((h @ C.T) / 0.8)
+    for trial in range(50):
+        keys = jax.vmap(jax.random.PRNGKey)(
+            jnp.arange(b) + 1000 + trial * b)
+        tok, _ = ds.decode_sample_ref(h, C, keys, temp, tk, tp, vocab=v,
+                                      with_filter=True, block_v=128)
+        for r in range(b):
+            srow, t = scaled[r], int(tok[r])
+            order = np.argsort(-srow)
+            width = srow.max() - max(
+                srow.min(), jax.nn.logsumexp(srow) + np.log(1e-9))
+            slack = width / ds.DEFAULT_BUCKETS
+            if int(tk[r]) > 0:
+                kth = srow[order[int(tk[r]) - 1]]
+                assert srow[t] >= kth - slack, (r, t)
+            if float(tp[r]) < 1.0:
+                cum = np.cumsum(np.asarray(jax.nn.softmax(srow))[order])
+                j = int(np.searchsorted(cum, float(tp[r])))
+                assert srow[t] >= srow[order[min(j, v - 1)]] - slack, (r, t)
+
+
+def test_top_k_one_pins_argmax():
+    """top_k=1 must always return the scaled argmax (the argmax is kept
+    by construction and nothing else survives the threshold)."""
+    h, C, keys = _problem(seed=5)
+    temp = jnp.full((8,), 2.0)
+    tok, _ = ds.decode_sample_ref(
+        h, C, keys, temp, jnp.ones(8, jnp.int32), jnp.ones(8),
+        vocab=500, with_filter=True, block_v=128)
+    logits = jnp.where(jnp.arange(512) < 500, h @ C.T, -jnp.inf)
+    np.testing.assert_array_equal(tok, jnp.argmax(logits, axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Block accounting.
+# ---------------------------------------------------------------------------
+
+def test_choose_decode_blocks_fits_budget():
+    for batch, vocab, d in [(8, 32768, 64), (32, 131072, 4096),
+                            (512, 262144, 8192)]:
+        for wf in (False, True):
+            bb, bv = ds.choose_decode_blocks(batch, vocab, d, 4,
+                                             with_filter=wf)
+            assert bb % 8 == 0 and bv % 128 == 0
+            assert ds.decode_vmem_working_set(
+                bb, bv, d, 4, with_filter=wf) <= _VMEM_BUDGET
+
+
+def test_filtered_budget_is_tighter():
+    """The histogram scratch (rank-3 one-hot + two histograms) must be
+    charged: the filtered working set strictly exceeds the unfiltered one
+    at the same blocks."""
+    assert (ds.decode_vmem_working_set(8, 512, 4096, 4, with_filter=True)
+            > ds.decode_vmem_working_set(8, 512, 4096, 4,
+                                         with_filter=False))
