@@ -10,7 +10,6 @@ block Alg. 4 would drop, never the reverse)."""
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

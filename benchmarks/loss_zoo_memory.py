@@ -27,7 +27,9 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import row
-from repro.analysis import hlo as hlo_an
+from repro.analysis.checks.memclass import (DENSE_CLASS, census_budget,
+                                            check_memory_class,
+                                            classify_hlo)
 from repro.core import cross_entropy
 from repro.losses import get_loss, list_losses
 
@@ -62,10 +64,10 @@ def _lowered_text(fn, n, d, v, dtype=jnp.bfloat16):
 
 def run(n=4096, d=512, v=65536):
     nv = n * v
-    # everything a CCE-class loss may legitimately hold: activations/grads
-    # (N·D), classifier/grad (V·D), plus the scan twin's per-block stacked
-    # dC (again V·D). 4x headroom still sits orders of magnitude below N·V.
-    budget = 4 * max(n * d, v * d)
+    # the classifier's budget — everything a CCE-class loss may
+    # legitimately hold (activations/grads N·D, classifier/grad V·D, the
+    # scan twin's stacked dC) with 4x headroom; see checks.memclass.
+    budget = census_budget(n, v, d)
     print(f"# loss_zoo_memory: N={n} D={d} V={v}  "
           f"NxV={nv:.3g} elems  budget={budget:.3g} elems  "
           f"(via repro.core.cross_entropy)")
@@ -74,23 +76,24 @@ def run(n=4096, d=512, v=65536):
     for name in list_losses():
         comp, text = _lowered_text(_value_and_grad_fn(name, "cce_jax",
                                                       n, d, v), n, d, v)
-        top = hlo_an.array_shape_census(text, top=1)[0]
+        finding = check_memory_class(text, n=n, v=v, d=d,
+                                     what=f"loss_zoo/{name}")
+        top_elems, top_desc = finding.data["census"][0]
         m = comp.memory_analysis()   # same compile: no second lowering
         live = m.temp_size_in_bytes + m.output_size_in_bytes
-        in_class = top[0] <= budget
-        ok &= in_class
+        ok &= finding.ok
         row(f"loss_zoo/{name}/cce_jax", 0,
-            f"largest={top[1]}({top[0]:.3g} elems) "
+            f"largest={top_desc}({top_elems:.3g} elems) "
             f"live={live/1e6:.0f}MB "
-            f"{'O(N.D+V.D) OK' if in_class else 'N×V MATERIALIZED!'}")
+            f"{'O(N.D+V.D) OK' if finding.ok else 'N×V MATERIALIZED!'}")
 
     # control: the dense head at the same size must show the N×V buffer
     _, text = _lowered_text(_value_and_grad_fn("nll", "dense", n, d, v),
                             n, d, v)
-    top = hlo_an.array_shape_census(text, top=1)[0]
+    observed = classify_hlo(text, n=n, v=v, d=d)
     row("loss_zoo/nll/dense(control)", 0,
-        f"largest={top[1]}({top[0]:.3g} elems) "
-        f"{'has NxV as expected' if top[0] >= nv else 'UNEXPECTEDLY SMALL'}")
+        f"observed {observed} "
+        f"{'as expected' if observed == DENSE_CLASS else '— UNEXPECTED'}")
 
     print(f"# memory-class verdict: "
           f"{'ALL LOSSES IN CCE CLASS' if ok else 'FAILURES ABOVE'}")

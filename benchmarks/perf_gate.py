@@ -27,17 +27,12 @@ baseline are listed as new so the baseline can be re-committed.
 from __future__ import annotations
 
 import argparse
-import sys
 
 from benchmarks.common import read_json, row_key
-
-#: Lower rank = strictly better memory behavior. Unknown/None classes rank
-#: worst so a fresh row can never dodge the gate by dropping the field.
-_CLASS_RANK = {"O(N·D + V·D)": 0, "O(N/K·V)": 1, "O(N·V)": 2}
-
-
-def class_rank(cls: str | None) -> int:
-    return _CLASS_RANK.get(cls, len(_CLASS_RANK))
+# Single source of truth for memory-class ordering: lower rank = strictly
+# better; unknown/None classes rank worst so a fresh row can never dodge
+# the gate by dropping the field.
+from repro.analysis.checks.memclass import class_rank
 
 
 def compare(baseline: list[dict], fresh: list[dict], *,

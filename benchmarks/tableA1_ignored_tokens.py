@@ -9,7 +9,6 @@ import jax.numpy as jnp
 from benchmarks.common import problem, row, wall_us
 from repro.core import cross_entropy
 from repro.core.compaction import compact_valid_tokens
-from repro.kernels.ref import IGNORE_INDEX
 
 N, D, V = 2048, 512, 16384
 IGNORE_FRAC = 0.45

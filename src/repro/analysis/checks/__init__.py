@@ -1,0 +1,41 @@
+"""repro.analysis.checks — static invariant verifier for the CCE contracts.
+
+Proves the repo's load-bearing claims without executing kernels:
+
+  * :mod:`memclass` — no O(N·V)-class intermediate in any compiled loss /
+    scoring / decode program (``assert_memory_class``, ``class_rank``);
+  * :mod:`pallas` — kernel launch contracts (VMEM working set vs budget &
+    formula claims, f32 accumulators, alias discipline, tile alignment)
+    extracted from traced jaxprs (``extract_pallas_calls``);
+  * :mod:`syncaudit` — the serving engine's "one device_get per step"
+    invariant and jit retrace hygiene, from the AST + jit introspection;
+  * :mod:`lint` — repo conventions (pallas_call only under
+    ``kernels/``, no host syncs in ``serve/`` step paths, CLI flags match
+    their dataclass fields).
+
+CLI: ``python -m repro.analysis.checks [--json out.json]`` — runs every
+family, prints per-invariant findings, exits non-zero on violation.
+"""
+
+from repro.analysis.checks.common import CheckError, Finding, Report  # noqa: F401
+from repro.analysis.checks.memclass import (  # noqa: F401
+    CCE_CLASS,
+    CHUNKED_CLASS,
+    DENSE_CLASS,
+    assert_memory_class,
+    census_budget,
+    check_memory_class,
+    class_rank,
+    classify_elems,
+    classify_hlo,
+    classify_jaxpr,
+    jaxpr_shape_census,
+)
+from repro.analysis.checks.pallas import (  # noqa: F401
+    PallasCallInfo,
+    assert_kernel_contracts,
+    check_contracts,
+    check_kernel_entry_points,
+    extract_pallas_calls,
+    sweep_cce_knobs,
+)

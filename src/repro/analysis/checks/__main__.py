@@ -1,0 +1,80 @@
+"""CLI: ``python -m repro.analysis.checks [--json out.json] [--only FAM]``.
+
+Runs every analyzer family and prints one line per invariant finding;
+exits non-zero if any invariant fails. ``--json`` additionally writes the
+full structured report (CI uploads it as an artifact).
+
+Families:
+  memclass  every backend / loss / scoring path / fused decode jit stays
+            out of the O(N·V) memory class (AOT lowering + HLO census)
+  pallas    kernel launch contracts: VMEM working set vs budget and the
+            vmem_working_set formula claims, f32 accumulators, alias and
+            tile discipline, plus the CCEConfig knob x geometry sweep
+  sync      the engine's one-device_get-per-step invariant and jit
+            retrace hygiene
+  lint      repo conventions (pallas_call location, host-sync location,
+            CLI flags vs dataclass fields)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _families():
+    from repro.analysis.checks import lint, pallas, prove, syncaudit
+    return {
+        "memclass": prove.prove_all,
+        "pallas": lambda: (pallas.check_kernel_entry_points()
+                           + pallas.sweep_cce_knobs()),
+        "sync": syncaudit.audit_all,
+        "lint": lint.lint_all,
+    }
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.checks",
+        description="static invariant verifier for the CCE contracts")
+    parser.add_argument("--json", metavar="PATH", default=None,
+                        help="write the structured findings report here")
+    parser.add_argument("--only", action="append", default=None,
+                        choices=sorted(_families()),
+                        help="run only this analyzer family (repeatable)")
+    parser.add_argument("--quiet", action="store_true",
+                        help="print failures only")
+    args = parser.parse_args(argv)
+
+    from repro.analysis.checks.common import Report
+
+    report = Report()
+    families = _families()
+    selected = args.only or sorted(families)
+    for fam in selected:
+        t0 = time.time()
+        findings = families[fam]()
+        report.extend(findings)
+        n_bad = sum(1 for f in findings if not f.ok)
+        print(f"== {fam}: {len(findings)} invariants checked, "
+              f"{n_bad} failed ({time.time() - t0:.1f}s)")
+        for f in findings:
+            if args.quiet and f.ok:
+                continue
+            mark = "ok  " if f.ok else "FAIL"
+            print(f"  {mark} [{f.invariant}] {f.subject}: {f.detail}")
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            fh.write(report.to_json())
+        print(f"report -> {args.json}")
+
+    print(f"{'PASS' if report.ok else 'FAIL'}: "
+          f"{len(report.findings)} invariants, "
+          f"{len(report.failures)} violations")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,97 @@
+"""Shared result types for the static invariant verifier.
+
+Every analyzer family (memclass / pallas / syncaudit / lint) reports
+:class:`Finding` records collected into a :class:`Report`. A finding is a
+single invariant evaluation — passed or failed — so the CLI can print the
+full catalogue of what was *proved*, not only what broke.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+
+@dataclasses.dataclass
+class Finding:
+    """One invariant evaluation.
+
+    family:    analyzer family ("memclass" | "pallas" | "sync" | "lint")
+    invariant: short machine-readable invariant id (e.g. "memory_class",
+               "vmem_budget", "alias_shape", "one_device_get")
+    subject:   what was checked (backend name, kernel entry point, file)
+    ok:        True iff the invariant holds
+    detail:    human-readable evidence (observed vs expected)
+    data:      structured evidence for the JSON report
+    """
+
+    family: str
+    invariant: str
+    subject: str
+    ok: bool
+    detail: str = ""
+    data: dict = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return {
+            "family": self.family,
+            "invariant": self.invariant,
+            "subject": self.subject,
+            "ok": self.ok,
+            "detail": self.detail,
+            "data": _jsonable(self.data),
+        }
+
+
+def _jsonable(obj: Any):
+    """Best-effort conversion to JSON-serializable structures."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return repr(obj)
+
+
+@dataclasses.dataclass
+class Report:
+    """Collected findings with pass/fail accounting."""
+
+    findings: list = dataclasses.field(default_factory=list)
+
+    def add(self, finding: Finding) -> Finding:
+        self.findings.append(finding)
+        return finding
+
+    def extend(self, findings) -> None:
+        for f in findings:
+            self.add(f)
+
+    @property
+    def failures(self) -> list:
+        return [f for f in self.findings if not f.ok]
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+    def as_dict(self) -> dict:
+        return {
+            "ok": self.ok,
+            "checked": len(self.findings),
+            "failed": len(self.failures),
+            "findings": [f.as_dict() for f in self.findings],
+        }
+
+    def to_json(self, **kwargs) -> str:
+        return json.dumps(self.as_dict(), indent=2, **kwargs)
+
+
+class CheckError(AssertionError):
+    """Raised by the assert_* helpers; carries the failing findings."""
+
+    def __init__(self, message: str, findings=()):
+        super().__init__(message)
+        self.findings = list(findings)

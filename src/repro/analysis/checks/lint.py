@@ -1,0 +1,134 @@
+"""Convention lint: small AST rules that keep the repo's layering honest.
+
+  * ``pallas_call`` (and the pallas import surface) lives only under
+    ``src/repro/kernels/`` — everything else goes through the wrapper
+    entry points, so the contract checker's kernel inventory stays
+    complete by construction.
+  * No host syncs (``device_get`` / ``block_until_ready``) outside
+    ``serve/engine.py``'s ``_sync`` in the serving package (the counting
+    variant of this rule lives in :mod:`syncaudit`; the lint is the
+    location rule applied file-by-file).
+  * Every ``--cce-*`` CLI flag maps onto a real ``CCEConfig`` dataclass
+    field with choices that the dataclass validator accepts — a renamed
+    knob fails the lint instead of silently drifting.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+
+from repro.analysis.checks.common import Finding
+
+#: path prefixes (relative to src/repro) allowed to call pallas_call
+PALLAS_ALLOWED = ("kernels" + os.sep, "kernels/")
+
+
+def _repo_src() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.normpath(os.path.join(here, "..", ".."))  # .../src/repro
+
+
+def _iter_sources(root):
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fname in sorted(filenames):
+            if fname.endswith(".py"):
+                path = os.path.join(dirpath, fname)
+                yield os.path.relpath(path, root), path
+
+
+def find_pallas_calls(source: str, filename: str = "<string>") -> list:
+    """Line numbers of ``pallas_call`` call sites / references."""
+    tree = ast.parse(source, filename=filename)
+    hits = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr == "pallas_call":
+            hits.append(node.lineno)
+        elif isinstance(node, ast.Name) and node.id == "pallas_call":
+            hits.append(node.lineno)
+    return hits
+
+
+def lint_pallas_location(src_root: str | None = None) -> list:
+    """``pallas_call`` only under ``src/repro/kernels/``."""
+    src_root = src_root or _repo_src()
+    misplaced = []
+    kernel_sites = 0
+    for rel, path in _iter_sources(src_root):
+        with open(path) as fh:
+            hits = find_pallas_calls(fh.read(), filename=path)
+        if not hits:
+            continue
+        if rel.startswith(PALLAS_ALLOWED):
+            kernel_sites += len(hits)
+        else:
+            misplaced += [f"{rel}:{ln}" for ln in hits]
+    return [Finding(
+        family="lint", invariant="pallas_call_location", subject="src/repro",
+        ok=not misplaced,
+        detail=(f"{kernel_sites} pallas_call sites, all under kernels/"
+                if not misplaced
+                else f"pallas_call outside kernels/: {', '.join(misplaced)}"),
+        data={"kernel_sites": kernel_sites, "misplaced": misplaced})]
+
+
+def lint_serve_host_syncs(src_root: str | None = None) -> list:
+    """Location rule: host syncs in ``serve/`` only in engine.py (the
+    per-function count lives in syncaudit)."""
+    src_root = src_root or _repo_src()
+    serve = os.path.join(src_root, "serve")
+    offenders = []
+    for rel, path in _iter_sources(serve):
+        with open(path) as fh:
+            tree = ast.parse(fh.read(), filename=path)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Attribute) and \
+                    node.attr in ("device_get", "block_until_ready"):
+                if rel != "engine.py" or node.attr == "block_until_ready":
+                    offenders.append(f"serve/{rel}:{node.lineno} "
+                                     f"({node.attr})")
+    return [Finding(
+        family="lint", invariant="serve_host_sync_location",
+        subject="serve/", ok=not offenders,
+        detail=("host syncs only in engine.py" if not offenders
+                else ", ".join(offenders)),
+        data={"offenders": offenders})]
+
+
+def lint_cli_flags() -> list:
+    """Every ``--cce-*`` flag maps to a live ``CCEConfig`` field and its
+    ``choices`` (if any) pass the dataclass validator."""
+    from repro.kernels.ops import CCEConfig
+    from repro.launch import cce_flags
+
+    fields = {f.name for f in dataclasses.fields(CCEConfig)}
+    problems = []
+    for flag, (field, kwargs) in cce_flags._FLAGS.items():
+        if field not in fields:
+            problems.append(f"{flag} -> CCEConfig.{field} does not exist")
+            continue
+        for choice in kwargs.get("choices", ()) or ():
+            try:
+                CCEConfig(**{field: choice})
+            except (ValueError, TypeError) as exc:
+                problems.append(
+                    f"{flag}: choice {choice!r} rejected by CCEConfig "
+                    f"({exc})")
+    try:  # the module's own validator must agree
+        cce_flags._validate_flags()
+    except Exception as exc:
+        problems.append(f"_validate_flags() raised: {exc}")
+    return [Finding(
+        family="lint", invariant="cli_flags_match_dataclass",
+        subject="launch/cce_flags", ok=not problems,
+        detail=(f"{len(cce_flags._FLAGS)} flags map onto CCEConfig fields; "
+                "all choices validate" if not problems
+                else "; ".join(problems)),
+        data={"flags": sorted(cce_flags._FLAGS),
+              "problems": problems})]
+
+
+def lint_all() -> list:
+    return (lint_pallas_location() + lint_serve_host_syncs()
+            + lint_cli_flags())

@@ -1,0 +1,246 @@
+"""Memory-class prover: "no O(N·V)-class intermediate" as a static check.
+
+The paper's central contract is a *memory class*: CCE computes the loss (and
+now logit-free decode) in O(N·D + V·D) memory — no buffer proportional to
+N·V (tokens × vocabulary) may exist anywhere in the compiled program. This
+module turns the repo's scattered hand-rolled census assertions into one
+symbolic classifier:
+
+  * bind the problem dimensions (N tokens, V vocab, D model width — decode
+    binds N := B, the batch) from the abstract arguments,
+  * walk the jaxpr (every equation's output avals, recursing into
+    sub-jaxprs) and/or the optimized HLO (``analysis.hlo.array_shape_census``),
+  * classify the largest intermediate against the dimension products:
+
+        elems >= N·V                  -> "O(N·V)"       (dense class)
+        budget < elems < N·V          -> "O(N/K·V)"     (chunked class)
+        elems <= budget               -> "O(N·D + V·D)" (CCE class)
+
+    where ``budget = 4 * max(N·D, V·D)`` — four activation/parameter-sized
+    buffers of slack, the same convention the census tests always used.
+
+The check is *discriminating* only when ``budget < N·V``; geometries that
+don't satisfy this are rejected rather than silently passing.
+
+:func:`assert_memory_class` is the single helper reused by tests,
+benchmarks (``loss_zoo_memory``), the serve CLI's ``--check-memory-class``
+and the ``repro.analysis.checks`` CLI. ``class_rank`` is the single source
+of truth for ordering memory classes (``benchmarks/perf_gate`` imports it).
+"""
+
+from __future__ import annotations
+
+import functools
+
+from repro.analysis import hlo as hlo_an
+from repro.analysis.checks.common import CheckError, Finding
+
+CCE_CLASS = "O(N·D + V·D)"
+CHUNKED_CLASS = "O(N/K·V)"
+DENSE_CLASS = "O(N·V)"
+
+#: Rank order: lower is strictly better (smaller asymptotic footprint).
+#: Unknown classes rank worst so a typo'd class never passes a gate.
+_CLASS_RANK = {CCE_CLASS: 0, CHUNKED_CLASS: 1, DENSE_CLASS: 2}
+
+
+def class_rank(cls: str | None) -> int:
+    """Order memory classes; unknown strings rank below everything."""
+    return _CLASS_RANK.get(cls, len(_CLASS_RANK))
+
+
+def census_budget(n: int, v: int, d: int) -> int:
+    """Largest buffer (in elements) the CCE class may own: four
+    activation/parameter-sized arrays of slack, never a function of N·V."""
+    return 4 * max(n * d, v * d)
+
+
+def is_discriminating(n: int, v: int, d: int) -> bool:
+    """True iff the budget can actually separate CCE from dense at this
+    geometry (budget < N·V)."""
+    return census_budget(n, v, d) < n * v
+
+
+def classify_elems(elems: float, *, n: int, v: int, d: int) -> str:
+    """Classify a single buffer size (in elements) against the dims."""
+    if elems >= n * v:
+        return DENSE_CLASS
+    if elems > census_budget(n, v, d):
+        return CHUNKED_CLASS
+    return CCE_CLASS
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking pass
+# ---------------------------------------------------------------------------
+
+def _iter_sub_jaxprs(params: dict):
+    import jax.core as jcore
+    for val in params.values():
+        vals = val if isinstance(val, (tuple, list)) else (val,)
+        for sub in vals:
+            if isinstance(sub, jcore.ClosedJaxpr):
+                yield sub.jaxpr
+            elif isinstance(sub, jcore.Jaxpr):
+                yield sub
+
+
+def jaxpr_shape_census(jaxpr, top: int = 8) -> list:
+    """Largest distinct intermediate avals in a (Closed)Jaxpr:
+    ``[(elems, "dtype[dims]")]`` sorted descending.
+
+    Walks every equation's *output* avals, recursing into sub-jaxprs
+    (scan/while/cond/pjit/pallas_call bodies), so a dense logit matrix
+    hidden inside a scanned layer still shows up. Inputs/consts are not
+    counted — they are the caller's arrays, not intermediates."""
+    inner = getattr(jaxpr, "jaxpr", jaxpr)  # ClosedJaxpr -> Jaxpr
+    seen: dict[str, int] = {}
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            for var in eqn.outvars:
+                aval = getattr(var, "aval", None)
+                shape = getattr(aval, "shape", None)
+                if shape is None:
+                    continue
+                elems = 1
+                for dim in shape:
+                    elems *= int(dim)
+                key = f"{getattr(aval, 'dtype', '?')}{list(shape)}"
+                seen[key] = max(seen.get(key, 0), elems)
+            for sub in _iter_sub_jaxprs(eqn.params):
+                walk(sub)
+
+    walk(inner)
+    census = sorted(((e, k) for k, e in seen.items()), reverse=True)
+    return census[:top]
+
+
+# ---------------------------------------------------------------------------
+# classification over HLO text / jaxprs / callables
+# ---------------------------------------------------------------------------
+
+def _as_hlo_text(target, *example_args, **lower_kwargs) -> str:
+    """Accept HLO text, a Lowered/Compiled stage, or a callable (lowered &
+    compiled AOT against ``example_args`` ShapeDtypeStructs)."""
+    import jax
+    if isinstance(target, str):
+        return target
+    as_text = getattr(target, "as_text", None)
+    if as_text is not None and not example_args:
+        compile_ = getattr(target, "compile", None)
+        if compile_ is not None:  # Lowered: compile for the optimized module
+            target = compile_()
+        return target.as_text()
+    if callable(target):
+        fn = target
+        if not hasattr(fn, "lower"):
+            fn = jax.jit(fn)
+        return fn.lower(*example_args, **lower_kwargs).compile().as_text()
+    raise TypeError(
+        f"cannot extract HLO from {type(target).__name__}; pass HLO text, "
+        "a Lowered/Compiled stage, or a callable with example args")
+
+
+def classify_hlo(hlo_text: str, *, n: int, v: int, d: int) -> str:
+    """Memory class of an optimized HLO module at the given dims."""
+    census = hlo_an.array_shape_census(hlo_text, top=1)
+    largest = census[0][0] if census else 0
+    return classify_elems(largest, n=n, v=v, d=d)
+
+
+def classify_jaxpr(jaxpr, *, n: int, v: int, d: int) -> str:
+    """Memory class of a traced jaxpr at the given dims."""
+    census = jaxpr_shape_census(jaxpr, top=1)
+    largest = census[0][0] if census else 0
+    return classify_elems(largest, n=n, v=v, d=d)
+
+
+def check_memory_class(target, *example_args, n: int, v: int, d: int,
+                       max_class: str = CCE_CLASS, what: str = "",
+                       **lower_kwargs) -> Finding:
+    """Evaluate the memory-class invariant; returns a :class:`Finding`.
+
+    ``target`` may be optimized-HLO text, a ``jax`` Lowered/Compiled stage,
+    or a callable (jitted on demand and AOT-lowered against
+    ``example_args``). The observed class must rank <= ``max_class``.
+    Raises ``ValueError`` if the geometry cannot discriminate."""
+    if not is_discriminating(n, v, d):
+        raise ValueError(
+            f"geometry N={n} V={v} D={d} is not discriminating: census "
+            f"budget {census_budget(n, v, d)} >= N*V {n * v}; grow N or V "
+            "(the check would pass vacuously)")
+    text = _as_hlo_text(target, *example_args, **lower_kwargs)
+    census = hlo_an.array_shape_census(text, top=4)
+    largest = census[0][0] if census else 0
+    observed = classify_elems(largest, n=n, v=v, d=d)
+    ok = class_rank(observed) <= class_rank(max_class)
+    subject = what or getattr(target, "__name__", type(target).__name__)
+    return Finding(
+        family="memclass", invariant="memory_class", subject=subject,
+        ok=ok,
+        detail=(f"observed {observed} (largest buffer {largest} elems, "
+                f"budget {census_budget(n, v, d)}, N*V {n * v}); "
+                f"required <= {max_class}"),
+        data={"observed": observed, "max_class": max_class,
+              "largest_elems": largest, "census": census,
+              "n": n, "v": v, "d": d,
+              "budget_elems": census_budget(n, v, d)})
+
+
+def assert_memory_class(target=None, *example_args, n: int = 0, v: int = 0,
+                        d: int = 0, max_class: str = CCE_CLASS,
+                        what: str = "", **lower_kwargs):
+    """Assert the memory-class invariant, or build a decorator that does.
+
+    Direct form (tests, benchmarks, CLI gates)::
+
+        assert_memory_class(hlo_text, n=n, v=v, d=d)               # CCE
+        assert_memory_class(text, n=n, v=v, d=d,
+                            max_class="O(N·V)")                    # bound
+        assert_memory_class(fn, E_sds, C_sds, x_sds, n=n, v=v, d=d)
+
+    Decorator form (``target=None``): wraps a function so every call is
+    first AOT-lowered against the concrete arguments' avals and checked,
+    then executed. One check per distinct input signature::
+
+        @assert_memory_class(n=4096, v=65536, d=512)
+        def loss(E, C, x): ...
+
+    Raises :class:`CheckError` (an ``AssertionError``) on violation.
+    """
+    if target is None:
+        def deco(fn):
+            import jax
+            jfn = fn if hasattr(fn, "lower") else jax.jit(fn)
+            checked: set = set()
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                import jax
+                key = tuple(
+                    (getattr(a, "shape", None), str(getattr(a, "dtype", "")))
+                    for a in jax.tree_util.tree_leaves((args, kwargs)))
+                if key not in checked:
+                    sds = jax.tree_util.tree_map(
+                        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)
+                        if hasattr(a, "shape") else a, (args, kwargs))
+                    finding = check_memory_class(
+                        jfn, *sds[0], n=n, v=v, d=d, max_class=max_class,
+                        what=what or fn.__name__, **sds[1])
+                    if not finding.ok:
+                        raise CheckError(finding.detail, [finding])
+                    checked.add(key)
+                return fn(*args, **kwargs)
+
+            return wrapper
+        return deco
+
+    finding = check_memory_class(
+        target, *example_args, n=n, v=v, d=d, max_class=max_class,
+        what=what, **lower_kwargs)
+    if not finding.ok:
+        raise CheckError(
+            f"memory-class violation in {finding.subject}: {finding.detail}",
+            [finding])
+    return finding

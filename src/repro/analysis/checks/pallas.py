@@ -1,0 +1,503 @@
+"""Pallas contract checker: static extraction + verification of kernel
+launch parameters, without executing anything.
+
+Tracing a kernel wrapper with ``jax.make_jaxpr`` over abstract arguments
+leaves the ``pallas_call`` primitive equations in the jaxpr; their params
+carry everything the contracts talk about:
+
+  * ``grid_mapping`` — grid, per-operand block shapes + full array shapes
+    (``block_mappings``), scratch operand count,
+  * the kernel body jaxpr — scratch avals (trailing VMEM MemRef invars)
+    and every intermediate the kernel allocates (e.g. the logit tile),
+  * ``input_output_aliases`` and ``compiler_params`` (dimension semantics).
+
+From these we verify, for every kernel entry point in ``repro.kernels``:
+
+  1. **VMEM budget** — the structural working set (one copy of every
+     input/output block + scratch + the largest kernel intermediate) fits
+     in ``kernels._util.VMEM_BUDGET``. (The budget is set at ~12 MB of the
+     16 MB/core precisely so the pipeline's double-buffering headroom
+     lives in the remaining ~4 MB; the structural set is the single-copy
+     footprint the formulas model.)
+  2. **VMEM claim** — ``vmem_working_set`` / ``decode_vmem_working_set``
+     (what ``choose_blocks`` budgets against) does not *understate* the
+     structural working set: structural <= claimed + small slack.
+  3. **f32 accumulators** — no 16-bit float scratch operand, ever; all
+     accumulation happens in f32 (or int32 bookkeeping).
+  4. **alias discipline** — every ``input_output_aliases`` entry pairs an
+     input and an output of identical shape+dtype (a donatable seed).
+  5. **tile discipline** — every block shape divides its (padded) array
+     shape, and respects TPU tiling: last dim in {1, full} or a multiple
+     of 128, second-to-last in {1, full} or a multiple of 8.
+
+:func:`sweep_cce_knobs` additionally proves — by pure arithmetic over
+``kernel_plan``/``choose_decode_blocks``, no tracing — that every
+``CCEConfig`` knob combination at every paper geometry in ``repro.configs``
+resolves to blocks whose claimed working set fits the budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+from repro.analysis.checks.common import CheckError, Finding
+from repro.kernels._util import VMEM_BUDGET
+
+#: Slack allowed on the claim check (index columns, padding, bookkeeping
+#: buffers the closed-form formulas round away).
+CLAIM_SLACK_BYTES = 16 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockInfo:
+    """One pallas operand: its block window and the full array behind it."""
+
+    origin: str                 # e.g. "e_ref", "outputs[0]"
+    block_shape: tuple
+    array_shape: tuple
+    dtype: str
+
+    @property
+    def block_bytes(self) -> int:
+        import numpy as np
+        elems = 1
+        for b in self.block_shape:
+            elems *= int(b)
+        return elems * np.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass
+class PallasCallInfo:
+    """Statically extracted launch parameters of one ``pallas_call``."""
+
+    name: str
+    grid: tuple
+    in_blocks: list          # [BlockInfo]
+    out_blocks: list         # [BlockInfo]
+    scratch_avals: list      # [(shape, dtype)]
+    aliases: tuple           # ((in_idx, out_idx), ...)
+    in_avals: list           # [(shape, dtype)] pallas_call inputs
+    out_avals: list          # [(shape, dtype)] pallas_call outputs
+    dimension_semantics: tuple
+    num_index_operands: int
+    max_intermediate_bytes: int
+    max_intermediate: str    # "dtype[shape]" of the largest kernel temp
+
+    def structural_vmem(self) -> int:
+        """Single-copy working set: every block window + scratch + the
+        largest kernel-body intermediate (the recomputed logit tile)."""
+        import numpy as np
+        total = sum(b.block_bytes for b in self.in_blocks)
+        total += sum(b.block_bytes for b in self.out_blocks)
+        for shape, dtype in self.scratch_avals:
+            elems = 1
+            for s in shape:
+                elems *= int(s)
+            total += elems * np.dtype(dtype).itemsize
+        return total + self.max_intermediate_bytes
+
+
+def _walk_pallas_eqns(jaxpr, found):
+    import jax.core as jcore
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            found.append(eqn)
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (tuple, list)) else (val,)
+            for sub in vals:
+                if isinstance(sub, jcore.ClosedJaxpr):
+                    _walk_pallas_eqns(sub.jaxpr, found)
+                elif isinstance(sub, jcore.Jaxpr):
+                    _walk_pallas_eqns(sub, found)
+
+
+def _aval_sig(aval):
+    return (tuple(int(s) for s in aval.shape), str(aval.dtype))
+
+
+def _eqn_to_info(eqn) -> PallasCallInfo:
+    import numpy as np
+    gm = eqn.params["grid_mapping"]
+    name = eqn.params.get("name_and_src_info")
+    name = getattr(name, "name", str(name))
+    n_in, n_out = gm.num_inputs, gm.num_outputs
+    blocks = []
+    for bm in gm.block_mappings:
+        asd = bm.array_shape_dtype
+        blocks.append(BlockInfo(
+            origin=str(getattr(bm, "origin", "")),
+            block_shape=tuple(int(b) for b in bm.block_shape),
+            array_shape=tuple(int(s) for s in asd.shape),
+            dtype=str(asd.dtype)))
+    in_blocks, out_blocks = blocks[:n_in], blocks[n_in:n_in + n_out]
+
+    kjaxpr = eqn.params["jaxpr"]
+    n_scratch = gm.num_scratch_operands
+    scratch = []
+    if n_scratch:
+        for invar in kjaxpr.invars[-n_scratch:]:
+            inner = getattr(invar.aval, "inner_aval", invar.aval)
+            scratch.append((tuple(int(s) for s in inner.shape),
+                            str(inner.dtype)))
+
+    # Largest intermediate the kernel body computes (e.g. the logit tile).
+    max_bytes, max_desc = 0, ""
+    stack = [kjaxpr]
+    while stack:
+        jx = stack.pop()
+        for keqn in jx.eqns:
+            for var in keqn.outvars:
+                aval = getattr(var, "aval", None)
+                shape = getattr(aval, "shape", None)
+                if shape is None or not hasattr(aval, "dtype"):
+                    continue
+                elems = 1
+                for s in shape:
+                    elems *= int(s)
+                nbytes = elems * np.dtype(aval.dtype).itemsize
+                if nbytes > max_bytes:
+                    max_bytes = nbytes
+                    max_desc = f"{aval.dtype}{list(shape)}"
+            for val in keqn.params.values():
+                vals = val if isinstance(val, (tuple, list)) else (val,)
+                for sub in vals:
+                    if hasattr(sub, "eqns"):
+                        stack.append(sub)
+                    elif hasattr(sub, "jaxpr"):
+                        stack.append(sub.jaxpr)
+
+    cparams = eqn.params.get("compiler_params") or {}
+    mosaic = cparams.get("mosaic", cparams) if isinstance(cparams, dict) \
+        else cparams
+    dimsem = tuple((mosaic or {}).get("dimension_semantics", ()) or ()) \
+        if isinstance(mosaic, dict) else ()
+
+    n_index = gm.num_index_operands
+    in_avals = [_aval_sig(v.aval) for v in eqn.invars[n_index:]]
+    out_avals = [_aval_sig(v.aval) for v in eqn.outvars]
+    return PallasCallInfo(
+        name=name, grid=tuple(int(g) for g in gm.grid),
+        in_blocks=in_blocks, out_blocks=out_blocks,
+        scratch_avals=scratch,
+        aliases=tuple((int(i), int(o))
+                      for i, o in eqn.params["input_output_aliases"]),
+        in_avals=in_avals, out_avals=out_avals,
+        dimension_semantics=dimsem, num_index_operands=n_index,
+        max_intermediate_bytes=max_bytes, max_intermediate=max_desc)
+
+
+def extract_pallas_calls(fn, *example_args, **kwargs) -> list:
+    """Trace ``fn`` over abstract args and return a :class:`PallasCallInfo`
+    for every ``pallas_call`` in the jaxpr (recursing through scan / cond /
+    pjit bodies). Nothing is executed."""
+    import jax
+    jaxpr = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*example_args)
+    found: list = []
+    _walk_pallas_eqns(jaxpr.jaxpr, found)
+    return [_eqn_to_info(eqn) for eqn in found]
+
+
+# ---------------------------------------------------------------------------
+# Per-call contract checks
+# ---------------------------------------------------------------------------
+
+_16BIT_FLOATS = ("bfloat16", "float16")
+
+
+def check_contracts(info: PallasCallInfo, *, claimed_bytes: int | None = None,
+                    budget: int = VMEM_BUDGET,
+                    subject: str | None = None) -> list:
+    """All per-call contract findings for one extracted ``pallas_call``."""
+    subject = subject or info.name
+    findings = []
+    structural = info.structural_vmem()
+
+    findings.append(Finding(
+        family="pallas", invariant="vmem_budget", subject=subject,
+        ok=structural <= budget,
+        detail=(f"structural working set {structural} B "
+                f"(blocks + scratch + max intermediate "
+                f"{info.max_intermediate or 'none'}) vs budget {budget} B"),
+        data={"structural_bytes": structural, "budget_bytes": budget,
+              "grid": info.grid,
+              "max_intermediate": info.max_intermediate}))
+
+    if claimed_bytes is not None:
+        ok = structural <= claimed_bytes + CLAIM_SLACK_BYTES
+        findings.append(Finding(
+            family="pallas", invariant="vmem_claim", subject=subject,
+            ok=ok and claimed_bytes <= budget,
+            detail=(f"claimed {claimed_bytes} B vs structural {structural} B"
+                    f" (slack {CLAIM_SLACK_BYTES} B); claim must not "
+                    "understate and must fit the budget"),
+            data={"claimed_bytes": claimed_bytes,
+                  "structural_bytes": structural,
+                  "budget_bytes": budget}))
+
+    bad_scratch = [f"{dt}{list(sh)}" for sh, dt in info.scratch_avals
+                   if dt in _16BIT_FLOATS]
+    findings.append(Finding(
+        family="pallas", invariant="accum_f32", subject=subject,
+        ok=not bad_scratch,
+        detail=("scratch accumulators: "
+                + (", ".join(f"{dt}{list(sh)}"
+                             for sh, dt in info.scratch_avals) or "none")
+                + (f"; 16-bit float scratch forbidden: {bad_scratch}"
+                   if bad_scratch else " — all f32/int32")),
+        data={"scratch": [f"{dt}{list(sh)}"
+                          for sh, dt in info.scratch_avals],
+              "bad": bad_scratch}))
+
+    alias_problems = []
+    for in_idx, out_idx in info.aliases:
+        if in_idx >= len(info.in_avals) or out_idx >= len(info.out_avals):
+            alias_problems.append(
+                f"alias ({in_idx}->{out_idx}) out of range")
+            continue
+        ia, oa = info.in_avals[in_idx], info.out_avals[out_idx]
+        if ia != oa:
+            alias_problems.append(
+                f"alias ({in_idx}->{out_idx}): input {ia[1]}{list(ia[0])}"
+                f" != output {oa[1]}{list(oa[0])}")
+    findings.append(Finding(
+        family="pallas", invariant="alias_shape", subject=subject,
+        ok=not alias_problems,
+        detail=(f"{len(info.aliases)} input_output_aliases"
+                + ("" if not alias_problems
+                   else "; " + "; ".join(alias_problems))),
+        data={"aliases": list(info.aliases), "problems": alias_problems}))
+
+    tile_problems = []
+    for blk in info.in_blocks + info.out_blocks:
+        bs, ash = blk.block_shape, blk.array_shape
+        for axis, (b, a) in enumerate(zip(bs, ash)):
+            if b <= 0:
+                tile_problems.append(f"{blk.origin}: axis {axis} block {b}")
+            elif a % b and b < a:
+                tile_problems.append(
+                    f"{blk.origin}: block {list(bs)} axis {axis} ({b}) "
+                    f"does not divide array {list(ash)}")
+        if len(bs) >= 1:
+            last, alast = bs[-1], ash[-1]
+            if last not in (1, alast) and last % 128:
+                tile_problems.append(
+                    f"{blk.origin}: last block dim {last} not 1/full/128k")
+        if len(bs) >= 2:
+            sec, asec = bs[-2], ash[-2]
+            if sec not in (1, asec) and sec % 8:
+                tile_problems.append(
+                    f"{blk.origin}: 2nd-last block dim {sec} not 1/full/8k")
+    findings.append(Finding(
+        family="pallas", invariant="tile_discipline", subject=subject,
+        ok=not tile_problems,
+        detail=("block shapes divide padded dims and respect (8,128) tiling"
+                if not tile_problems else "; ".join(tile_problems)),
+        data={"problems": tile_problems,
+              "blocks": [f"{b.origin}:{list(b.block_shape)}"
+                         f"/{list(b.array_shape)}"
+                         for b in info.in_blocks + info.out_blocks]}))
+    return findings
+
+
+def assert_kernel_contracts(fn, *example_args, claimed_bytes=None,
+                            subject=None, **kwargs) -> list:
+    """Extract + check; raises :class:`CheckError` on any violation."""
+    infos = extract_pallas_calls(fn, *example_args, **kwargs)
+    if not infos:
+        raise CheckError(f"no pallas_call found tracing {fn}")
+    findings = []
+    for info in infos:
+        findings += check_contracts(info, claimed_bytes=claimed_bytes,
+                                    subject=subject or info.name)
+    bad = [f for f in findings if not f.ok]
+    if bad:
+        raise CheckError(
+            "pallas contract violations: "
+            + "; ".join(f"[{f.invariant}] {f.subject}: {f.detail}"
+                        for f in bad), bad)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Entry-point sweep: every kernel in repro.kernels, traced at a small
+# geometry with the real (non-interpret) launch parameters.
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    import jax
+    import jax.numpy as jnp
+    return jax.ShapeDtypeStruct(shape, getattr(jnp, dtype))
+
+
+def kernel_entry_points() -> list:
+    """``[(subject, thunk)]``; each thunk returns
+    ``(fn, example_args, static_kwargs, claimed_bytes)``."""
+    import jax.numpy as jnp
+
+    from repro.kernels import cce_bwd, cce_fwd, decode_sample
+    from repro.kernels import indexed_matmul, wkv
+    from repro.kernels.ops import vmem_working_set
+
+    n, v, d = 256, 2048, 64
+    bn, bv = 128, 256
+    E = _sds((n, d), "float32")
+    C = _sds((v, d), "float32")
+    x = _sds((n,), "int32")
+    col = _sds((n,), "float32")
+    nn, nv = n // bn, v // bv
+    bitmap = _sds((nn, nv), "int32")
+    ws = lambda **kw: vmem_working_set(bn, bv, d, 4, **kw)
+
+    entries = [
+        ("cce_fwd", lambda: (
+            cce_fwd.cce_forward_pallas, (E, C, x), {}, ws())),
+        ("cce_fwd+sum", lambda: (
+            cce_fwd.cce_forward_pallas, (E, C, x),
+            dict(with_sum=True), ws(with_sum=True))),
+        ("cce_fwd+bitmap", lambda: (
+            cce_fwd.cce_forward_pallas, (E, C, x),
+            dict(emit_bitmap=True, filter_eps=2.0 ** -12),
+            ws(emit_bitmap=True, vocab=v))),
+        ("cce_bwd_dE", lambda: (
+            cce_bwd.cce_backward_dE_pallas, (E, C, x, col, col, col),
+            {}, ws())),
+        ("cce_bwd_dE+kahan", lambda: (
+            cce_bwd.cce_backward_dE_pallas, (E, C, x, col, col, col),
+            dict(accum="bf16_kahan"), ws(kahan=True))),
+        ("cce_bwd_dC", lambda: (
+            cce_bwd.cce_backward_dC_pallas, (E, C, x, col, col, col),
+            {}, ws())),
+        ("cce_bwd_fused", lambda: (
+            cce_bwd.cce_backward_fused_pallas, (E, C, x, col, col, col),
+            {}, ws(accum_rows=2))),
+        ("cce_bwd_fused+bitmap", lambda: (
+            cce_bwd.cce_backward_fused_pallas,
+            (E, C, x, col, col, col, bitmap),
+            {}, ws(accum_rows=2, emit_bitmap=True, vocab=v))),
+        ("indexed_matmul", lambda: (
+            indexed_matmul.indexed_matmul_pallas,
+            (_sds((64, d), "float32"), _sds((512, d), "float32"),
+             _sds((64,), "int32")), {}, None)),
+        ("wkv_fwd", lambda: (
+            wkv.wkv_forward_pallas,
+            (_sds((2, 2, 256, 64), "float32"),) * 4
+            + (_sds((2, 64), "float32"), _sds((2, 2, 64, 64), "float32")),
+            dict(chunk_len=128), None)),
+    ]
+
+    bb, dbv = 8, 512
+    dws = decode_sample.decode_vmem_working_set
+    h = _sds((16, d), "float32")
+    Cd = _sds((2048, d), "float32")
+    keys = _sds((16, 2), "uint32")
+    tau = _sds((16,), "float32")
+    entries += [
+        ("decode_sample(filtered)", lambda: (
+            decode_sample.decode_sample_pallas,
+            (h, Cd, keys, tau, tau, tau),
+            dict(vocab=2000, with_filter=True, block_b=bb, block_v=dbv),
+            dws(bb, dbv, d, 4, with_filter=True,
+                n_buckets=decode_sample.DEFAULT_BUCKETS))),
+        ("decode_sample(sweep)", lambda: (
+            decode_sample.decode_sample_pallas,
+            (h, Cd, keys, tau, tau, tau),
+            dict(vocab=2000, with_filter=False, block_b=bb, block_v=dbv),
+            dws(bb, dbv, d, 4, with_filter=False))),
+    ]
+    return entries
+
+
+def check_kernel_entry_points() -> list:
+    """Trace + verify every kernel entry point; returns all findings."""
+    findings = []
+    for subject, thunk in kernel_entry_points():
+        fn, args, kwargs, claimed = thunk()
+        if subject == "cce_bwd_fused+bitmap":
+            # bitmap rides as the last positional so it traces with the
+            # other args, but the kernel wrapper takes it as a keyword.
+            *args, bmp = args
+            kwargs = dict(kwargs, bitmap=bmp)
+        try:
+            infos = extract_pallas_calls(fn, *args, **kwargs)
+        except Exception as exc:  # tracing itself failed: report, continue
+            findings.append(Finding(
+                family="pallas", invariant="traceable", subject=subject,
+                ok=False, detail=f"tracing failed: {exc!r}"))
+            continue
+        if not infos:
+            findings.append(Finding(
+                family="pallas", invariant="traceable", subject=subject,
+                ok=False, detail="no pallas_call in trace"))
+            continue
+        for info in infos:
+            findings += check_contracts(
+                info, claimed_bytes=claimed, subject=subject)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Knob sweep: all CCEConfig combinations x all paper geometries, by pure
+# arithmetic on the block chooser (nothing traced).
+# ---------------------------------------------------------------------------
+
+def sweep_cce_knobs(n_tokens: int = 8192, itemsizes=(2, 4)) -> list:
+    """For every paper geometry in ``repro.configs`` and every CCEConfig
+    knob combination, the resolved plan's claimed working set must fit the
+    budget and the blocks must be (8,128)-tile aligned."""
+    from repro import configs
+    from repro.kernels.decode_sample import (choose_decode_blocks,
+                                             decode_vmem_working_set)
+    from repro.kernels.ops import CCEConfig, kernel_plan
+
+    findings = []
+    combos = list(itertools.product(
+        ("fused", "two_pass"), ("f32", "bf16", "bf16_kahan"),
+        ("filtered", "full"), ("filtered", "full"),
+        ("recompute", "fwd_bitmap"), (False, True)))
+    for arch in configs.ASSIGNED:
+        cfg = configs.get_config(arch)
+        v, d = cfg.padded_vocab_size, cfg.d_model
+        problems = []
+        n_checked = 0
+        for itemsize in itemsizes:
+            for bwd, accum, fme, fmc, stats, want_sum in combos:
+                ccfg = CCEConfig(filter_mode_e=fme, filter_mode_c=fmc,
+                                 accum=accum, bwd=bwd, filter_stats=stats)
+                plan = kernel_plan(n_tokens, v, d, itemsize, ccfg,
+                                   want_sum=want_sum)
+                n_checked += 1
+                tag = (f"bwd={bwd},accum={accum},fm=({fme},{fmc}),"
+                       f"stats={stats},sum={want_sum},item={itemsize}")
+                if plan["vmem_working_set_bytes"] > plan["vmem_budget_bytes"]:
+                    problems.append(
+                        f"{tag}: ws {plan['vmem_working_set_bytes']} > "
+                        f"budget {plan['vmem_budget_bytes']}")
+                if plan["block_n"] % 8:
+                    problems.append(
+                        f"{tag}: block_n {plan['block_n']} not 8-aligned")
+                if plan["block_v"] % 128:
+                    problems.append(
+                        f"{tag}: block_v {plan['block_v']} not 128-aligned")
+            bb, bv = choose_decode_blocks(512, v, d, itemsize)
+            for wf in (False, True):
+                n_checked += 1
+                dws = decode_vmem_working_set(bb, bv, d, itemsize,
+                                              with_filter=wf)
+                if dws > VMEM_BUDGET:
+                    problems.append(
+                        f"decode(item={itemsize},filter={wf}): ws {dws} > "
+                        f"budget {VMEM_BUDGET}")
+            if bb % 8 or bv % 128:
+                problems.append(
+                    f"decode blocks ({bb},{bv}) not (8,128)-aligned")
+        findings.append(Finding(
+            family="pallas", invariant="knob_sweep", subject=arch,
+            ok=not problems,
+            detail=(f"{n_checked} knob combinations at V={v} D={d} "
+                    f"N={n_tokens}: "
+                    + ("all plans fit the VMEM budget, tile-aligned"
+                       if not problems else "; ".join(problems[:8]))),
+            data={"v": v, "d": d, "n": n_tokens, "checked": n_checked,
+                  "problems": problems}))
+    return findings

@@ -1,0 +1,46 @@
+"""Pytest plugin exposing the static checkers as fixtures.
+
+Registered from ``tests/conftest.py`` via
+``pytest_plugins = ("repro.analysis.checks.pytest_plugin",)``.
+
+Fixtures (all plain callables — the fixture indirection keeps test modules
+free of deep ``repro.analysis.checks.*`` import paths and gives one seam
+for future session-scoped caching of expensive lowerings):
+
+  assert_memory_class(target, *args, n=, v=, d=, max_class=)
+      raise if the compiled program leaves the CCE memory class
+  check_memory_class(...)
+      same evaluation, returns the Finding instead of raising
+  extract_pallas_calls(fn, *example_args, **kwargs)
+      statically extracted PallasCallInfo records
+  assert_kernel_contracts(fn, *example_args, claimed_bytes=, **kwargs)
+      extract + verify all pallas launch contracts, raise on violation
+"""
+
+from __future__ import annotations
+
+import pytest
+
+
+@pytest.fixture
+def assert_memory_class():
+    from repro.analysis.checks import memclass
+    return memclass.assert_memory_class
+
+
+@pytest.fixture
+def check_memory_class():
+    from repro.analysis.checks import memclass
+    return memclass.check_memory_class
+
+
+@pytest.fixture
+def extract_pallas_calls():
+    from repro.analysis.checks import pallas
+    return pallas.extract_pallas_calls
+
+
+@pytest.fixture
+def assert_kernel_contracts():
+    from repro.analysis.checks import pallas
+    return pallas.assert_kernel_contracts

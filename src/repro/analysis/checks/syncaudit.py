@@ -1,0 +1,303 @@
+"""Sync & retrace auditor for the serving/training step paths.
+
+The engine's throughput contract (DESIGN.md §9) is *one* host
+synchronization per decode step: ``Engine.step`` launches jitted work and
+``Engine._sync`` pulls the small status vectors with a single unconditional
+``jax.device_get`` (plus one batched fetch of finished rows behind an
+early-out). Anything more — an extra ``device_get``, a stray
+``block_until_ready``, a ``jax.jit`` re-entered per call with fresh Python
+captures — silently serializes the pipeline or forces recompiles.
+
+Two passes, both static:
+
+  * **host-transfer count** (AST): every ``device_get`` /
+    ``block_until_ready`` call site under ``serve/``, attributed to its
+    enclosing function. The invariant: ``device_get`` appears only inside
+    ``Engine._sync``, exactly one *unconditional* occurrence (before the
+    first early ``return``), at most two total; ``block_until_ready``
+    never appears in ``serve/``.
+  * **retrace hygiene** (AST + jit introspection): every ``jax.jit`` call
+    under ``serve/``/``train/`` is module-level, under an ``lru_cache``'d
+    factory, or a one-time ``self.*`` assignment in ``__init__``; and each
+    module-level jitted function closes over nothing (``co_freevars``
+    empty) — a captured Python value is the classic accidental-retrace /
+    stale-constant hazard.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.checks.common import Finding
+
+_SERVE_SYNC_ALLOWED = {("engine.py", "_sync")}
+
+
+def _repo_src() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.normpath(os.path.join(here, "..", ".."))  # .../src/repro
+
+
+def _enclosing(stack) -> str:
+    names = [n.name for n in stack
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    return ".".join(names) if names else "<module>"
+
+
+def _scoped_walk(tree, visit):
+    """Walk ``tree`` calling ``visit(node, stack)``; ``stack`` is the chain
+    of enclosing function/class defs. A def's *decorators* are attributed
+    to the OUTER scope (a module-level ``@functools.partial(jax.jit, ...)``
+    is a module-level jit, not a call inside the function it decorates)."""
+    scopes = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+
+    def walk(node, stack):
+        visit(node, stack)
+        if isinstance(node, scopes):
+            for deco in node.decorator_list:
+                walk(deco, stack)
+            inner = stack + [node]
+            for child in ast.iter_child_nodes(node):
+                if any(child is d for d in node.decorator_list):
+                    continue
+                walk(child, inner)
+        else:
+            for child in ast.iter_child_nodes(node):
+                walk(child, stack)
+
+    walk(tree, [])
+
+
+def _call_sites(tree, attr_names):
+    """[(attr, enclosing_fn, lineno, stack)] for Attribute calls."""
+    sites = []
+
+    def visit(node, stack):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in attr_names:
+            sites.append((node.func.attr, _enclosing(stack),
+                          node.lineno, list(stack)))
+
+    _scoped_walk(tree, visit)
+    return sites
+
+
+def audit_host_transfers(serve_dir: str | None = None) -> list:
+    """The "one device_get per step" invariant, statically."""
+    serve_dir = serve_dir or os.path.join(_repo_src(), "serve")
+    findings = []
+    sync_counts: dict[str, list] = {}
+    stray, busy_waits = [], []
+    sync_fn_source = None
+
+    for fname in sorted(os.listdir(serve_dir)):
+        if not fname.endswith(".py"):
+            continue
+        path = os.path.join(serve_dir, fname)
+        with open(path) as fh:
+            source = fh.read()
+        tree = ast.parse(source, filename=path)
+        for attr, fn, lineno, _ in _call_sites(
+                tree, {"device_get", "block_until_ready"}):
+            if attr == "block_until_ready":
+                busy_waits.append(f"{fname}:{lineno} in {fn}")
+            else:
+                leaf = fn.split(".")[-1]
+                if (fname, leaf) in _SERVE_SYNC_ALLOWED:
+                    sync_counts.setdefault(f"{fname}:{leaf}", []).append(
+                        lineno)
+                else:
+                    stray.append(f"{fname}:{lineno} in {fn}")
+        if fname == "engine.py":
+            for node in ast.walk(tree):
+                if isinstance(node, ast.FunctionDef) and \
+                        node.name == "_sync":
+                    sync_fn_source = node
+
+    findings.append(Finding(
+        family="sync", invariant="device_get_only_in_sync",
+        subject="serve/", ok=not stray,
+        detail=("every device_get lives in Engine._sync"
+                if not stray else f"stray device_get: {', '.join(stray)}"),
+        data={"stray": stray, "allowed": sorted(sync_counts)}))
+
+    findings.append(Finding(
+        family="sync", invariant="no_block_until_ready",
+        subject="serve/", ok=not busy_waits,
+        detail=("no block_until_ready in the serving path" if not busy_waits
+                else f"block_until_ready at: {', '.join(busy_waits)}"),
+        data={"sites": busy_waits}))
+
+    # Exactly one *unconditional* pull per _sync call: one device_get
+    # before the first early return, at most two total (the second is the
+    # finished-row fetch behind ``if not rows: return []``).
+    if sync_fn_source is None:
+        findings.append(Finding(
+            family="sync", invariant="one_device_get_per_step",
+            subject="engine._sync", ok=False,
+            detail="Engine._sync not found in serve/engine.py"))
+    else:
+        gets = [lineno for attr, fn, lineno, _ in _call_sites(
+            sync_fn_source, {"device_get"})]
+        returns = [n.lineno for n in ast.walk(sync_fn_source)
+                   if isinstance(n, ast.Return)]
+        first_return = min(returns) if returns else float("inf")
+        unconditional = [ln for ln in gets if ln < first_return]
+        ok = len(unconditional) == 1 and len(gets) <= 2
+        findings.append(Finding(
+            family="sync", invariant="one_device_get_per_step",
+            subject="engine._sync", ok=ok,
+            detail=(f"{len(unconditional)} unconditional device_get "
+                    f"(require exactly 1), {len(gets)} total "
+                    f"(require <= 2) at lines {gets}"),
+            data={"device_get_lines": gets,
+                  "first_return_line": returns and min(returns)}))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Retrace hygiene
+# ---------------------------------------------------------------------------
+
+def _jit_call_sites(tree):
+    """[(enclosing_fn, lineno, stack)] of ``jax.jit(...)`` call sites,
+    including decorator positions."""
+    sites = []
+
+    def is_jit(node):
+        # jax.jit(...) or functools.partial(jax.jit, ...)
+        if not isinstance(node, ast.Call):
+            return False
+        fn = node.func
+        if isinstance(fn, ast.Attribute) and fn.attr == "jit":
+            return True
+        if isinstance(fn, ast.Attribute) and fn.attr == "partial":
+            return any(isinstance(a, ast.Attribute) and a.attr == "jit"
+                       for a in node.args)
+        return False
+
+    def visit(node, stack):
+        if is_jit(node):
+            sites.append((_enclosing(stack), node.lineno, list(stack)))
+
+    _scoped_walk(tree, visit)
+    return sites
+
+
+def _cached_factory(stack) -> bool:
+    """Enclosing def carries functools.lru_cache / functools.cache."""
+    for node in stack:
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for deco in node.decorator_list:
+            target = deco.func if isinstance(deco, ast.Call) else deco
+            name = target.attr if isinstance(target, ast.Attribute) \
+                else getattr(target, "id", "")
+            if name in ("lru_cache", "cache"):
+                return True
+    return False
+
+
+def _init_assignment(stack) -> bool:
+    """Call happens inside ``__init__`` (one jit per object, not per step)."""
+    return any(isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+               and n.name == "__init__" for n in stack)
+
+
+def audit_retrace(dirs=("serve", "train")) -> list:
+    """jax.jit call-site placement + closure-capture audit."""
+    findings = []
+    misplaced = []
+    scanned = 0
+    for sub in dirs:
+        root = os.path.join(_repo_src(), sub)
+        if not os.path.isdir(root):
+            continue
+        for fname in sorted(os.listdir(root)):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(root, fname)
+            with open(path) as fh:
+                tree = ast.parse(fh.read(), filename=path)
+            for fn, lineno, stack in _jit_call_sites(tree):
+                scanned += 1
+                if fn == "<module>" or _cached_factory(stack) \
+                        or _init_assignment(stack):
+                    continue
+                misplaced.append(f"{sub}/{fname}:{lineno} in {fn}")
+    findings.append(Finding(
+        family="sync", invariant="jit_placement", subject="serve/ train/",
+        ok=not misplaced,
+        detail=(f"{scanned} jax.jit sites: all module-level, lru_cached, "
+                "or one-time __init__ construction" if not misplaced
+                else f"per-call jit (retrace risk): {', '.join(misplaced)}"),
+        data={"scanned": scanned, "misplaced": misplaced}))
+
+    # Introspect the live jitted step functions: no Python-value captures.
+    captured = []
+    checked = []
+    import importlib
+    for modname in ("repro.serve.engine", "repro.serve.scheduler"):
+        mod = importlib.import_module(modname)
+        for attr in sorted(vars(mod)):
+            obj = getattr(mod, attr)
+            wrapped = getattr(obj, "__wrapped__", None)
+            if wrapped is None or not hasattr(obj, "lower"):
+                continue  # not a jit wrapper
+            code = getattr(wrapped, "__code__", None)
+            if code is None:
+                continue
+            checked.append(f"{modname}.{attr}")
+            if code.co_freevars:
+                captured.append(
+                    f"{modname}.{attr} closes over {code.co_freevars}")
+    findings.append(Finding(
+        family="sync", invariant="no_jit_captures",
+        subject="engine/scheduler jits", ok=not captured,
+        detail=(f"{len(checked)} jitted step functions close over nothing"
+                if not captured else "; ".join(captured)),
+        data={"checked": checked, "captured": captured}))
+    return findings
+
+
+def audit_all() -> list:
+    return audit_host_transfers() + audit_retrace()
+
+
+def audit_source(source: str, *, filename: str = "engine.py",
+                 sync_fn: str = "_sync") -> list:
+    """Audit a source string as if it were ``serve/<filename>`` — the
+    negative-test hook: feed a step path with an extra device_get and the
+    auditor must flag it."""
+    tree = ast.parse(source, filename=filename)
+    stray, gets_in_sync, busy = [], [], []
+    for attr, fn, lineno, _ in _call_sites(
+            tree, {"device_get", "block_until_ready"}):
+        leaf = fn.split(".")[-1]
+        if attr == "block_until_ready":
+            busy.append(f"{filename}:{lineno} in {fn}")
+        elif leaf == sync_fn:
+            gets_in_sync.append(lineno)
+        else:
+            stray.append(f"{filename}:{lineno} in {fn}")
+    findings = [Finding(
+        family="sync", invariant="device_get_only_in_sync",
+        subject=filename, ok=not stray,
+        detail=("ok" if not stray
+                else f"stray device_get: {', '.join(stray)}"),
+        data={"stray": stray}),
+        Finding(
+        family="sync", invariant="no_block_until_ready",
+        subject=filename, ok=not busy,
+        detail="ok" if not busy else f"block_until_ready: {busy}",
+        data={"sites": busy}),
+        Finding(
+        family="sync", invariant="one_device_get_per_step",
+        subject=f"{filename}:{sync_fn}",
+        ok=len(gets_in_sync) <= 2,
+        detail=f"{len(gets_in_sync)} device_get in {sync_fn} "
+               f"(require <= 2)",
+        data={"lines": gets_in_sync})]
+    return findings

@@ -4,6 +4,14 @@ from __future__ import annotations
 
 import jax
 
+#: Single source of truth for the per-core VMEM working-set budget.
+#: ~12 MB of the ~16 MB/core VMEM; the rest is double-buffering headroom
+#: for the Pallas pipeline. Both the CCE block chooser (`kernels/ops`) and
+#: the decode-kernel accounting (`kernels/decode_sample`) budget against
+#: this constant, and `repro.analysis.checks` verifies every kernel's
+#: statically-extracted working set against it.
+VMEM_BUDGET = 12 * 1024 * 1024
+
 # ``jax.typeof`` and avals with a ``vma`` field only exist on newer JAX
 # releases (the explicit varying-manual-axes machinery). On older JAX the
 # checker that needs the annotation does not exist either, so the empty

@@ -50,8 +50,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import _util
+from repro.kernels._util import VMEM_BUDGET as _VMEM_BUDGET
 from repro.kernels._util import sds
-from repro.kernels.ops import _VMEM_BUDGET, _is_cpu
+from repro.kernels.ops import _is_cpu
 
 _NEG = float("-inf")
 #: Tokens with renormalized probability below this floor may be dropped

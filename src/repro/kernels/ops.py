@@ -20,12 +20,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import cce_bwd, cce_fwd
+from repro.kernels._util import VMEM_BUDGET
 from repro.kernels.cce_bwd import DEFAULT_FILTER_EPS
 from repro.kernels.ref import IGNORE_INDEX
 
-# ~12 MB of the ~16 MB/core VMEM budget for kernel working set; the rest is
-# double-buffering headroom for the Pallas pipeline.
-_VMEM_BUDGET = 12 * 1024 * 1024
+# Back-compat alias; the canonical constant lives in kernels/_util.py so the
+# decode kernel and the static checker share one budget.
+_VMEM_BUDGET = VMEM_BUDGET
 
 
 def _is_cpu() -> bool:

@@ -222,34 +222,34 @@ def check_scoring_memory_class(cfg, *, impl=None, normalize="sum",
     """
     import dataclasses as _dc
 
-    from repro.analysis import hlo as hlo_an
+    from repro.analysis.checks.memclass import check_memory_class
 
     cfg = _dc.replace(cfg, vocab_size=max(cfg.vocab_size, min_vocab))
     d = cfg.d_model
     # the verdict is only discriminating when N·V exceeds the budget:
     # with V >= N that needs N > 4·D, so grow the token count for
-    # large-d_model configs instead of passing vacuously
+    # large-d_model configs instead of passing vacuously (the checker
+    # itself raises if the geometry still cannot discriminate)
     seq = max(seq, (4 * d) // batch + 1)
     n, v = batch * seq, cfg.padded_vocab_size
-    budget = 4 * max(n * d, v * d)
-    if budget >= n * v:
-        raise RuntimeError(
-            f"memory-class check is not discriminating at N={n} V={v} "
-            f"D={d} (budget {budget:.3g} >= NxV {n * v:.3g})")
     params_sds = jax.eval_shape(
         lambda: T.init_lm(jax.random.PRNGKey(0), cfg))
     fn = scoring.score_fn(cfg, normalize=normalize,
                           impl=impl or cfg.loss_impl)
     toks = jax.ShapeDtypeStruct((batch, seq), "int32")
-    text = jax.jit(fn).lower(params_sds, toks, toks).compile().as_text()
-    top = hlo_an.array_shape_census(text, top=1)[0]
-    ok = top[0] <= budget
+    try:
+        finding = check_memory_class(jax.jit(fn), params_sds, toks, toks,
+                                     n=n, v=v, d=d, what="serve:scoring")
+    except ValueError as exc:    # non-discriminating geometry
+        raise RuntimeError(str(exc)) from exc
     if not quiet:
+        top_elems, top_desc = finding.data["census"][0]
         print(f"scoring memory-class check (B={batch} S={seq} V={v}): "
-              f"largest={top[1]} ({top[0]:.3g} elems) "
-              f"budget={budget:.3g} NxV={n * v:.3g} -> "
-              f"{'O(N.D+V.D) OK' if ok else 'NxV MATERIALIZED'}")
-    return ok
+              f"largest={top_desc} ({top_elems:.3g} elems) "
+              f"budget={finding.data['budget_elems']:.3g} "
+              f"NxV={n * v:.3g} -> "
+              f"{'O(N.D+V.D) OK' if finding.ok else 'NxV MATERIALIZED'}")
+    return finding.ok
 
 
 def main():

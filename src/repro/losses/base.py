@@ -29,7 +29,7 @@ information.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict
+from typing import Callable, Dict
 
 import jax.numpy as jnp
 

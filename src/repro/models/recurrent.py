@@ -17,7 +17,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import _he, dense, init_dense, rmsnorm, init_rmsnorm
+from repro.models.layers import _he, dense, rmsnorm, init_rmsnorm
 
 
 # ---------------------------------------------------------------------------

@@ -22,7 +22,6 @@ model code itself is mesh-agnostic.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 
 import jax

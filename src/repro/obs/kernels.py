@@ -86,9 +86,11 @@ def record_backend_memory_gauges(registry: M.Registry, *, n: int = 2048,
 
     from repro import backends
     from repro.analysis import hlo as hlo_an
+    from repro.analysis.checks.memclass import (CCE_CLASS, census_budget,
+                                                classify_elems)
     from repro.core import cross_entropy
 
-    budget = 4 * max(n * d, v * d)
+    budget = census_budget(n, v, d)
     registry.gauge("cce_backend_budget_elems").set(budget)
     out = {}
     for name in impls or backends.list_backends():
@@ -107,7 +109,8 @@ def record_backend_memory_gauges(registry: M.Registry, *, n: int = 2048,
         registry.gauge("cce_backend_largest_buffer_elems", labels).set(
             elems)
         registry.gauge("cce_backend_in_class", labels).set(
-            1.0 if elems <= budget else 0.0)
+            1.0 if classify_elems(elems, n=n, v=v, d=d) == CCE_CLASS
+            else 0.0)
         registry.gauge("cce_backend_info", {
             "impl": name, "memory_class": be.memory_class}).set(1.0)
     return out

@@ -8,7 +8,6 @@ module is mesh-agnostic and also runs single-device (examples, tests).
 
 from __future__ import annotations
 
-import dataclasses
 import signal
 import time
 

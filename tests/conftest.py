@@ -1,0 +1,5 @@
+"""Shared pytest configuration: registers the static-checker fixtures
+(`assert_memory_class`, `extract_pallas_calls`, ...) from the
+repro.analysis.checks pytest plugin."""
+
+pytest_plugins = ("repro.analysis.checks.pytest_plugin",)

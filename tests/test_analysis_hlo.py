@@ -1,0 +1,189 @@
+"""Direct coverage for the ``repro.analysis.hlo`` parsers.
+
+Feeds *real* optimized-HLO dumps — one per registered backend, lowered
+through the public ``cross_entropy`` dispatch — through
+``parse_computations`` / ``analyze`` / ``array_shape_census``, plus
+deterministic corruption fuzzing and (when hypothesis is installed)
+property tests: the parsers must never raise on arbitrary text and their
+outputs must stay structurally sane.
+"""
+
+import random
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import hlo as hlo_an
+from repro.backends import base as backends
+from repro.core import cross_entropy
+
+# V must exceed cce_jax's 2048-wide vocab tile or the twin's largest
+# buffer *is* N·V and the census class test cannot discriminate
+N, V, D = 512, 8192, 64
+
+
+@pytest.fixture(scope="module")
+def backend_dumps():
+    """{backend_name: optimized HLO text} for every registered backend."""
+    dumps = {}
+    for name in backends.list_backends():
+        def f(E, C, x, impl=name):
+            return cross_entropy(E, C, x, impl=impl, reduction="mean")
+
+        g = jax.value_and_grad(f, argnums=(0, 1))
+        dumps[name] = jax.jit(g).lower(
+            jax.ShapeDtypeStruct((N, D), jnp.float32),
+            jax.ShapeDtypeStruct((V, D), jnp.float32),
+            jax.ShapeDtypeStruct((N,), jnp.int32)).compile().as_text()
+    return dumps
+
+
+def test_parse_computations_structure(backend_dumps):
+    """Every dump parses into named computations whose symbol tables cover
+    their own instructions, with exactly one ROOT per computation."""
+    for name, text in backend_dumps.items():
+        comps, types = hlo_an.parse_computations(text)
+        assert comps, f"{name}: no computations parsed"
+        assert set(comps) == set(types)
+        for cname, instrs in comps.items():
+            assert instrs, f"{name}/{cname}: empty computation"
+            roots = [i for i in instrs if i.is_root]
+            assert len(roots) == 1, f"{name}/{cname}: {len(roots)} ROOTs"
+            for ins in instrs:
+                assert types[cname][ins.name] == ins.out_type
+                assert ins.opcode and not ins.opcode.startswith("%")
+
+
+def test_analyze_outputs_sane(backend_dumps):
+    """flops/traffic are positive finite; no collectives on one device;
+    analyze is deterministic; an explicit entry= reproduces the default."""
+    for name, text in backend_dumps.items():
+        out = hlo_an.analyze(text)
+        assert out["flops"] > 0, f"{name}: no dot flops found"
+        assert out["traffic_bytes"] > 0
+        assert out["collective_bytes"] == 0
+        assert out["collective_wire_bytes"] == 0
+        assert out["collectives"] == {}
+        again = hlo_an.analyze(text)
+        assert again["flops"] == out["flops"]
+        assert again["traffic_bytes"] == out["traffic_bytes"]
+
+
+def test_analyze_flops_lower_bound(backend_dumps):
+    """Every backend must at least run the forward logit matmul
+    (2·N·V·D dot flops); pure-XLA backends additionally run the dE/dC
+    matmuls, so dense/cce_jax/chunked/liger see >= 3·2·N·V·D. (The
+    Pallas backend's backward lowers through a custom call whose inner
+    dots analyze cannot attribute — only the floor is universal.)"""
+    fwd = 2 * N * V * D
+    for name, text in backend_dumps.items():
+        out = hlo_an.analyze(text)
+        assert out["flops"] >= 0.9 * fwd, \
+            f"{name}: {out['flops']:.3g} < {0.9 * fwd:.3g}"
+    for name in ("dense", "cce_jax", "chunked", "liger"):
+        out = hlo_an.analyze(backend_dumps[name])
+        assert out["flops"] >= 0.99 * 3 * fwd, \
+            f"{name}: {out['flops']:.3g} < fwd+dE+dC flops"
+
+
+def test_census_ordering_and_classes(backend_dumps):
+    """Census is sorted descending, respects top=k, and separates the
+    dense backend (has an N·V buffer) from the CCE-class ones."""
+    for name, text in backend_dumps.items():
+        census = hlo_an.array_shape_census(text, top=5)
+        assert 0 < len(census) <= 5
+        elems = [e for e, _ in census]
+        assert elems == sorted(elems, reverse=True)
+        assert all(e > 0 for e in elems)
+        top1 = hlo_an.array_shape_census(text, top=1)
+        assert top1[0] == census[0]
+    assert hlo_an.array_shape_census(
+        backend_dumps["dense"], top=1)[0][0] >= N * V
+    for name in ("cce", "cce_jax"):
+        assert hlo_an.array_shape_census(
+            backend_dumps[name], top=1)[0][0] < N * V
+
+
+def test_while_trip_count_multiplier():
+    """A scan of K matmuls must report ~K times the flops of one matmul
+    (the while-loop body is counted trip-count times, not once)."""
+    k, m = 8, 64
+
+    def one(a, b):
+        return a @ b
+
+    def scanned(a, b):
+        def step(carry, _):
+            return carry @ b, None
+        out, _ = jax.lax.scan(step, a, None, length=k)
+        return out
+
+    a = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    b = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    f1 = hlo_an.analyze(jax.jit(one).lower(a, b).compile().as_text())
+    fk = hlo_an.analyze(jax.jit(scanned).lower(a, b).compile().as_text())
+    assert f1["flops"] >= 2 * m ** 3
+    # XLA may unroll small scans; either way the work is ~k matmuls
+    assert fk["flops"] >= 0.9 * k * 2 * m ** 3
+
+
+def test_parsers_survive_corruption(backend_dumps):
+    """Deterministic fuzz: dropping, duplicating, or truncating lines of a
+    real dump must never raise — partial modules yield partial answers."""
+    rng = random.Random(0)
+    for name, text in backend_dumps.items():
+        lines = text.splitlines()
+        for trial in range(10):
+            mutated = [ln for ln in lines if rng.random() > 0.2]
+            rng.shuffle(mutated[: len(mutated) // 8])
+            for chunk in ("\n".join(mutated),
+                          text[: len(text) // 2],
+                          text[len(text) // 3:]):
+                comps, types = hlo_an.parse_computations(chunk)
+                assert isinstance(comps, dict) and isinstance(types, dict)
+                out = hlo_an.analyze(chunk)
+                assert out["flops"] >= 0
+                assert out["traffic_bytes"] >= 0
+                census = hlo_an.array_shape_census(chunk, top=3)
+                assert all(e >= 0 for e, _ in census)
+
+
+def test_census_empty_and_garbage():
+    assert hlo_an.array_shape_census("", top=4) == []
+    out = hlo_an.analyze("")
+    assert out["flops"] == 0 and out["traffic_bytes"] == 0
+    comps, types = hlo_an.parse_computations("not hlo at all\n{}{}\n")
+    assert comps == {} and types == {}
+
+
+def test_property_parsers_total():
+    """Hypothesis: parse/analyze/census are total functions of text —
+    arbitrary unicode, including HLO-ish fragments, never raises."""
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (requirements-dev.txt)")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    fragments = st.sampled_from([
+        "ENTRY %main (p0: f32[8,16]) -> f32[8,16] {\n",
+        "  ROOT %dot = f32[8,16] dot(%a, %b), lhs_contracting_dims={1}\n",
+        "  %w = f32[4,4] while(%init), body=%b, condition=%c\n",
+        "}\n", "f32[1024,2048]", "garbage ( { ) }", "\n",
+    ])
+    text_strategy = st.lists(
+        st.one_of(fragments, st.text(max_size=64)), max_size=30
+    ).map("".join)
+
+    @given(text_strategy)
+    @settings(max_examples=60, deadline=None)
+    def run(text):
+        comps, types = hlo_an.parse_computations(text)
+        assert isinstance(comps, dict) and isinstance(types, dict)
+        out = hlo_an.analyze(text)
+        assert out["flops"] >= 0 and out["traffic_bytes"] >= 0
+        for e, desc in hlo_an.array_shape_census(text, top=4):
+            assert e >= 0 and isinstance(desc, str)
+
+    run()

@@ -1,0 +1,292 @@
+"""Negative tests for ``repro.analysis.checks``: each analyzer family must
+provably *flag* a violation, not just pass on the healthy repo.
+
+The ISSUE's acceptance bar: an O(N·V) intermediate, a VMEM overshoot, a
+bad input/output alias, an extra device_get, and a misplaced pallas_call
+each trip their analyzer. Positive smoke tests (the repo itself passes,
+the CLI exits 0) ride along so a regression in either direction is caught.
+"""
+
+import dataclasses
+import json
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.checks import (CCE_CLASS, CheckError, DENSE_CLASS,
+                                   assert_memory_class, check_memory_class,
+                                   class_rank, classify_elems, classify_jaxpr)
+from repro.analysis.checks import lint, memclass, pallas, syncaudit
+
+N, V, D = 512, 8192, 64   # discriminating: 4*max(N·D, V·D) = 2.1M < N·V 4.2M
+
+
+def _dense_fn(E, C, x):
+    logits = E @ C.T                       # the O(N·V) buffer
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, x[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - picked)
+
+
+def _sds():
+    return (jax.ShapeDtypeStruct((N, D), jnp.float32),
+            jax.ShapeDtypeStruct((V, D), jnp.float32),
+            jax.ShapeDtypeStruct((N,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# memclass
+# ---------------------------------------------------------------------------
+
+def test_memclass_flags_dense_intermediate():
+    """An explicit N×V logit matrix must be classified O(N·V) and fail."""
+    finding = check_memory_class(_dense_fn, *_sds(), n=N, v=V, d=D)
+    assert not finding.ok
+    assert finding.data["observed"] == DENSE_CLASS
+    assert finding.data["largest_elems"] >= N * V
+    with pytest.raises(CheckError):
+        assert_memory_class(_dense_fn, *_sds(), n=N, v=V, d=D)
+
+
+def test_memclass_decorator_blocks_dense_call():
+    """The decorator form AOT-checks before running: the dense fn never
+    executes."""
+    wrapped = assert_memory_class(n=N, v=V, d=D)(_dense_fn)
+    E = jnp.zeros((N, D), jnp.float32)
+    C = jnp.zeros((V, D), jnp.float32)
+    x = jnp.zeros((N,), jnp.int32)
+    with pytest.raises(CheckError):
+        wrapped(E, C, x)
+
+
+def test_memclass_jaxpr_census_sees_scanned_dense():
+    """A dense matmul hidden inside a scan body still shows up in the
+    jaxpr census (sub-jaxpr recursion)."""
+    def scanned(E, C, x):
+        def body(carry, _):
+            return carry + _dense_fn(E, C, x), None
+        out, _ = jax.lax.scan(body, 0.0, None, length=2)
+        return out
+
+    jaxpr = jax.make_jaxpr(scanned)(*_sds())
+    assert classify_jaxpr(jaxpr, n=N, v=V, d=D) == DENSE_CLASS
+
+
+def test_memclass_rejects_vacuous_geometry():
+    """budget >= N·V would pass vacuously: the prover refuses to run."""
+    assert not memclass.is_discriminating(64, 128, 512)
+    with pytest.raises(ValueError, match="not discriminating"):
+        check_memory_class("HloModule m", n=64, v=128, d=512)
+
+
+def test_memclass_rank_and_boundaries():
+    assert class_rank(CCE_CLASS) < class_rank("O(N/K·V)") \
+        < class_rank(DENSE_CLASS) < class_rank("typo-class")
+    budget = memclass.census_budget(N, V, D)
+    assert classify_elems(budget, n=N, v=V, d=D) == CCE_CLASS
+    assert classify_elems(budget + 1, n=N, v=V, d=D) == "O(N/K·V)"
+    assert classify_elems(N * V, n=N, v=V, d=D) == DENSE_CLASS
+
+
+# ---------------------------------------------------------------------------
+# pallas contracts
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fwd_info():
+    from repro.kernels import cce_fwd
+    infos = pallas.extract_pallas_calls(
+        cce_fwd.cce_forward_pallas,
+        jax.ShapeDtypeStruct((256, 64), jnp.float32),
+        jax.ShapeDtypeStruct((2048, 64), jnp.float32),
+        jax.ShapeDtypeStruct((256,), jnp.int32))
+    assert infos, "no pallas_call extracted from cce_forward_pallas"
+    return infos[0]
+
+
+def _finding(findings, invariant):
+    hits = [f for f in findings if f.invariant == invariant]
+    assert hits, f"no {invariant} finding emitted"
+    return hits[0]
+
+
+def test_pallas_flags_vmem_overshoot(fwd_info):
+    """The same healthy kernel fails against a budget below its working
+    set — the checker measures, it does not rubber-stamp."""
+    tiny = fwd_info.structural_vmem() - 1
+    bad = _finding(pallas.check_contracts(fwd_info, budget=tiny),
+                   "vmem_budget")
+    assert not bad.ok
+    ok = _finding(pallas.check_contracts(fwd_info), "vmem_budget")
+    assert ok.ok
+
+
+def test_pallas_flags_understated_claim(fwd_info):
+    """A claim below the structural working set (beyond slack) fails."""
+    understated = fwd_info.structural_vmem() - pallas.CLAIM_SLACK_BYTES - 1
+    bad = _finding(
+        pallas.check_contracts(fwd_info, claimed_bytes=understated),
+        "vmem_claim")
+    assert not bad.ok
+    with pytest.raises(CheckError):
+        from repro.kernels import cce_fwd
+        pallas.assert_kernel_contracts(
+            cce_fwd.cce_forward_pallas,
+            jax.ShapeDtypeStruct((256, 64), jnp.float32),
+            jax.ShapeDtypeStruct((2048, 64), jnp.float32),
+            jax.ShapeDtypeStruct((256,), jnp.int32),
+            claimed_bytes=understated)
+
+
+def test_pallas_flags_bad_alias(fwd_info):
+    """Out-of-range and shape-mismatched aliases are both flagged."""
+    oob = dataclasses.replace(fwd_info, aliases=((0, 99),))
+    assert not _finding(pallas.check_contracts(oob), "alias_shape").ok
+
+    mismatched = dataclasses.replace(
+        fwd_info,
+        in_avals=[((256, 64), "float32")],
+        out_avals=[((256,), "float32")],
+        aliases=((0, 0),))
+    bad = _finding(pallas.check_contracts(mismatched), "alias_shape")
+    assert not bad.ok and "!=" in bad.detail
+
+
+def test_pallas_flags_16bit_scratch(fwd_info):
+    """A bfloat16 scratch accumulator violates the f32-accum contract."""
+    bf16 = dataclasses.replace(
+        fwd_info, scratch_avals=[((128, 256), "bfloat16")])
+    assert not _finding(pallas.check_contracts(bf16), "accum_f32").ok
+    assert _finding(pallas.check_contracts(fwd_info), "accum_f32").ok
+
+
+def test_pallas_flags_tile_indiscipline(fwd_info):
+    """A block that neither divides its array nor lands on the (8,128)
+    tile grid is flagged."""
+    crooked = dataclasses.replace(fwd_info, in_blocks=[
+        pallas.BlockInfo(origin="e_ref", block_shape=(96, 96),
+                         array_shape=(256, 2048), dtype="float32")])
+    bad = _finding(pallas.check_contracts(crooked), "tile_discipline")
+    assert not bad.ok
+
+
+def test_pallas_entry_points_and_sweep_pass():
+    """Positive control: every real kernel entry point and every knob
+    combo passes — the negative tests above prove this is not vacuous."""
+    findings = pallas.check_kernel_entry_points()
+    assert findings and all(f.ok for f in findings), \
+        [f.detail for f in findings if not f.ok]
+    sweep = pallas.sweep_cce_knobs()
+    assert sweep and all(f.ok for f in sweep), \
+        [f.detail for f in sweep if not f.ok]
+
+
+# ---------------------------------------------------------------------------
+# sync / retrace audit
+# ---------------------------------------------------------------------------
+
+_EXTRA_GET = '''
+import jax
+
+class Engine:
+    def _sync(self):
+        a = jax.device_get(self.status)
+        b = jax.device_get(self.extra1)
+        c = jax.device_get(self.extra2)
+        return a, b, c
+'''
+
+_STRAY_GET = '''
+import jax
+
+class Engine:
+    def step(self):
+        return jax.device_get(self.state)   # sync outside _sync
+'''
+
+_BUSY_WAIT = '''
+import jax
+
+def poll(x):
+    x.block_until_ready()
+    return x
+'''
+
+
+def test_sync_flags_extra_device_get():
+    bad = [f for f in syncaudit.audit_source(_EXTRA_GET)
+           if f.invariant == "one_device_get_per_step"]
+    assert bad and not bad[0].ok
+    assert len(bad[0].data["lines"]) == 3
+
+
+def test_sync_flags_stray_device_get_and_busy_wait():
+    stray = [f for f in syncaudit.audit_source(_STRAY_GET)
+             if f.invariant == "device_get_only_in_sync"]
+    assert stray and not stray[0].ok
+    busy = [f for f in syncaudit.audit_source(_BUSY_WAIT)
+            if f.invariant == "no_block_until_ready"]
+    assert busy and not busy[0].ok
+
+
+def test_sync_repo_passes():
+    findings = syncaudit.audit_all()
+    assert findings and all(f.ok for f in findings), \
+        [f.detail for f in findings if not f.ok]
+
+
+# ---------------------------------------------------------------------------
+# lint
+# ---------------------------------------------------------------------------
+
+def test_lint_flags_misplaced_pallas_call(tmp_path):
+    """A pallas_call outside kernels/ fails the location lint."""
+    (tmp_path / "kernels").mkdir()
+    (tmp_path / "serve").mkdir()
+    (tmp_path / "kernels" / "ok.py").write_text(
+        "import jax.experimental.pallas as pl\n"
+        "launch = pl.pallas_call\n")
+    (tmp_path / "serve" / "bad.py").write_text(
+        "from jax.experimental import pallas as pl\n"
+        "def f(k, x):\n"
+        "    return pl.pallas_call(k)(x)\n")
+    finding = lint.lint_pallas_location(str(tmp_path))[0]
+    assert not finding.ok
+    assert any("serve" in m for m in finding.data["misplaced"])
+    assert finding.data["kernel_sites"] == 1
+    assert lint.find_pallas_calls("y = pl.pallas_call(k)(x)\n") == [1]
+
+
+def test_lint_repo_passes():
+    findings = lint.lint_all()
+    assert findings and all(f.ok for f in findings), \
+        [f.detail for f in findings if not f.ok]
+
+
+# ---------------------------------------------------------------------------
+# CLI + fixtures
+# ---------------------------------------------------------------------------
+
+def test_cli_fast_families_exit_zero(tmp_path):
+    """``python -m repro.analysis.checks --only lint --only sync`` exits 0
+    and writes a well-formed JSON report."""
+    report = tmp_path / "report.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.checks", "--quiet",
+         "--only", "lint", "--only", "sync", "--json", str(report)],
+        capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = json.loads(report.read_text())
+    assert payload["ok"] is True
+    assert payload["findings"]
+    assert {f["family"] for f in payload["findings"]} == {"lint", "sync"}
+
+
+def test_fixture_check_memory_class(check_memory_class):
+    """The pytest fixture resolves to the library helper and still flags
+    the dense program."""
+    finding = check_memory_class(_dense_fn, *_sds(), n=N, v=V, d=D)
+    assert not finding.ok and finding.data["observed"] == DENSE_CLASS

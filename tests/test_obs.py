@@ -9,9 +9,8 @@ import urllib.request
 import numpy as np
 import pytest
 
-from repro.obs import (NULL, Counter, Gauge, Histogram, JsonlSink,
-                       NullRegistry, Registry, Tracer, exposition,
-                       read_jsonl, start_http_server)
+from repro.obs import (NULL, JsonlSink, NullRegistry, Registry, Tracer,
+                       exposition, read_jsonl, start_http_server)
 from repro.obs import kernels as obs_kernels
 
 

@@ -12,7 +12,7 @@ pytest.importorskip(
     "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
-from repro.configs.base import MoEConfig, SSMConfig
+from repro.configs.base import MoEConfig
 from repro.kernels import ref
 from repro.models import layers as L
 from repro.models import recurrent as R

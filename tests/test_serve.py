@@ -10,7 +10,6 @@ import numpy as np
 import pytest
 
 import repro.configs as configs
-from repro.analysis import hlo as hlo_an
 from repro.models import transformer as T
 from repro.serve import Engine, SamplingParams, scoring
 from repro.serve import sampling as sampling_mod
@@ -345,27 +344,26 @@ def test_scoring_sharded_matches_local(model):
                                rtol=1e-4, atol=1e-4)
 
 
-def test_scoring_hlo_has_no_batched_vocab_buffer():
+def test_scoring_hlo_has_no_batched_vocab_buffer(assert_memory_class):
     """The jitted scorer's optimized HLO must contain no (N, V)-class
     array: vocab is enlarged so a kernel tile cannot coincide with N×V
-    (same convention as benchmarks/loss_zoo_memory)."""
+    (classification via repro.analysis.checks, same convention as
+    benchmarks/loss_zoo_memory)."""
+    from repro.analysis.checks import DENSE_CLASS, classify_hlo
+
     cfg = _cfg(vocab_size=32768)
     b, s = 8, 64
     n, v, d = b * s, cfg.padded_vocab_size, cfg.d_model
-    budget = 4 * max(n * d, v * d)
-    assert budget < n * v           # the check is actually discriminating
     params_sds = jax.eval_shape(
         lambda: T.init_lm(jax.random.PRNGKey(0), cfg))
     toks = jax.ShapeDtypeStruct((b, s), jnp.int32)
     fn = scoring.score_fn(cfg, impl="cce_jax")
-    text = jax.jit(fn).lower(params_sds, toks, toks).compile().as_text()
-    top = hlo_an.array_shape_census(text, top=1)[0]
-    assert top[0] <= budget, \
-        f"scoring materialized an N×V-class buffer: {top[1]}"
+    assert_memory_class(jax.jit(fn), params_sds, toks, toks,
+                        n=n, v=v, d=d, what="scoring(cce_jax)")
     # control: the dense scorer at the same size does materialize (N, V)
     dense = scoring.score_fn(cfg, impl="dense")
     text = jax.jit(dense).lower(params_sds, toks, toks).compile().as_text()
-    assert hlo_an.array_shape_census(text, top=1)[0][0] >= n * v
+    assert classify_hlo(text, n=n, v=v, d=d) == DENSE_CLASS
 
 
 def test_build_scoring_batch_shapes_and_labels():
@@ -1002,18 +1000,17 @@ def test_sample_tokens_pure_temperature_fast_path():
     np.testing.assert_array_equal(fast, want)
 
 
-def test_fused_decode_hlo_has_no_batched_vocab_buffer():
+def test_fused_decode_hlo_has_no_batched_vocab_buffer(assert_memory_class):
     """The fused decode jit's optimized HLO must contain no (B, V)-class
     array, filtered or not — batch and vocab are enlarged until B·V
     dwarfs every legitimate buffer (weights, caches, kernel tiles). The
     dense step at the same geometry is the positive control."""
+    from repro.analysis.checks import DENSE_CLASS, classify_hlo
     from repro.serve import engine as engine_mod
 
     cfg = _cfg(vocab_size=32768)
     b, max_len = 512, 16
     n, v, d = b, cfg.padded_vocab_size, cfg.d_model
-    budget = 4 * max(n * d, v * d)
-    assert budget < n * v           # the check is actually discriminating
     params_sds = jax.eval_shape(
         lambda: T.init_lm(jax.random.PRNGKey(0), cfg))
     state_sds = jax.eval_shape(lambda: sched_mod.init_state(b, 8, 8))
@@ -1022,14 +1019,12 @@ def test_fused_decode_hlo_has_no_batched_vocab_buffer():
         text = engine_mod._engine_step_fused.lower(
             params_sds, cache_sds, state_sds, None, cfg=cfg,
             max_len=max_len, with_filter=wf).compile().as_text()
-        top = hlo_an.array_shape_census(text, top=1)[0]
-        assert top[0] <= budget, \
-            f"fused decode (with_filter={wf}) materialized a B×V-class " \
-            f"buffer: {top[1]}"
+        assert_memory_class(text, n=n, v=v, d=d,
+                            what=f"decode_fused(filter={wf})")
     text = engine_mod._engine_step.lower(
         params_sds, cache_sds, state_sds, None, cfg=cfg,
         max_len=max_len).compile().as_text()
-    assert hlo_an.array_shape_census(text, top=1)[0][0] >= n * v
+    assert classify_hlo(text, n=n, v=v, d=d) == DENSE_CLASS
 
 
 def test_fused_metrics_hbm_avoided_and_kernel_labels(model, monkeypatch):

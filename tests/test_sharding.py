@@ -2,7 +2,6 @@
 jax locks the device count at first init — the main pytest process must
 keep seeing one device)."""
 
-import json
 import os
 import subprocess
 import sys

@@ -5,7 +5,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 import repro.configs as configs
 from repro.analysis import hlo as hlo_an
