@@ -18,6 +18,15 @@ per matched pair:
   * **prefix_hit_rate** — HARD FAIL when a baseline row carries a
     positive hit rate and the fresh row's is zero/absent: shared-prefix
     page reuse went silently dead.
+  * **spec_accept_rate** — HARD FAIL when a baseline row's speculative
+    acceptance rate drops below 80% of baseline or vanishes: on the
+    peaked benchmark workload acceptance is deterministic, so a drop is
+    a draft/verify pipeline break, not noise.
+  * **speedup_vs_fused** — HARD FAIL when a baseline row demonstrated
+    the >=1.3x speculative-decoding speedup and the fresh row falls
+    below 1.3x. The ratio is measured within one run (spec vs. spec-off
+    back to back on the same machine), so it is runner-speed-invariant
+    and safe to gate hard, unlike raw ``wall_s``.
 
 Baseline rows with no fresh counterpart are reported (the fresh run may
 legitimately have been restricted via ``--only``); fresh rows with no
@@ -65,6 +74,26 @@ def compare(baseline: list[dict], fresh: list[dict], *,
             out["failures"].append(
                 f"{name}: prefix_hit_rate regressed {bh:.3g} -> "
                 f"{fh if fh is not None else 'absent'} (prefix reuse lost)")
+        # speculative acceptance — HARD FAIL below the floor: the peaked
+        # benchmark workload accepts deterministically (rate ~1.0), so a
+        # drop means the draft/verify pipeline broke, not noise
+        ba, fa = b.get("spec_accept_rate"), f.get("spec_accept_rate")
+        if ba and (fa is None or fa < 0.8 * ba):
+            out["failures"].append(
+                f"{name}: spec_accept_rate regressed {ba:.3g} -> "
+                f"{fa if fa is not None else 'absent'} "
+                f"(speculative acceptance lost)")
+        # speculative speedup — HARD FAIL when a baseline row demonstrated
+        # the 1.3x multi-token-acceptance win and the fresh row loses it.
+        # speedup_vs_fused is a WITHIN-RUN ratio (spec vs. spec-off on the
+        # same machine, back to back), so unlike raw wall_s it is robust
+        # to runner speed and safe to gate hard.
+        bs, fs = b.get("speedup_vs_fused"), f.get("speedup_vs_fused")
+        if bs and bs >= 1.3 and (fs is None or fs < 1.3):
+            out["failures"].append(
+                f"{name}: speculative speedup regressed {bs:.3g}x -> "
+                f"{f'{fs:.3g}x' if fs is not None else 'absent'} "
+                f"(below the 1.3x floor)")
     out["missing"] = ["/".join(k for k in key if k)
                       for key in sorted(set(base) - set(new))]
     out["new"] = ["/".join(k for k in key if k)

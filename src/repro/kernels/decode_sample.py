@@ -449,17 +449,40 @@ def decode_sample_ref(h, C, keys, temperature, top_k, top_p, *,
                       vocab: int, softcap: float | None = None,
                       with_filter: bool = True, with_sample: bool = True,
                       block_v: int = 512, block_b: int = 8,
-                      n_buckets: int = DEFAULT_BUCKETS):
+                      n_buckets: int = DEFAULT_BUCKETS,
+                      labels=None, exclude=None):
     """Blockwise twin of the kernel: identical per-tile math and noise,
     so tokens are bit-identical to the Pallas kernel. Never materializes
     ``(B, V)``: rows go through ``lax.map`` in ``block_b`` chunks (rows
     are independent, so chunking is numerically free) and the vocab is a
     ``fori_loop`` over ``block_v`` tiles — the widest live arrays are one
     ``(block_b, block_v)`` tile and the ``(block_b, block_v, n_buckets)``
-    histogram temporary, mirroring the kernel's VMEM footprint."""
+    histogram temporary, mirroring the kernel's VMEM footprint.
+
+    Speculative-verification extras (DESIGN.md §12), both optional:
+
+    * ``labels`` (B,) int32 — adds a THIRD output ``label_lp``: the
+      logprob the row's own sampling distribution assigns to
+      ``labels[b]`` (raw softmax for greedy rows, renormalized kept-set
+      distribution for filtered rows; −inf when the label falls outside
+      the kept set). Accumulated inside the stats sweep — the label's
+      logit is picked out of the tile it lives in, so the extra cost is
+      one masked reduction per tile, never a ``(B, V)`` gather.
+    * ``exclude`` (B,) int32, −1 = none — masks that token out of the
+      *sampled* Gumbel-max pick only. The kept-set LSE and the greedy
+      argmax are untouched, so a Gumbel draw with ``exclude=d`` samples
+      exactly the residual distribution ``p`` restricted to the
+      complement of ``d`` — the speculative rejection correction
+      ``max(p − q, 0)`` for a deterministic (point-mass) drafter. The
+      reported ``lp`` for the picked token stays ``log p`` under the
+      UNexcluded distribution (the quantity the output logprob contract
+      promises).
+    """
     b, d = h.shape
     if not with_sample:
         with_filter = False      # filters only exist for sampled rows
+    with_labels = labels is not None
+    with_exclude = exclude is not None
     vpad = C.shape[0]
     pad = (-vpad) % block_v
     if pad:
@@ -470,14 +493,21 @@ def decode_sample_ref(h, C, keys, temperature, top_k, top_p, *,
     tau_v = jnp.asarray(temperature, jnp.float32).reshape(b)
     kf_v = jnp.asarray(top_k, jnp.float32).reshape(b)
     pf_v = jnp.asarray(top_p, jnp.float32).reshape(b)
+    lab_v = (jnp.clip(jnp.asarray(labels, jnp.int32).reshape(b),
+                      0, vocab - 1)
+             if with_labels else jnp.zeros((b,), jnp.int32))
+    exc_v = (jnp.asarray(exclude, jnp.int32).reshape(b)
+             if with_exclude else jnp.full((b,), -1, jnp.int32))
 
     def one_chunk(args):
-        hc, kc, tau, kf, pf = args
+        hc, kc, tau, kf, pf, lab, exc = args
         bb = hc.shape[0]
         k0, k1 = kc[:, 0:1], kc[:, 1:2]
         tau = tau[:, None]
         kf = kf[:, None]
         pf = pf[:, None]
+        lab = lab[:, None]
+        exc = exc[:, None]
         tau_safe = jnp.where(tau > 0.0, tau, 1.0) if with_sample else None
 
         def tile(vb):
@@ -498,18 +528,33 @@ def decode_sample_ref(h, C, keys, temperature, top_k, top_p, *,
             return jax.lax.fori_loop(0, nv, body, init)
 
         def stats_body(vb, carry):
-            m, se, mn, gm, gi = carry
+            if with_labels:
+                m, se, mn, gm, gi, al = carry
+            else:
+                m, se, mn, gm, gi = carry
             a, s, col, valid = tile(vb)
             m, se = _online_lse(m, se, s)
             mn = jnp.minimum(mn, jnp.min(jnp.where(valid, s, jnp.inf),
                                          axis=1, keepdims=True))
             bm, bi = _block_argmax(a, col)
             upd = bm > gm
-            return m, se, mn, jnp.maximum(gm, bm), jnp.where(upd, bi, gi)
+            gm, gi = jnp.maximum(gm, bm), jnp.where(upd, bi, gi)
+            if with_labels:
+                # the label id lives in exactly one (valid) tile column,
+                # so a masked sum per tile accumulates its raw logit
+                al = al + jnp.sum(jnp.where(col == lab, a, 0.0),
+                                  axis=1, keepdims=True)
+                return m, se, mn, gm, gi, al
+            return m, se, mn, gm, gi
 
-        m, se, mn, gm, gi = sweep(
-            stats_body,
-            (col1 + _NEG, col1, col1 + jnp.inf, col1 + _NEG, coli))
+        stats_init = (col1 + _NEG, col1, col1 + jnp.inf, col1 + _NEG,
+                      coli)
+        if with_labels:
+            m, se, mn, gm, gi, al = sweep(stats_body,
+                                          stats_init + (col1,))
+        else:
+            m, se, mn, gm, gi = sweep(stats_body, stats_init)
+            al = None
         lse = m + jnp.log(se)
 
         if with_filter:
@@ -534,6 +579,8 @@ def decode_sample_ref(h, C, keys, temperature, top_k, top_p, *,
         if not with_sample:
             # all-greedy batch: no noise hash, no Gumbel recurrence — the
             # stats sweep above already holds the argmax and the LSE
+            if with_labels:
+                return gi[:, 0], (gm - lse)[:, 0], (al - lse)[:, 0]
             return gi[:, 0], (gm - lse)[:, 0]
 
         def sample_body(vb, carry):
@@ -541,7 +588,12 @@ def decode_sample_ref(h, C, keys, temperature, top_k, top_p, *,
             _, s, col, _ = tile(vb)
             s_kept = jnp.where(s >= th, s, _NEG)
             km, ks = _online_lse(km, ks, s_kept)
-            pm, pi, pv = _gumbel_update(pm, pi, pv, s_kept, col, k0, k1)
+            # exclusion masks the Gumbel pick only: the kept-set LSE
+            # still covers the full kept set, so the pick is the exact
+            # residual draw while lp keeps the unexcluded convention
+            s_pick = (jnp.where(col == exc, _NEG, s_kept)
+                      if with_exclude else s_kept)
+            pm, pi, pv = _gumbel_update(pm, pi, pv, s_pick, col, k0, k1)
             return km, ks, pm, pi, pv
 
         km, ks, pm, pi, pv = sweep(
@@ -552,6 +604,14 @@ def decode_sample_ref(h, C, keys, temperature, top_k, top_p, *,
         g = tau <= 0.0
         tok = jnp.where(g, gi, pi)
         lp = jnp.where(g, gm - lse, pv - kept_lse)
+        if with_labels:
+            # filtered rows: the label must survive the keep threshold;
+            # unfiltered rows have th = -inf and kept_lse == lse, so the
+            # same expression degenerates to s_label - lse
+            s_label = al / tau_safe
+            samp_lp = jnp.where(s_label >= th, s_label - kept_lse, _NEG)
+            label_lp = jnp.where(g, al - lse, samp_lp)
+            return tok[:, 0], lp[:, 0], label_lp[:, 0]
         return tok[:, 0], lp[:, 0]
 
     rpad = (-b) % block_b
@@ -561,19 +621,23 @@ def decode_sample_ref(h, C, keys, temperature, top_k, top_p, *,
         tau_v = jnp.pad(tau_v, (0, rpad))
         kf_v = jnp.pad(kf_v, (0, rpad))
         pf_v = jnp.pad(pf_v, (0, rpad), constant_values=1.0)
+        lab_v = jnp.pad(lab_v, (0, rpad))
+        exc_v = jnp.pad(exc_v, (0, rpad), constant_values=-1)
     nb = (b + rpad) // block_b
     if nb == 1:
         # one chunk: skip the lax.map scan wrapper (another fusion
         # barrier) — identical math, straight-line
-        tok, lp = one_chunk((h, keys, tau_v, kf_v, pf_v))
-        return tok[:b], lp[:b]
+        out = one_chunk((h, keys, tau_v, kf_v, pf_v, lab_v, exc_v))
+        return tuple(o[:b] for o in out)
     chunked = (h.reshape(nb, block_b, d),
                keys.reshape(nb, block_b, 2),
                tau_v.reshape(nb, block_b),
                kf_v.reshape(nb, block_b),
-               pf_v.reshape(nb, block_b))
-    tok, lp = jax.lax.map(one_chunk, chunked)
-    return tok.reshape(-1)[:b], lp.reshape(-1)[:b]
+               pf_v.reshape(nb, block_b),
+               lab_v.reshape(nb, block_b),
+               exc_v.reshape(nb, block_b))
+    out = jax.lax.map(one_chunk, chunked)
+    return tuple(o.reshape(-1)[:b] for o in out)
 
 
 # ---------------------------------------------------------------------------
@@ -586,15 +650,27 @@ def decode_sample(h, C, keys, temperature, top_k, top_p, *, vocab: int,
                   block_b: int | None = None, block_v: int | None = None,
                   n_buckets: int = DEFAULT_BUCKETS,
                   use_kernel: bool | None = None,
-                  interpret: bool | None = None):
+                  interpret: bool | None = None,
+                  labels=None, exclude=None):
     """Fused logit-free decode sampling; auto-dispatches TPU kernel vs
     pure-JAX twin (twin on CPU — the pltpu PRNG-free noise makes them
-    token-identical, so the choice is pure performance)."""
+    token-identical, so the choice is pure performance).
+
+    ``labels``/``exclude`` (speculative verification, DESIGN.md §12)
+    route to the reference twin: the sweep math is identical, the label
+    logprob rides the stats sweep, and the exclusion masks only the
+    Gumbel pick — see :func:`decode_sample_ref`. Extending the Pallas
+    kernel with the same two scratch columns is a straightforward
+    follow-up; the serve engine only needs the twin (its CPU execution
+    path) today. With ``labels`` the return is a 3-tuple
+    ``(token, logprob, label_lp)``; without, the 2-tuple is unchanged."""
     b, d = h.shape
     if not with_sample:
         with_filter = False
     if use_kernel is None:
         use_kernel = not _is_cpu()
+    if labels is not None or exclude is not None:
+        use_kernel = False
     if block_b is None or block_v is None:
         if use_kernel:
             cb, cv = choose_decode_blocks(b, C.shape[0], d,
@@ -625,4 +701,5 @@ def decode_sample(h, C, keys, temperature, top_k, top_p, *, vocab: int,
         h, C, keys, temperature, top_k, top_p, vocab=vocab,
         softcap=softcap, with_filter=with_filter,
         with_sample=with_sample, block_v=block_v,
-        block_b=block_b, n_buckets=n_buckets)
+        block_b=block_b, n_buckets=n_buckets,
+        labels=labels, exclude=exclude)

@@ -11,6 +11,14 @@ Decode (default mode) — sampled generation over the slot scheduler:
   prefill, fused with decode of the other rows) — lower TTFT, identical
   tokens.
 
+  Speculative decoding: ``--spec-k K`` drafts K tokens per row per step
+  (zero-cost n-gram/prompt-lookup drafter by default, or a small draft
+  transformer via ``--draft-arch``) and verifies them with ONE fused
+  logit-free sweep — up to K+1 tokens per target step, still one host
+  sync per step. Greedy streams are token-identical to plain decode;
+  sampled streams draw from the same per-row distribution
+  (accept-ratio test + residual bonus sampling, DESIGN.md §12).
+
   Request streams: --requests FILE reads one JSON object per line
       {"prompt": [1,2,3], "max_new": 8, "temperature": 0.8, "top_k": 40,
        "top_p": 0.9, "seed": 1, "eos": 2, "arrive_step": 4}
@@ -137,13 +145,33 @@ def _decode_mode(args, cfg, params):
         sys.exit(f"--kv-page-size must be >= 1, got {args.kv_page_size}")
     if args.kv_pages is not None and args.kv_pages < 1:
         sys.exit(f"--kv-pages must be >= 1, got {args.kv_pages}")
+    if args.spec_k < 0:
+        sys.exit(f"--spec-k must be >= 0, got {args.spec_k}")
+    if args.spec_k > 0 and args.decode_kernel != "fused":
+        sys.exit("--spec-k requires --decode-kernel fused (speculative "
+                 "verification runs the fused projection->sample sweep)")
+    if args.draft_arch is not None and args.spec_k == 0:
+        sys.exit("--draft-arch requires --spec-k > 0")
+    draft_cfg = draft_params = None
+    if args.draft_arch is not None:
+        draft_cfg = (configs.get_reduced_config(args.draft_arch)
+                     if args.reduced
+                     else configs.get_config(args.draft_arch))
+        draft_cfg = dataclasses.replace(draft_cfg, dtype="float32")
+        if draft_cfg.vocab_size != cfg.vocab_size:
+            sys.exit(f"draft arch {args.draft_arch!r} has vocab "
+                     f"{draft_cfg.vocab_size}, target has "
+                     f"{cfg.vocab_size}: they must share the vocab")
+        draft_params = T.init_lm(jax.random.PRNGKey(args.seed + 1),
+                                 draft_cfg)
     metrics, tracer, obs_finish = obs_from_args(args)
     eng = Engine(cfg, params, max_len=args.max_len,
                  batch_size=args.batch_size,
                  prefill_chunk=args.prefill_chunk,
                  metrics=metrics, tracer=tracer,
                  kv_page_size=args.kv_page_size, kv_pages=args.kv_pages,
-                 decode_kernel=args.decode_kernel)
+                 decode_kernel=args.decode_kernel, spec_k=args.spec_k,
+                 draft_cfg=draft_cfg, draft_params=draft_params)
     base = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                           top_p=args.top_p, seed=args.seed)
     pending = []          # [(arrive_step, submit_kwargs)]
@@ -180,6 +208,15 @@ def _decode_mode(args, cfg, params):
         h = metrics.histogram("serve_ttft_seconds")
         print(f"# telemetry: {fin:.0f} finished, {gen:.0f} tokens "
               f"generated, mean TTFT {1e3 * h.mean:.1f} ms")
+        if args.spec_k:
+            drafted = metrics.total("serve_spec_draft_tokens_total")
+            emitted = metrics.total("serve_spec_emitted_tokens_total")
+            ah = metrics.histogram("serve_spec_accepted_len",
+                                   {"spec_k": args.spec_k})
+            rate = metrics.value("serve_spec_accept_rate") or 0.0
+            print(f"# speculative: k={args.spec_k}, {drafted:.0f} "
+                  f"drafted, {emitted:.0f} emitted, mean accepted "
+                  f"length {ah.mean:.2f}, accept rate {rate:.2f}")
     if eng.pool is not None:
         st = eng.pool.stats()
         print(f"# kvpool: {st['num_pages']} pages x {st['page_size']} "
@@ -277,6 +314,18 @@ def main():
                          "(never materializes (B, V) logits); dense: "
                          "explicit logits + device sampler (fallback and "
                          "golden oracle)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding draft length (0 = off): "
+                         "each step drafts K tokens and verifies them "
+                         "with one fused logit-free sweep, emitting up "
+                         "to K+1 tokens per step; greedy output is "
+                         "token-identical (requires --decode-kernel "
+                         "fused)")
+    ap.add_argument("--draft-arch", default=None,
+                    help="draft-model arch for --spec-k (any config "
+                         "sharing the target vocab; honors --reduced); "
+                         "default: the zero-cost n-gram/prompt-lookup "
+                         "drafter")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy")
     ap.add_argument("--top-k", type=int, default=0, help="0 = off")

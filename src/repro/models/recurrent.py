@@ -104,7 +104,13 @@ def rglru_block(params, x, cfg, state=None, decode=False, valid_len=None):
         new_conv = conv_hist[:, 1:]
     elif decode:
         hist = jnp.concatenate([state["conv"], xb], axis=1)  # (B, K-1+S, W)
-        xb_c = _causal_conv(xb, params["conv_w"], hist=state["conv"])
+        # per-position windows contracted by the same einsum as the
+        # single-token step (f32 accumulation), so an S-token decode is
+        # bit-identical to S one-token steps — the speculative engine's
+        # verify/replay forwards rely on this
+        wins = jnp.stack([hist[:, t:t + kw] for t in range(s)],
+                         axis=1)                             # (B,S,K,W)
+        xb_c = jnp.einsum("bskw,kw->bsw", wins, params["conv_w"][::-1])
         n = (jnp.full((b,), s, jnp.int32) if valid_len is None
              else jnp.asarray(valid_len, jnp.int32))
         # last K-1 inputs ending at each row's final valid token; for

@@ -524,6 +524,42 @@ def reset_cache_rows(cache, rows):
     return out
 
 
+def select_cache_rows(mask, new_cache, old_cache):
+    """Per-row cache merge: rows where ``mask`` (B,) is True take
+    ``new_cache``, the rest keep ``old_cache`` (identical treedefs).
+
+    The speculative draft loop uses this to commit a catch-up forward
+    only for the rows that actually advanced this round — pure ``where``
+    ops over the same axis conventions as :func:`reset_cache_rows`
+    (groups stacked (n_groups, B, ...), tail (B, ...)). Paged pools
+    (``k_pages``/``v_pages``) have no batch axis and the page *writes*
+    are already row-disjoint (each row only touches its own mapped
+    pages), so they pass through from ``new_cache``; ``pt`` is
+    host-managed and merges per row like any other leaf.
+    """
+    def sel(new, old, batch_axis):
+        shape = [1] * new.ndim
+        shape[batch_axis] = new.shape[batch_axis]
+        return jnp.where(mask.reshape(shape), new, old)
+
+    def walk(new, old, batch_axis):
+        if isinstance(new, dict):
+            return {k: (new[k] if k in ("k_pages", "v_pages")
+                        else walk(new[k], old[k], batch_axis))
+                    for k in new}
+        if isinstance(new, (list, tuple)):
+            return type(new)(walk(n, o, batch_axis)
+                             for n, o in zip(new, old))
+        return sel(new, old, batch_axis)
+
+    out = {"groups": walk(new_cache["groups"], old_cache["groups"], 1)}
+    if "tail" in new_cache:
+        out["tail"] = walk(new_cache["tail"], old_cache["tail"], 0)
+    if "pt" in new_cache:
+        out["pt"] = sel(new_cache["pt"], old_cache["pt"], 0)
+    return out
+
+
 def _lm_head(h_last, params, cfg, *, return_logits, sample, with_filter,
              with_sample=True):
     """Shared classifier tail for the serve entry points.
@@ -617,3 +653,31 @@ def serve_prefill(params, cfg, cache, tokens, cache_index, valid_len,
                    sample=sample, with_filter=with_filter,
                    with_sample=with_sample)
     return out, new_cache
+
+
+def serve_prefill_spec(params, cfg, cache, tokens, cache_index, valid_len,
+                       enc_out=None):
+    """Speculative verification forward: the :func:`serve_prefill`
+    multi-token decode step, but returning EVERY position's final hidden
+    state ``(B, S, D)`` instead of reducing to the last valid one.
+
+    The speculative engine runs the draft window ``[t0, d1 .. dK]``
+    through this, flattens to ``(B·S, D)`` and scores all positions with
+    ONE fused decode sweep — per-token target logprobs without ever
+    materializing ``(B, S, V)`` (DESIGN.md §12). Same drop-free MoE
+    capacity forcing and per-row ``valid_len`` padding discipline as
+    chunked prefill; positions past ``valid_len`` never enter the KV
+    cache or recurrent states, but their (garbage) hidden states are
+    still returned — callers mask them out.
+    """
+    if cfg.moe is not None:
+        moe = cfg.moe
+        cap_free = moe.num_experts / moe.top_k
+        if moe.capacity_factor < cap_free:
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(moe, capacity_factor=cap_free))
+    valid_len = jnp.asarray(valid_len, jnp.int32)
+    hidden, new_cache, _ = lm_hidden(
+        params, cfg, {"tokens": tokens}, cache=cache,
+        cache_index=cache_index, enc_out=enc_out, valid_len=valid_len)
+    return hidden, new_cache

@@ -14,9 +14,16 @@
     refcounts, prefix registry) behind ``Engine(kv_page_size=...)``:
     per-slot page tables replace dense per-slot KV rows, and page-aligned
     shared prompt prefixes are reused copy-free across requests.
+  * :mod:`repro.serve.speculative` — draft/verify decoding behind
+    ``Engine(spec_k=...)``: a zero-cost n-gram drafter (or a small draft
+    transformer via ``draft_cfg``/``draft_params``) proposes up to K
+    tokens, one multi-token forward plus one fused CCE sweep verifies
+    them without ``(B, K, V)`` logits, and each step emits up to K+1
+    tokens for the same single host sync.
 """
 from repro.serve.engine import Engine  # noqa: F401
 from repro.serve.kvpool import KVPool  # noqa: F401
 from repro.serve.sampling import GREEDY, SamplingParams  # noqa: F401
 from repro.serve.scheduler import Completion, Request, Scheduler  # noqa: F401
 from repro.serve.scoring import rank, score, token_logprobs  # noqa: F401
+from repro.serve.speculative import needs_replay, ngram_drafts  # noqa: F401

@@ -38,12 +38,14 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import transformer as T
 from repro.obs import metrics as M
 from repro.obs import trace as Tr
 from repro.serve import kvpool as KP
 from repro.serve import scheduler as sched
+from repro.serve import speculative as SP
 from repro.serve.sampling import GREEDY, SamplingParams
 
 
@@ -148,6 +150,84 @@ def _engine_prefill_step_fused(params, cache, state, enc_out, *, cfg,
     return cache, state
 
 
+# Speculative decoding (DESIGN.md §12): one draft/verify round per jit
+# call emits up to spec_k + 1 tokens per decode row. The round subsumes
+# chunked prefill (prefilling rows use the window as a prompt chunk), so
+# a speculative engine runs exactly ONE jit flavor per drafter — and the
+# one-host-sync-per-step contract is unchanged (census-asserted by the
+# sync auditor: no device_get outside Engine._sync).
+
+def _spec_round(params, cache, state, enc_out, drafts, *, cfg, max_len,
+                spec_k, with_filter, with_sample, replay):
+    """Shared verify/accept/commit tail of both speculative jits."""
+    window, n_tok, in_prompt, k_b = SP.build_windows(
+        state, drafts, spec_k=spec_k, max_len=max_len)
+    keys, carries = sched.sample_keys_all(state, spec_k + 1)
+    p = state["cache_index"]
+    hidden, new_cache = T.serve_prefill_spec(
+        params, cfg, cache, window, p, n_tok, enc_out=enc_out)
+    tok_s, lp_s, lab_lp = SP.run_verify_sweep(
+        params, cfg, hidden, window, n_tok, keys, state,
+        with_filter=with_filter, with_sample=with_sample)
+    state, commit_len, _ = SP.accept_and_advance(
+        state, window, n_tok, in_prompt, k_b, tok_s, lp_s, lab_lp, keys,
+        carries, spec_k=spec_k, max_len=max_len)
+    if replay:
+        # recurrent/SWA-ring states carry the rejected tail: commit by
+        # replaying ONLY the accepted prefix over the original cache
+        # (masked re-write — positions past commit_len never enter)
+        _, new_cache = T.serve_prefill_spec(
+            params, cfg, cache, window, p, commit_len, enc_out=enc_out)
+    return new_cache, state
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "max_len", "spec_k",
+                                    "with_filter", "with_sample",
+                                    "replay"),
+                   donate_argnums=(1, 2))
+def _engine_step_spec(params, cache, state, enc_out, *, cfg, max_len,
+                      spec_k, with_filter, with_sample, replay):
+    """Speculative round with the zero-cost n-gram/prompt-lookup
+    drafter: proposals come from the row's own token history, entirely
+    device-side — no extra parameters, no extra cache."""
+    drafts = SP.ngram_drafts(state, spec_k)
+    return _spec_round(params, cache, state, enc_out, drafts, cfg=cfg,
+                       max_len=max_len, spec_k=spec_k,
+                       with_filter=with_filter, with_sample=with_sample,
+                       replay=replay)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "draft_cfg", "max_len",
+                                    "spec_k", "with_filter",
+                                    "with_sample", "replay"),
+                   donate_argnums=(1, 2, 4))
+def _engine_step_spec_draft(params, cache, state, draft_params,
+                            draft_cache, enc_out, *, cfg, draft_cfg,
+                            max_len, spec_k, with_filter, with_sample,
+                            replay):
+    """Speculative round with a small draft transformer (any config
+    sharing the vocab). The draft cache first catches up on the window
+    each row committed last round, then K greedy one-token steps on a
+    throwaway fork produce the proposals — all in the same jit, so the
+    draft loop adds zero host syncs."""
+    draft_cache = SP.draft_catchup(draft_params, draft_cfg, draft_cache,
+                                   state)
+    drafts = SP.draft_propose(draft_params, draft_cfg, draft_cache,
+                              state, spec_k)
+    cache, state = _spec_round(params, cache, state, enc_out, drafts,
+                               cfg=cfg, max_len=max_len, spec_k=spec_k,
+                               with_filter=with_filter,
+                               with_sample=with_sample, replay=replay)
+    return cache, state, draft_cache
+
+
+# slot recycling for the draft cache (same batch-shaped masked reset the
+# scheduler applies to the target cache at admission)
+_reset_draft_rows = jax.jit(T.reset_cache_rows)
+
+
 class Engine:
     """Slot-based continuous-batching engine over ``serve_step``.
 
@@ -187,6 +267,19 @@ class Engine:
         same per-row distribution but different noise (streaming
         Gumbel-max vs inverse-CDF). Default ``"dense"`` here; the serve
         CLI defaults to ``"fused"``.
+    spec_k: speculative draft length (0 = off). Each engine step runs
+        ONE draft/verify round (``repro.serve.speculative``) emitting up
+        to ``spec_k + 1`` tokens per decode row: drafts are verified by
+        a single multi-token forward scored with one fused
+        projection->sample sweep — still logit-free, still one host
+        sync per step. Greedy speculative output is token-identical to
+        plain greedy; sampled rows draw from the same per-row
+        distribution (acceptance ratio test + residual bonus sampling).
+        Requires ``decode_kernel="fused"``.
+    draft_cfg / draft_params: optional draft transformer (any config
+        sharing the vocab) proposing the ``spec_k`` tokens; without
+        one, the zero-cost n-gram/prompt-lookup drafter runs. The
+        engine owns the draft cache and recycles its rows at admission.
     """
 
     def __init__(self, cfg, params, *, max_len: int = 512,
@@ -196,11 +289,35 @@ class Engine:
                  tracer: Tr.Tracer | None = None,
                  kv_page_size: int | None = None,
                  kv_pages: int | None = None,
-                 decode_kernel: str = "dense"):
+                 decode_kernel: str = "dense",
+                 spec_k: int = 0, draft_cfg=None, draft_params=None):
         if decode_kernel not in ("fused", "dense"):
             raise ValueError(
                 f"decode_kernel must be 'fused' or 'dense', "
                 f"got {decode_kernel!r}")
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        if spec_k > 0 and decode_kernel != "fused":
+            raise ValueError(
+                "speculative decoding (spec_k > 0) verifies with the "
+                "fused projection->sample sweep; it requires "
+                "decode_kernel='fused'")
+        if (draft_cfg is None) != (draft_params is None):
+            raise ValueError(
+                "draft_cfg and draft_params must be given together")
+        if draft_cfg is not None and spec_k == 0:
+            raise ValueError("a draft model requires spec_k > 0")
+        if draft_cfg is not None and draft_cfg.vocab_size != cfg.vocab_size:
+            raise ValueError(
+                f"draft model must share the vocab: draft vocab_size "
+                f"{draft_cfg.vocab_size} != target {cfg.vocab_size}")
+        if spec_k > 0 and cfg.sliding_window is not None and \
+                "swa" in cfg.pattern_for(cfg.num_layers) and \
+                spec_k + 1 > cfg.sliding_window:
+            raise ValueError(
+                f"spec_k + 1 = {spec_k + 1} exceeds the sliding window "
+                f"({cfg.sliding_window}): a verification window must fit "
+                f"the SWA ring")
         if enc_out is not None and enc_out.shape[0] != batch_size:
             raise ValueError(
                 f"enc_out has {enc_out.shape[0]} rows but the engine has "
@@ -238,11 +355,27 @@ class Engine:
         self.scheduler = sched.Scheduler(
             batch_size, max_prompt_len or max_len, max_new_cap or max_len,
             cfg.vocab_size, metrics=self.metrics, tracer=self.tracer,
-            pool=self.pool, decode_kernel=decode_kernel)
+            pool=self.pool, decode_kernel=decode_kernel, spec_k=spec_k)
         self.state = sched.init_state(batch_size,
                                       self.scheduler.max_prompt_len,
-                                      self.scheduler.max_new_cap)
+                                      self.scheduler.max_new_cap,
+                                      spec_k=spec_k)
         self.cache = T.init_cache(cfg, batch_size, max_len, **paged_kw)
+        # speculative decoding (spec_k > 0): drafter state. The draft
+        # model keeps its own dense cache, recycled per slot at admission
+        # just like the target cache; without one the n-gram drafter runs
+        # stateless. _spec_prev mirrors the device-side telemetry
+        # counters so _sync can emit host metrics as deltas.
+        self.spec_k = int(spec_k)
+        self.draft_cfg = draft_cfg
+        self.draft_params = draft_params
+        self.draft_cache = None
+        if spec_k > 0 and draft_cfg is not None:
+            self.draft_cache = T.init_cache(draft_cfg, batch_size,
+                                            max_len)
+        self._replay = SP.needs_replay(cfg) if spec_k > 0 else False
+        self._spec_prev = ([0] * (spec_k + 2), 0, 0)
+        self._spec_buckets = tuple(i + 0.5 for i in range(spec_k + 2))
         self.step_count = 0
         # host mirror of each slot's unconsumed prompt tokens; prefill
         # progress is host-deterministic (stopping can only hit generated
@@ -328,6 +461,11 @@ class Engine:
             req.admit_step = self.step_count
             self.tracer.annotate(req.rid, admit_step=self.step_count,
                                  reused_tokens=req.reused_tokens)
+        if rows and self.draft_cache is not None:
+            mask = np.zeros((self.batch_size,), bool)
+            mask[list(rows)] = True
+            self.draft_cache = _reset_draft_rows(self.draft_cache,
+                                                 jnp.asarray(mask))
         prefill_toks = 0
         fused = self.decode_kernel == "fused"
         # with_filter is a static jit arg picked from host-side request
@@ -345,7 +483,27 @@ class Engine:
             r is not None and r.sampling.temperature > 0.0
             for r in self.scheduler.slots)
         for _ in range(substeps):
-            if self.prefill_chunk > 1 and any(
+            if self.spec_k:
+                # the speculative round subsumes chunked prefill
+                # (prefilling rows use the window as a prompt chunk), so
+                # spec mode runs one jit flavor per drafter, always
+                if self.draft_cache is not None:
+                    (self.cache, self.state,
+                     self.draft_cache) = _engine_step_spec_draft(
+                        self.params, self.cache, self.state,
+                        self.draft_params, self.draft_cache, self.enc_out,
+                        cfg=self.cfg, draft_cfg=self.draft_cfg,
+                        max_len=self.max_len, spec_k=self.spec_k,
+                        with_filter=wf, with_sample=ws,
+                        replay=self._replay)
+                else:
+                    self.cache, self.state = _engine_step_spec(
+                        self.params, self.cache, self.state, self.enc_out,
+                        cfg=self.cfg, max_len=self.max_len,
+                        spec_k=self.spec_k, with_filter=wf,
+                        with_sample=ws, replay=self._replay)
+                used = self.spec_k + 1
+            elif self.prefill_chunk > 1 and any(
                     left > 1 for left in self._prefill_left):
                 if fused:
                     self.cache, self.state = _engine_prefill_step_fused(
@@ -399,16 +557,20 @@ class Engine:
         if mets.enabled:
             mets.counter("serve_engine_steps_total").inc(substeps)
             mets.counter("serve_prefill_tokens_total").inc(prefill_toks)
+            wall_labels = {"decode_kernel": self.decode_kernel}
+            if self.spec_k:
+                wall_labels["spec_k"] = self.spec_k
             mets.histogram(
-                "serve_step_wall_seconds",
-                {"decode_kernel": self.decode_kernel}).observe(
+                "serve_step_wall_seconds", wall_labels).observe(
                 (t_end - t_start) / substeps)
             if fused:
                 # HBM bytes the fused path did NOT move this step: the
                 # (B, V_pad) f32 logit write/read the dense path pays,
                 # minus the fused outputs (token + logprob = 8 B/row).
-                # Pure host arithmetic — no device sync.
-                avoided = self.batch_size * (
+                # A speculative step sweeps every window position, so
+                # the avoided buffer scales by spec_k + 1. Pure host
+                # arithmetic — no device sync.
+                avoided = self.batch_size * (self.spec_k + 1) * (
                     self.cfg.padded_vocab_size * 4 - 8)
                 mets.gauge("serve_decode_hbm_bytes_avoided").set(avoided)
                 mets.counter(
@@ -447,9 +609,19 @@ class Engine:
     def _sync(self):
         """The single per-step host sync: pull the status vectors, then
         retire finished rows (attributing each one's TTFT from the device
-        step index its first token was generated at)."""
-        done, active = jax.device_get(
-            (self.state["done"], self.state["active"]))
+        step index its first token was generated at).
+
+        With speculation on, the same ONE transfer also carries the
+        device-side acceptance telemetry (a (spec_k+2,) histogram and
+        two scalars) — spec metrics add zero extra device_gets."""
+        pulls = (self.state["done"], self.state["active"])
+        if self.spec_k:
+            pulls += (self.state["spec_hist"], self.state["spec_drafted"],
+                      self.state["spec_emitted"])
+        got = jax.device_get(pulls)
+        done, active = got[0], got[1]
+        if self.spec_k:
+            self._record_spec(got[2], got[3], got[4])
         rows = self.scheduler.finished_rows(done, active)
         if not rows:
             return []
@@ -467,6 +639,33 @@ class Engine:
         self.state, comps = self.scheduler.retire(
             self.state, rows, out_host, n_host, fin_host, lp_host)
         return comps
+
+    def _record_spec(self, hist, drafted, emitted):
+        """Emit speculative acceptance metrics as deltas against the
+        host mirror of the device-side running totals (pure host
+        arithmetic over values the one per-step sync already pulled)."""
+        mets = self.metrics
+        prev_hist, prev_drafted, prev_emitted = self._spec_prev
+        hist = [int(x) for x in hist]
+        drafted, emitted = int(drafted), int(emitted)
+        if mets.enabled:
+            mets.counter("serve_spec_draft_tokens_total").inc(
+                drafted - prev_drafted)
+            mets.counter("serve_spec_emitted_tokens_total").inc(
+                emitted - prev_emitted)
+            h = mets.histogram("serve_spec_accepted_len",
+                               {"spec_k": self.spec_k},
+                               buckets=self._spec_buckets)
+            for n, (c, pc) in enumerate(zip(hist, prev_hist)):
+                for _ in range(c - pc):
+                    h.observe(float(n))
+            rounds = sum(hist)
+            if drafted > 0:
+                # accepted drafts = emitted tokens minus the one
+                # boundary/bonus token every decode round emits
+                mets.gauge("serve_spec_accept_rate").set(
+                    (emitted - rounds) / drafted)
+        self._spec_prev = (hist, drafted, emitted)
 
     def run(self, substeps: int = 1, max_steps: int | None = None):
         """Drive ``step()`` until all submitted work is finished; returns

@@ -44,6 +44,15 @@ Publication timing: a full prompt page becomes registry-visible only once
 the engine's host-side prefill mirror shows the row has consumed past it.
 Device program order then guarantees the page's K/V writes were enqueued
 before any later step that could read them through a reused mapping.
+
+Speculative decoding never reaches this module: a verify round may write
+K/V for draft tokens that end up rejected, but those positions lie inside
+the row's already-reserved page span and past its committed length — the
+next round's forward overwrites them before anything can read them (see
+``serve/speculative.py``, "Rollback semantics"). Host page tables,
+refcounts and the prefix registry are invariant across a speculative
+round, fully-rejected or not (pinned by
+``tests/test_speculative.py::test_spec_kvpool_rollback_invariants``).
 """
 
 from __future__ import annotations

@@ -178,3 +178,34 @@ def sample_tokens_fused(hidden, C, keys, temperature, top_k, top_p, *,
         softcap=softcap, with_filter=with_filter,
         with_sample=with_sample, use_kernel=use_kernel)
     return tok, lp
+
+
+def verify_tokens_fused(hidden, C, keys, temperature, top_k, top_p, *,
+                        labels, exclude, vocab: int,
+                        softcap: float | None = None,
+                        with_filter: bool = True,
+                        with_sample: bool = True,
+                        use_kernel: bool | None = None):
+    """Speculative-verification sweep (DESIGN.md §12): the fused
+    projection->sample pass of :func:`sample_tokens_fused` extended with
+    the two per-row extras the draft/verify loop needs, still logit-free:
+
+      * ``labels (B,) int32`` — the draft token proposed at each
+        position; the sweep additionally accumulates its probability
+        mass online and returns ``label_lp``, the target log-probability
+        of the draft under the row's sampling distribution (raw softmax
+        for greedy rows, renormalized kept-set for filtered rows) —
+        exactly the acceptance-test numerator, with no ``(B, V)`` gather;
+      * ``exclude (B,) int32`` (-1 = none) — a token masked out of the
+        *sampled* pick only (greedy argmax and the reported LSEs are
+        untouched), which is how the rejection bonus draws from the
+        residual ``max(p - q, 0)`` support for greedy drafters: the
+        rejected draft token can never be re-proposed.
+
+    Returns ``(tokens (B,), logprobs (B,), label_lp (B,))``.
+    """
+    return _decode_sample(
+        hidden, C, keys, temperature, top_k, top_p, vocab=vocab,
+        softcap=softcap, with_filter=with_filter,
+        with_sample=with_sample, use_kernel=use_kernel,
+        labels=labels, exclude=exclude)

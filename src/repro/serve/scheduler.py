@@ -73,10 +73,21 @@ class Completion:
     logprobs: List[float] = dataclasses.field(default_factory=list)
 
 
-def init_state(batch_size: int, max_prompt_len: int, max_new_cap: int):
-    """Fresh slot-state pytree: everything (B, ...), everything on device."""
+def init_state(batch_size: int, max_prompt_len: int, max_new_cap: int,
+               spec_k: int = 0):
+    """Fresh slot-state pytree: everything (B, ...), everything on device.
+
+    spec_k > 0 (speculative decoding, DESIGN.md §12) adds the draft-loop
+    state: ``spec_src``/``spec_n`` record the window each row actually
+    consumed last step (the draft model's catch-up input), and
+    ``spec_hist``/``spec_drafted``/``spec_emitted`` accumulate acceptance
+    telemetry device-side so the engine's single per-step sync can carry
+    it to the metrics registry with zero extra transfers. The last three
+    are global (not per-row) and — like ``t`` — must survive admission,
+    so the scheduler template excludes them.
+    """
     b = batch_size
-    return {
+    state = {
         "tok": jnp.zeros((b, 1), jnp.int32),
         "cache_index": jnp.zeros((b,), jnp.int32),
         "active": jnp.zeros((b,), bool),
@@ -103,6 +114,19 @@ def init_state(batch_size: int, max_prompt_len: int, max_new_cap: int):
         # must never reset it (the scheduler template excludes it).
         "t": jnp.zeros((), jnp.int32),
     }
+    if spec_k > 0:
+        s = spec_k + 1
+        # window of tokens this row consumed last spec round (catch-up
+        # input for the draft model) and how many of them were committed
+        state["spec_src"] = jnp.zeros((b, s), jnp.int32)
+        state["spec_n"] = jnp.zeros((b,), jnp.int32)
+        # global acceptance telemetry: spec_hist[n] counts decode rounds
+        # that emitted n tokens (n in 0..spec_k+1); drafted/emitted are
+        # running token totals. Scalar/global leaves, template-excluded.
+        state["spec_hist"] = jnp.zeros((s + 1,), jnp.int32)
+        state["spec_drafted"] = jnp.zeros((), jnp.int32)
+        state["spec_emitted"] = jnp.zeros((), jnp.int32)
+    return state
 
 
 def sample_keys(state, n_tok=None, chunk: int = 1):
@@ -121,14 +145,7 @@ def sample_keys(state, n_tok=None, chunk: int = 1):
     if chunk == 1:
         rng_next = jax.vmap(lambda k: jax.random.split(k, 2))(state["rng"])
         return rng_next[:, 1], rng_next[:, 0]
-    carry, keys, carries = state["rng"], [], [state["rng"]]
-    for _ in range(chunk):          # static unroll: chunk is a jit const
-        nxt = jax.vmap(lambda k: jax.random.split(k, 2))(carry)
-        keys.append(nxt[:, 1])
-        carry = nxt[:, 0]
-        carries.append(carry)
-    keys = jnp.stack(keys, 1)                       # (B, chunk, 2)
-    carries = jnp.stack(carries, 1)                 # (B, chunk+1, 2)
+    keys, carries = sample_keys_all(state, chunk)
     sel = jnp.clip(n_tok - 1, 0, chunk - 1)
     sample_key = jnp.take_along_axis(
         keys, sel[:, None, None], axis=1)[:, 0]
@@ -136,6 +153,25 @@ def sample_keys(state, n_tok=None, chunk: int = 1):
         carries, jnp.clip(n_tok, 0, chunk)[:, None, None],
         axis=1)[:, 0]
     return sample_key, rng_carry
+
+
+def sample_keys_all(state, chunk: int):
+    """All ``chunk`` per-position sample keys plus every PRNG carry.
+
+    ``keys[:, j]`` is the key the ``(j+1)``-th one-token step would have
+    used and ``carries[:, n]`` is the stream after ``n`` splits, so a
+    speculative round that consumes ``n`` tokens picks ``carries[:, n]``
+    as its carry and each verified position ``j`` samples with
+    ``keys[:, j]`` — the same discipline chunked prefill established.
+    Returns ``(keys (B, chunk, 2), carries (B, chunk+1, 2))``.
+    """
+    carry, keys, carries = state["rng"], [], [state["rng"]]
+    for _ in range(chunk):          # static unroll: chunk is a jit const
+        nxt = jax.vmap(lambda k: jax.random.split(k, 2))(carry)
+        keys.append(nxt[:, 1])
+        carry = nxt[:, 0]
+        carries.append(carry)
+    return jnp.stack(keys, 1), jnp.stack(carries, 1)
 
 
 def advance_slots(state, logits=None, *, max_len: int, n_tok=None,
@@ -278,11 +314,15 @@ class Scheduler:
                  max_new_cap: int, vocab_size: int,
                  metrics: M.Registry | None = None,
                  tracer: Tr.Tracer | None = None,
-                 pool=None, decode_kernel: str = "dense"):
+                 pool=None, decode_kernel: str = "dense",
+                 spec_k: int = 0):
         self.batch_size = batch_size
         # which decode path feeds this scheduler ("fused" | "dense") —
         # only a metrics label, so the two paths separate in traces
         self.decode_kernel = decode_kernel
+        # speculative draft length (0 = off) — sizes the spec_* state
+        # fields and labels the latency histograms
+        self.spec_k = spec_k
         self.max_prompt_len = max_prompt_len
         self.max_new_cap = max_new_cap
         self.vocab_size = vocab_size
@@ -305,8 +345,12 @@ class Scheduler:
         # rewind (it is the clock gen_step/TTFT attribution is built on)
         self._template = jax.tree.map(
             np.asarray, init_state(batch_size, max_prompt_len,
-                                   max_new_cap))
+                                   max_new_cap, spec_k=spec_k))
         self._template.pop("t")
+        # global (non-(B, ...)) speculative telemetry must survive slot
+        # recycling too — admission's masked update is per-row only
+        for k in ("spec_hist", "spec_drafted", "spec_emitted"):
+            self._template.pop(k, None)
 
     # -- queue ---------------------------------------------------------
 
@@ -478,8 +522,10 @@ class Scheduler:
         # ITL/step-wall carry a decode_kernel label so the fused and
         # dense paths separate in traces; TTFT stays unlabeled (it is
         # admission-dominated, not decode-path-dominated)
-        itl_h = mets.histogram("serve_itl_seconds",
-                               {"decode_kernel": self.decode_kernel})
+        itl_labels = {"decode_kernel": self.decode_kernel}
+        if self.spec_k:
+            itl_labels["spec_k"] = self.spec_k
+        itl_h = mets.histogram("serve_itl_seconds", itl_labels)
         gen_c = mets.counter("serve_generated_tokens_total")
         for i in rows:
             req = self.slots[i]

@@ -1,0 +1,388 @@
+"""Speculative decoding with logit-free CCE verification (DESIGN.md §12).
+
+One speculative round per engine step: a drafter proposes up to K tokens
+per decode row, the target model runs the window ``[t0, d1 .. dK]``
+through ONE multi-token forward (``transformer.serve_prefill_spec`` —
+the chunked-prefill machinery every mixer family already supports), and
+every position is scored by ONE fused projection->sample sweep
+(``kernels.decode_sample`` via ``sampling.verify_tokens_fused``). The
+sweep returns, per position, the greedy/sampled pick, its logprob, and
+the target logprob of the *next* window token (the draft) — so the
+standard speculative-sampling ratio test runs without ever
+materializing ``(B, K, V)`` logits, and a rejection's bonus token is
+drawn from the residual ``max(p - q, 0)`` by the same online-LSE +
+Gumbel machinery with the rejected draft excluded from the pick.
+
+Everything in this module is a pure jittable function: the engine calls
+these inside its single per-step jit, the per-row accepted lengths are
+just another ragged ``advance_slots``-style advance (PRNG pre-advance
+per consumed token, as chunked prefill established), and the one host
+sync per step is untouched — no ``jax.device_get``, no
+``block_until_ready``, nothing host-side lives here.
+
+Drafters
+--------
+
+* ``ngram_drafts`` — zero-cost prompt-lookup: find the most recent
+  earlier occurrence of the row's current token in its (prompt + output)
+  history and propose the K tokens that followed it. Stateless,
+  device-side, no extra parameters.
+* a small draft transformer (any config sharing the vocab) — the engine
+  owns its cache; ``draft_catchup`` folds the window each row consumed
+  last round into the draft cache (masked per-row commit via
+  ``transformer.select_cache_rows``) and ``draft_propose`` rolls K
+  greedy one-token steps on a throwaway fork, so the committed draft
+  cache never contains an un-consumed position (recurrent states are
+  write-once per position).
+
+Rollback semantics
+------------------
+
+Rejected draft tokens' KV writes never need undoing for pure-attention
+caches: position ``j`` of the next round's window only ever attends
+keys at positions ``<= cache_index + j``, all of which are rewritten by
+that round's own forward or were committed earlier — stale tail writes
+past the committed length are dead by construction, paged or dense, and
+the kvpool's host-side page tables and refcounts are untouched by a
+fully-rejected round. Recurrent (RG-LRU, RWKV-6) and SWA-ring caches do
+carry state across the rejected tail, so the engine replays the window
+prefix: a second ``lm_hidden`` pass over the *original* cache with
+``valid_len = commit_len``, i.e. the masked re-write the ISSUE calls
+for (see ``needs_replay``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.serve import sampling as S
+from repro.serve.scheduler import NO_EOS
+
+# fold_in salt separating the acceptance-test uniform from the sample
+# key it derives from (the key itself already went into the Gumbel hash)
+_ACCEPT_SALT = 0x5BEC
+
+# cache kinds whose state at position i depends on writes at positions
+# < i (ring pointers / recurrent accumulators): a rejected tail corrupts
+# them, so the engine must replay the committed prefix on the original
+# cache. Pure "attn" caches are position-addressed and self-healing.
+_REPLAY_KINDS = frozenset({"swa", "rglru", "rwkv6"})
+
+
+def needs_replay(cfg) -> bool:
+    """Static (host-side, trace-time) arch test: does a speculative
+    round need the commit-by-replay pass (see module docstring)?"""
+    return bool(set(cfg.pattern_for(cfg.num_layers)) & _REPLAY_KINDS)
+
+
+def ngram_drafts(state, spec_k: int):
+    """Prompt-lookup drafter: (B, spec_k) int32 proposals, device-side.
+
+    Per row, the generated history is ``prompt ++ out_buf[:n_out]`` and
+    the current token ``state["tok"]`` is its last element (the decode
+    invariant: ``tok`` is the most recently emitted token). Find the
+    most recent *earlier* occurrence of that token and propose the
+    ``spec_k`` tokens that followed it; rows with no match propose
+    token 0 (they will simply be rejected by verification).
+    """
+    b, p_cap = state["prompt_buf"].shape
+    m = state["out_buf"].shape[1]
+    L = p_cap + m
+    j = jnp.arange(L)[None, :]                              # (1, L)
+    plen = state["prompt_len"][:, None]                     # (B, 1)
+    seq = jnp.where(
+        j < plen,
+        jnp.take_along_axis(
+            state["prompt_buf"], jnp.clip(j, 0, p_cap - 1), axis=1),
+        jnp.take_along_axis(
+            state["out_buf"], jnp.clip(j - plen, 0, m - 1), axis=1))
+    last = state["prompt_len"] + state["n_out"] - 1         # (B,)
+    tok = state["tok"]                                      # (B, 1)
+    hit = (j < last[:, None]) & (seq == tok)
+    match = jnp.max(jnp.where(hit, j, -1), axis=1)          # (B,)
+    off = jnp.arange(spec_k)[None, :]                       # (1, K)
+    # continuation positions past the known history clamp to the last
+    # known token (copying unknown future would propose buffer zeros);
+    # a wrong guess just gets rejected by verification
+    src = jnp.clip(jnp.minimum(match[:, None] + 1 + off, last[:, None]),
+                   0, L - 1)
+    drafts = jnp.take_along_axis(seq, src, axis=1)
+    return jnp.where(match[:, None] >= 0, drafts, 0).astype(jnp.int32)
+
+
+def build_windows(state, drafts, *, spec_k: int, max_len: int):
+    """Assemble the per-row verification window and its shape metadata.
+
+    Returns ``(window (B, S), n_tok (B,), in_prompt (B,), k_b (B,))``
+    with ``S = spec_k + 1``:
+
+    * prefill rows consume the next ``n_tok = min(S, prompt_len - p)``
+      prompt tokens (speculation subsumes chunked prefill — one jit);
+    * decode rows consume ``[tok, d1 .. d_{k_b}]`` where
+      ``k_b = min(spec_k, rem - 1, max_len - 1 - p)`` caps the offered
+      drafts so every emitted token stays inside the row's ``max_new``
+      budget and its reserved cache span (``rem = max_new - n_out``);
+      ``k_b = 0`` degenerates to the plain single-token step;
+    * dead rows consume their frozen ``tok`` once, like the plain step.
+    """
+    s = spec_k + 1
+    p = state["cache_index"]
+    live = state["active"] & ~state["done"]
+    in_prompt = live & (p < state["prompt_len"])
+    p_cap = state["prompt_buf"].shape[1]
+
+    idx = jnp.clip(p[:, None] + jnp.arange(s)[None, :], 0, p_cap - 1)
+    ptoks = jnp.take_along_axis(state["prompt_buf"], idx, axis=1)
+    dwindow = jnp.concatenate(
+        [state["tok"], drafts[:, : s - 1]], axis=1)
+    window = jnp.where(in_prompt[:, None], ptoks, dwindow)
+
+    rem = state["max_new"] - state["n_out"]
+    k_b = jnp.minimum(jnp.asarray(spec_k, jnp.int32),
+                      jnp.minimum(rem - 1, max_len - 1 - p))
+    k_b = jnp.where(live & ~in_prompt, jnp.clip(k_b, 0, spec_k), 0)
+    n_tok = jnp.where(
+        in_prompt,
+        jnp.minimum(jnp.asarray(s, jnp.int32), state["prompt_len"] - p),
+        1 + k_b)
+    n_tok = jnp.where(live, n_tok, 1).astype(jnp.int32)
+    return window.astype(jnp.int32), n_tok, in_prompt, k_b
+
+
+def verify_labels(window, n_tok):
+    """Per-position ``(labels, exclude)`` for the fused sweep.
+
+    Position ``j`` predicts window token ``j + 1``: its label is the
+    draft to be ratio-tested there, and — only while a successor
+    actually exists (``j < n_tok - 1``) — that same token is excluded
+    from the position's *sampled* pick so a rejection bonus draws from
+    the residual support. The last valid position (prefill boundary
+    sample, or the all-accepted bonus) keeps the full support
+    (``exclude = -1``).
+    """
+    s = window.shape[1]
+    nxt = jnp.roll(window, -1, axis=1)          # nxt[:, j] = window[:, j+1]
+    j = jnp.arange(s)[None, :]
+    exclude = jnp.where(j < (n_tok - 1)[:, None], nxt, -1)
+    return nxt.astype(jnp.int32), exclude.astype(jnp.int32)
+
+
+def run_verify_sweep(params, cfg, hidden, window, n_tok, keys, state, *,
+                     with_filter: bool, with_sample: bool):
+    """Score every window position with ONE fused decode sweep.
+
+    ``hidden``: (B, S, D) from ``serve_prefill_spec``; ``keys``:
+    (B, S, 2) per-position sample keys (``scheduler.sample_keys_all`` —
+    position ``j`` uses the key the ``(j+1)``-th one-token step would
+    have, so the prefill boundary sample bit-matches the plain engine).
+    Returns ``(tok, lp, label_lp)`` each (B, S).
+    """
+    b, s, d = hidden.shape
+    labels, exclude = verify_labels(window, n_tok)
+    rep = lambda v: jnp.repeat(v, s)            # row params -> positions
+    tok, lp, label_lp = S.verify_tokens_fused(
+        hidden.reshape(b * s, d),
+        T.classifier_matrix(params, cfg),
+        keys.reshape(b * s, 2),
+        rep(state["temperature"]), rep(state["top_k"]),
+        rep(state["top_p"]),
+        labels=labels.reshape(b * s), exclude=exclude.reshape(b * s),
+        vocab=cfg.vocab_size, softcap=cfg.logit_softcap,
+        with_filter=with_filter, with_sample=with_sample)
+    return (tok.reshape(b, s).astype(jnp.int32), lp.reshape(b, s),
+            label_lp.reshape(b, s))
+
+
+def accept_and_advance(state, window, n_tok, in_prompt, k_b, tok_s, lp_s,
+                       label_lp, keys, carries, *, spec_k: int,
+                       max_len: int):
+    """The ragged multi-token slot-state transition.
+
+    Mirrors ``scheduler.advance_slots`` exactly at ``k_b = 0`` and
+    extends it to per-row accepted lengths: greedy rows accept draft
+    ``d_{j+1}`` iff it equals position ``j``'s argmax (exact-match);
+    sampled rows accept iff ``u_j < p(d_{j+1})`` (the ratio test with a
+    deterministic drafter, ``q = 1``), with ``u_j`` derived from the
+    position's own sample key. The emitted stream is the accepted
+    prefix plus the bonus pick at the first rejection (or the boundary
+    sample for prefill rows), truncated at EOS; stop flags, ``finish``
+    priority, ``gen_step``/TTFT attribution, PRNG advance-per-consumed-
+    token and the frozen-when-done discipline all match the plain path.
+
+    Returns ``(new_state, commit_len, advanced)``: ``commit_len (B,)``
+    in [1, S] is how many window positions are now committed cache
+    content (the replay ``valid_len``), ``advanced (B,)`` marks rows
+    whose cache_index moved (the draft catch-up set).
+    """
+    b, m = state["out_buf"].shape
+    s = spec_k + 1
+    rows = jnp.arange(b)
+    j = jnp.arange(s)[None, :]
+    live = state["active"] & ~state["done"]
+    p = state["cache_index"]
+
+    # -- acceptance: leading run of accepted drafts ---------------------
+    u = jax.vmap(
+        lambda k: jax.random.uniform(jax.random.fold_in(k, _ACCEPT_SALT))
+    )(keys.reshape(b * s, 2)).reshape(b, s)
+    nxt = jnp.roll(window, -1, axis=1)          # draft tested at pos j
+    ok_greedy = tok_s == nxt
+    ok_sampled = u < jnp.exp(label_lp)
+    greedy_row = state["temperature"] <= 0.0
+    ok = jnp.where(greedy_row[:, None], ok_greedy, ok_sampled)
+    ok = ok & (j < k_b[:, None])
+    lead = jnp.cumprod(ok.astype(jnp.int32), axis=1)
+    a = jnp.sum(lead, axis=1)                   # accepted drafts, <= k_b
+
+    # -- emitted stream -------------------------------------------------
+    # decode rows: accepted drafts then the bonus pick at position a;
+    # prefill rows: the boundary sample (position n_tok - 1), if the
+    # prompt is exhausted this step
+    em_tok = jnp.where(j < a[:, None], nxt, tok_s)
+    em_lp = jnp.where(j < a[:, None], label_lp, lp_s)
+    bsel = (n_tok - 1)[:, None]
+    bt = jnp.take_along_axis(tok_s, bsel, axis=1)
+    blp = jnp.take_along_axis(lp_s, bsel, axis=1)
+    stream_tok = jnp.where(in_prompt[:, None],
+                           jnp.broadcast_to(bt, (b, s)), em_tok)
+    stream_lp = jnp.where(in_prompt[:, None],
+                          jnp.broadcast_to(blp, (b, s)), em_lp)
+    crossed = in_prompt & (p + n_tok >= state["prompt_len"])
+    raw_cnt = jnp.where(
+        live, jnp.where(in_prompt, jnp.where(crossed, 1, 0), a + 1), 0)
+
+    # EOS truncates the stream sequentially: tokens past the first EOS
+    # were never emitted (and their window positions never consumed)
+    has_eos = state["eos"] != NO_EOS
+    is_eos = has_eos[:, None] & (stream_tok == state["eos"][:, None])
+    in_stream = j < raw_cnt[:, None]
+    eos_pos = jnp.min(jnp.where(is_eos & in_stream, j, s), axis=1)
+    hit_eos = eos_pos < raw_cnt
+    n_emit = jnp.where(hit_eos, eos_pos + 1, raw_cnt)
+
+    # -- record ---------------------------------------------------------
+    slots = state["n_out"][:, None] + j
+    wslot = jnp.where(j < n_emit[:, None], slots, m)    # m = dropped
+    out_buf = state["out_buf"].at[rows[:, None], wslot].set(
+        stream_tok, mode="drop")
+    logprob_buf = state["logprob_buf"].at[rows[:, None], wslot].set(
+        stream_lp, mode="drop")
+    n_out = state["n_out"] + n_emit
+    gen = n_emit > 0
+
+    # -- stop flags (plain-path priority: eos > length > cache) ---------
+    # consumed positions this round: full prompt chunk for prefill rows,
+    # one per emitted token for decode rows (EOS stops consumption), one
+    # for dead rows (the plain step's unconditional PRNG tick)
+    n_cons = jnp.where(live, jnp.where(in_prompt, n_tok, n_emit), 1)
+    nxt_pos = p + n_cons
+    hit_len = gen & (n_out >= state["max_new"])
+    hit_cap = live & (nxt_pos >= max_len)
+    done = state["done"] | hit_eos | hit_len | hit_cap
+
+    # -- advance --------------------------------------------------------
+    advance = live & ~done
+    p_cap = state["prompt_buf"].shape[1]
+    prompt_next = jnp.take_along_axis(
+        state["prompt_buf"], jnp.clip(nxt_pos, 0, p_cap - 1)[:, None],
+        axis=1)[:, 0]
+    last_emit = jnp.take_along_axis(
+        stream_tok, jnp.clip(n_emit - 1, 0, s - 1)[:, None], axis=1)[:, 0]
+    next_tok = jnp.where(nxt_pos < state["prompt_len"], prompt_next,
+                         last_emit)
+    rng = jnp.take_along_axis(
+        carries, jnp.clip(n_cons, 0, s)[:, None, None], axis=1)[:, 0]
+
+    # committed window prefix (replay valid_len, in [1, S]) and the
+    # catch-up record for the draft model: rows that advanced consumed
+    # n_cons window tokens; everyone else contributes nothing
+    commit_len = jnp.clip(jnp.where(live, n_cons, 1), 1, s)
+    spec_n = jnp.where(advance, n_cons, 0).astype(jnp.int32)
+
+    new_state = dict(
+        state,
+        tok=jnp.where(advance[:, None], next_tok[:, None], state["tok"]),
+        cache_index=jnp.where(advance, nxt_pos, p),
+        done=done,
+        out_buf=out_buf,
+        logprob_buf=logprob_buf,
+        n_out=n_out,
+        rng=rng,
+        finish=jnp.where(
+            state["finish"] > 0, state["finish"],
+            jnp.where(hit_eos, 1, jnp.where(hit_len, 2,
+                      jnp.where(hit_cap, 3, 0)))),
+        gen_step=jnp.where(gen & (state["gen_step"] < 0), state["t"],
+                           state["gen_step"]),
+        t=state["t"] + 1,
+    )
+    if "spec_src" in state:
+        dec = live & ~in_prompt
+        hist_idx = jnp.where(dec, jnp.clip(n_emit, 0, s), 0)
+        new_state["spec_src"] = window
+        new_state["spec_n"] = spec_n
+        new_state["spec_hist"] = state["spec_hist"].at[hist_idx].add(
+            dec.astype(jnp.int32))
+        new_state["spec_drafted"] = (
+            state["spec_drafted"] + jnp.sum(jnp.where(dec, k_b, 0)))
+        new_state["spec_emitted"] = (
+            state["spec_emitted"] + jnp.sum(jnp.where(dec, n_emit, 0)))
+    return new_state, commit_len, advance
+
+
+# -- draft-transformer drafter ----------------------------------------
+
+
+def draft_catchup(draft_params, draft_cfg, draft_cache, state):
+    """Fold last round's consumed window into the draft cache.
+
+    ``state["spec_src"]``/``state["spec_n"]`` record what each row
+    actually committed; the catch-up forward ingests exactly that
+    prefix at the positions it occupied (``cache_index - spec_n ..
+    cache_index - 1``) and ``select_cache_rows`` commits it only for
+    rows that advanced — so the draft cache tracks the target cache
+    position-for-position, one round behind, and never contains the
+    current un-consumed token.
+    """
+    ci0 = state["cache_index"] - state["spec_n"]
+    vl = jnp.maximum(state["spec_n"], 1)
+    _, new_cache, _ = T.lm_hidden(
+        draft_params, draft_cfg, {"tokens": state["spec_src"]},
+        cache=draft_cache, cache_index=ci0, valid_len=vl)
+    return T.select_cache_rows(state["spec_n"] > 0, new_cache,
+                               draft_cache)
+
+
+def draft_propose(draft_params, draft_cfg, draft_cache, state,
+                  spec_k: int):
+    """K greedy one-token draft steps on a throwaway cache fork.
+
+    The first step consumes the row's current token at its live
+    position; each subsequent step consumes the previous proposal. The
+    fork is discarded — the committed draft cache is only ever advanced
+    by :func:`draft_catchup` over tokens the target actually consumed.
+    Returns drafts (B, spec_k) int32.
+    """
+    b = state["tok"].shape[0]
+    fork = draft_cache
+    tok = state["tok"]
+    ci = state["cache_index"]
+    # greedy via the fused projection->sample path: the draft's (B, V)
+    # logits never materialize either (keys are unused when every row
+    # routes greedy, so the row PRNG state is a harmless placeholder)
+    sample = (state["rng"], jnp.zeros((b,), jnp.float32),
+              jnp.zeros((b,), jnp.int32), jnp.ones((b,), jnp.float32))
+    drafts = []
+    for step in range(spec_k):      # static unroll: spec_k is a jit const
+        (nxt, _), fork = T.serve_step(
+            draft_params, draft_cfg, fork, tok, ci + step,
+            return_logits=False, sample=sample, with_filter=False,
+            with_sample=False)
+        nxt = nxt.astype(jnp.int32)
+        drafts.append(nxt)
+        tok = nxt[:, None]
+    if not drafts:
+        return jnp.zeros((b, 0), jnp.int32)
+    return jnp.stack(drafts, axis=1)
